@@ -1,0 +1,29 @@
+"""Fig. 7: absolute bandwidth loss vs the Oracle, by request size.
+
+Paper claim: Topo's loss peaks near 50 GB/s (H100) / 16 GB/s (Het-4Mix) on
+requests of 8..20 GPUs; BandPilot stays near zero.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import repro.core as core
+from benchmarks.common import csv_row, get_eval_records
+
+
+def run() -> list:
+    rows = []
+    for name in ("H100", "Het-4Mix"):
+        recs = get_eval_records(name)
+        loss = core.bw_loss_by_k(recs)
+        for disp in ("BandPilot", "Topo"):
+            per_k = loss[disp]
+            mid = {k: v for k, v in per_k.items() if 8 <= k <= 20}
+            peak_k = max(mid, key=mid.get) if mid else max(per_k, key=per_k.get)
+            rows.append(csv_row(
+                f"fig7_{name}_{disp}", 0.0,
+                f"peak_loss={per_k[peak_k]:.1f}GBps@k={peak_k};"
+                f"mean_loss={np.mean(list(per_k.values())):.1f}GBps",
+            ))
+    return rows

@@ -1,0 +1,47 @@
+"""Fig. 6 + Table 2: end-to-end dispatching GBE across clusters.
+
+Paper claims: mean GBE ~96.99% (H100) / ~89.9% (Het-4Mix); +12~31 points
+over the Topo compactness heuristic; U-shaped GBE-vs-k curves.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+import repro.core as core
+from benchmarks.common import csv_row, get_context, get_eval_records
+
+CLUSTERS = ("H100", "Het-RA", "Het-VA", "Het-4Mix")
+
+
+def run() -> list:
+    rows = []
+    for name in CLUSTERS:
+        t0 = time.time()
+        recs = get_eval_records(name)
+        wall = time.time() - t0
+        summ = core.summarize(recs)
+        n_dispatch = sum(s["n"] for s in summ.values())
+        us = wall / max(n_dispatch, 1) * 1e6
+        for disp, s in sorted(summ.items(), key=lambda kv: -kv[1]["mean_gbe"]):
+            rows.append(csv_row(
+                f"table2_{name}_{disp}", 1e6 * s["mean_seconds"],
+                f"gbe={100 * s['mean_gbe']:.2f}%;bw_loss={s['mean_bw_loss']:.2f}GBps",
+            ))
+        # headline vs Topo delta (paper: +12 / +31 points)
+        delta = 100 * (summ["BandPilot"]["mean_gbe"] - summ["Topo"]["mean_gbe"])
+        rows.append(csv_row(f"table2_{name}_delta_vs_topo", us,
+                            f"+{delta:.1f}pts"))
+        # U-shape check: GBE at the extremes vs the middle (Fig. 6)
+        by_k = core.gbe_by_k(recs)["BandPilot"]
+        ks = sorted(by_k)
+        mid = ks[len(ks) // 2]
+        rows.append(csv_row(
+            f"fig6_{name}_BandPilot_kcurve", us,
+            f"k{ks[0]}={100 * by_k[ks[0]]:.1f}%;"
+            f"k{mid}={100 * by_k[mid]:.1f}%;"
+            f"k{ks[-1]}={100 * by_k[ks[-1]]:.1f}%",
+        ))
+    return rows

@@ -1,0 +1,41 @@
+"""Table 3: one-time offline intra-host measurement cost (simulated clock).
+
+The paper reports 503–1512 s per host type for the 255-combination sweep
+(+1 warmup).  Real nccl-tests invocations cost ~2–6 s each depending on the
+host's link speeds; our simulator charges each combination the same
+size-dependent cost model and reports the resulting wall clock, alongside
+the *actual* CPU time to build the tables (the simulator's cost).
+"""
+
+from __future__ import annotations
+
+import time
+
+import repro.core as core
+from repro.core.cluster import HOST_TYPES
+from benchmarks.common import csv_row
+
+# seconds per nccl-tests all-gather @16MB, by host class (fit to Table 3)
+_PER_MEASUREMENT_S = {
+    "RTX4090": 2.0, "V100": 2.1, "A6000": 3.4, "A800": 5.9, "H100": 5.0,
+}
+PAPER_TABLE3 = {"RTX4090": 503, "V100": 534, "A6000": 866, "A800": 1512,
+                "H100": 1288}
+
+
+def run() -> list:
+    rows = []
+    for ht, per_s in _PER_MEASUREMENT_S.items():
+        cluster = core.Cluster([(ht, 1)], name=f"bench-{ht}")
+        sim = core.BandwidthSimulator(cluster)
+        t0 = time.time()
+        tables = core.IntraHostTables(cluster, sim)
+        build_s = time.time() - t0
+        simulated = tables.n_measurements * per_s
+        rows.append(csv_row(
+            f"table3_{ht}", 1e6 * build_s,
+            f"simulated_s={simulated:.0f};paper_s={PAPER_TABLE3[ht]};"
+            f"points={tables.n_measurements};"
+            f"storage_kb={tables.storage_bytes() / 1024:.1f}",
+        ))
+    return rows

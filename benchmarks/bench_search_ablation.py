@@ -1,0 +1,56 @@
+"""Fig. 10 (ablation 5.5.2): EHA-only vs PTS-only vs full hybrid.
+
+Paper claim: EHA excels on the homogeneous H100 cluster; PTS is what keeps
+GBE high on heterogeneous clusters; the hybrid dominates both everywhere.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+import repro.core as core
+from repro.core import baselines, search
+from repro.core.cluster import availability_scenario
+from benchmarks.common import N_SCENARIOS, csv_row, get_context
+
+
+class _SingleSearchDispatcher:
+    def __init__(self, ctx, which: str):
+        self.ctx = ctx
+        self.name = which
+        self.fn = {"EHA": search.eha_search, "PTS": search.pts_search}[which]
+
+    def dispatch(self, avail, k, rng=None):
+        return self.fn(
+            self.ctx.cluster, self.ctx.tables, self.ctx.predictor, avail, k
+        ).subset
+
+
+def run() -> list:
+    rows = []
+    for name in ("H100", "Het-4Mix"):
+        ctx = get_context(name)
+        ds = [
+            core.BandPilotDispatcher(ctx.cluster, ctx.tables, ctx.predictor,
+                                     name="Hybrid"),
+            _SingleSearchDispatcher(ctx, "EHA"),
+            _SingleSearchDispatcher(ctx, "PTS"),
+        ]
+        t0 = time.time()
+        recs = core.evaluate_dispatchers(
+            ctx.cluster, ctx.sim, ctx.tables, ds,
+            request_sizes=range(4, ctx.cluster.n_gpus, 4),
+            n_scenarios=max(N_SCENARIOS // 2, 5), seed=11,
+        )
+        wall = time.time() - t0
+        summ = core.summarize(recs)
+        rows.append(csv_row(
+            f"fig10_{name}", 1e6 * wall / max(sum(s['n'] for s in summ.values()), 1),
+            ";".join(
+                f"{d}={100 * summ[d]['mean_gbe']:.1f}%"
+                for d in ("Hybrid", "EHA", "PTS")
+            ),
+        ))
+    return rows

@@ -1,0 +1,42 @@
+"""Fig. 5: surrogate data efficiency — R^2 / MAPE vs training-set size.
+
+Paper claim: R^2 > 0.95 and MAPE < 5% with only 250 samples across the
+cluster zoo.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+import repro.core as core
+from benchmarks.common import SURROGATE_STEPS, csv_row
+
+SAMPLE_COUNTS = (50, 100, 250, 500)
+CLUSTERS = ("H100", "Het-RA", "Het-VA", "Het-4Mix")
+
+
+def run() -> list:
+    rows = []
+    for name in CLUSTERS:
+        cluster = core.PAPER_CLUSTERS[name]()
+        sim = core.BandwidthSimulator(cluster)
+        tables = core.IntraHostTables(cluster, sim)
+        for n in SAMPLE_COUNTS:
+            train, test = core.make_train_test_split(sim, n, seed=0)
+            t0 = time.time()
+            params, _ = core.train_surrogate(
+                cluster, tables, train, core.TrainConfig(steps=SURROGATE_STEPS)
+            )
+            train_s = time.time() - t0
+            pred = core.SurrogatePredictor(cluster, tables, params)
+            t0 = time.time()
+            m = core.evaluate_surrogate(pred, test)
+            n_eval = m["n"]
+            us = (time.time() - t0) / max(n_eval, 1) * 1e6
+            rows.append(csv_row(
+                f"fig5_{name}_n{n}", us,
+                f"r2={m['r2']:.4f};mape={m['mape']:.2f}%;train_s={train_s:.0f}",
+            ))
+    return rows

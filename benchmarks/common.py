@@ -1,0 +1,90 @@
+"""Shared benchmark context: clusters, simulators, trained surrogates.
+
+Built once per process and reused across the per-figure benchmarks so
+``python -m benchmarks.run`` doesn't retrain the same model five times.
+Scenario counts honour BENCH_SCENARIOS (default 20; the paper uses 50 —
+EXPERIMENTS.md numbers were produced with BENCH_SCENARIOS=50).
+"""
+
+from __future__ import annotations
+
+import os
+import time
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+import repro.core as core
+
+N_SCENARIOS = int(os.environ.get("BENCH_SCENARIOS", "20"))
+N_TRAIN_SAMPLES = 250
+SURROGATE_STEPS = int(os.environ.get("BENCH_SURROGATE_STEPS", "2000"))
+
+_CTX: Dict[str, "ClusterContext"] = {}
+
+
+class ClusterContext:
+    def __init__(self, name: str, n_train: int = N_TRAIN_SAMPLES, seed: int = 0):
+        self.name = name
+        self.cluster = core.PAPER_CLUSTERS[name]()
+        self.sim = core.BandwidthSimulator(self.cluster)
+        self.tables = core.IntraHostTables(self.cluster, self.sim)
+        self.train_set, self.test_set = core.make_train_test_split(
+            self.sim, n_train, seed=seed
+        )
+        t0 = time.time()
+        self.params, self.train_info = core.train_surrogate(
+            self.cluster, self.tables, self.train_set,
+            core.TrainConfig(steps=SURROGATE_STEPS, seed=seed),
+        )
+        self.train_seconds = time.time() - t0
+        self.predictor = core.SurrogatePredictor(
+            self.cluster, self.tables, self.params
+        )
+
+    def dispatchers(self, include_ideal: bool = True) -> List:
+        ds = [
+            core.BandPilotDispatcher(self.cluster, self.tables, self.predictor),
+        ]
+        if include_ideal:
+            ds.append(
+                core.BandPilotDispatcher(
+                    self.cluster, self.tables,
+                    core.GroundTruthPredictor(self.sim), name="Ideal-BP",
+                )
+            )
+        ds += [
+            core.BaselineDispatcher(self.cluster, k)
+            for k in ("topo", "default", "random")
+        ]
+        return ds
+
+
+def get_context(name: str) -> ClusterContext:
+    if name not in _CTX:
+        _CTX[name] = ClusterContext(name)
+    return _CTX[name]
+
+
+_RECORDS: Dict[str, list] = {}
+
+
+def get_eval_records(name: str, request_sizes=None, n_scenarios=None):
+    """Cached dispatcher-evaluation records per cluster (Figs. 6/7, Table 2)."""
+    key = name
+    if key not in _RECORDS:
+        ctx = get_context(name)
+        if request_sizes is None:
+            request_sizes = range(2, ctx.cluster.n_gpus + 1, 2)
+        recs = core.evaluate_dispatchers(
+            ctx.cluster, ctx.sim, ctx.tables, ctx.dispatchers(),
+            request_sizes=request_sizes,
+            n_scenarios=n_scenarios or N_SCENARIOS,
+            seed=7,
+        )
+        _RECORDS[key] = recs
+    return _RECORDS[key]
+
+
+def csv_row(name: str, us_per_call: float, derived) -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

@@ -1,0 +1,61 @@
+"""Benchmark harness: one bench per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (stdout) per the repo contract.
+Scenario counts honour BENCH_SCENARIOS (default 20; paper protocol = 50).
+
+  PYTHONPATH=src python -m benchmarks.run            # all benches
+  PYTHONPATH=src python -m benchmarks.run fig5 fig9  # subset by prefix
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+from benchmarks import (
+    bench_surrogate_accuracy,
+    bench_dispatch_gbe,
+    bench_bandwidth_loss,
+    bench_search_overhead,
+    bench_hier_vs_naive,
+    bench_search_ablation,
+    bench_offline_cost,
+    bench_llama70b_delta,
+)
+
+BENCHES = [
+    ("fig5_surrogate_accuracy", bench_surrogate_accuracy.run),
+    ("table2_fig6_dispatch_gbe", bench_dispatch_gbe.run),
+    ("fig7_bandwidth_loss", bench_bandwidth_loss.run),
+    ("fig8_search_overhead", bench_search_overhead.run),
+    ("fig9_hier_vs_naive", bench_hier_vs_naive.run),
+    ("fig10_search_ablation", bench_search_ablation.run),
+    ("table3_offline_cost", bench_offline_cost.run),
+    ("appendixA_llama70b_delta", bench_llama70b_delta.run),
+]
+
+
+def main() -> None:
+    prefixes = [a for a in sys.argv[1:] if not a.startswith("-")]
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in BENCHES:
+        if prefixes and not any(name.startswith(p) or p in name
+                                for p in prefixes):
+            continue
+        t0 = time.time()
+        try:
+            for row in fn():
+                print(row, flush=True)
+            print(f"# {name} done in {time.time() - t0:.0f}s", flush=True)
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+            print(f"{name},0,FAILED", flush=True)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,101 @@
+"""Fault-tolerance demo: host failure -> BandPilot re-dispatch -> restore.
+
+A 4-host simulated cluster trains a tiny LM; at step 40 a host "dies".
+The coordinator marks its GPUs unavailable, re-dispatches the surviving
+pool through BandPilot (maximizing post-failure collective bandwidth),
+restores the latest checkpoint, and training resumes on the new allocation
+with the deterministic data stream continuing exactly where it left off.
+
+  PYTHONPATH=src python examples/elastic_recovery.py
+"""
+
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.core as core
+from repro.checkpoint.ckpt import Checkpointer
+from repro.configs import get_config
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.ft.elastic import ElasticCoordinator, FailureEvent, run_elastic_training
+from repro.models.model_zoo import build_model
+from repro.train.optimizer import AdamWConfig
+from repro.train.train_loop import TrainRunConfig, train_loop
+
+TOTAL_STEPS = 80
+FAIL_AT = 40
+CKPT_EVERY = 10
+
+
+def main():
+    # cluster + BandPilot (ground-truth-guided for a deterministic demo)
+    cluster = core.h100_cluster()
+    sim = core.BandwidthSimulator(cluster)
+    tables = core.IntraHostTables(cluster, sim)
+    bp = core.BandPilotDispatcher(
+        cluster, tables, core.GroundTruthPredictor(sim)
+    )
+    coord = ElasticCoordinator(cluster, bp, request_size=16)
+
+    # model + deterministic data + checkpointing
+    cfg = get_config("gemma-7b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    data = SyntheticLM(DataConfig(cfg.vocab_size, 48, 8, seed=0))
+    ckdir = tempfile.mkdtemp(prefix="elastic_")
+    ck = Checkpointer(ckdir, keep=2)
+    run = TrainRunConfig(
+        optimizer=AdamWConfig(lr=2e-3), total_steps=TOTAL_STEPS,
+        compute_dtype=jnp.float32,
+    )
+
+    state = {"params": params, "opt": None, "step": 0}
+
+    def build_and_train(allocation, start_step):
+        """Train on the dispatched allocation until the next event."""
+        # restore from the latest checkpoint after a failure
+        if start_step > 0 and ck.all_steps():
+            tpl = {"params": state["params"], "opt": state["opt"]}
+            ck_step, restored = ck.restore(tpl)
+            state.update(params=restored["params"], opt=restored["opt"])
+            start_step = ck_step
+            print(f"  restored checkpoint @ step {ck_step}")
+        until = min(
+            (f.step for f in failures if f.step > start_step),
+            default=TOTAL_STEPS,
+        )
+        n = until - start_step
+        batches = ({k: jnp.asarray(v) for k, v in b.items()}
+                   for b in data.batches(n, start=start_step))
+        p, o, hist = train_loop(
+            model, state["params"], batches, run, log_every=20,
+            checkpointer=ck, checkpoint_every=CKPT_EVERY,
+            start_step=start_step, opt_state=state["opt"],
+        )
+        state.update(params=p, opt=o, step=until)
+        loss = hist[-1]["loss"] if hist else float("nan")
+        return until, loss
+
+    failures = [FailureEvent(step=FAIL_AT, failed_gpus=list(range(8, 16)))]
+    log = run_elastic_training(coord, build_and_train, failures, TOTAL_STEPS)
+
+    print("\nevent log:")
+    for e in log:
+        if e["event"] == "dispatch":
+            print(f"  dispatch: {len(e['alloc'])} GPUs, "
+                  f"predicted B={e['bw']:.0f} GB/s")
+        elif e["event"] == "redispatch":
+            print(f"  {e['kind']}: lost {e['failed']}; re-dispatched "
+                  f"{len(e['alloc'])} GPUs (B={e['bw']:.0f} GB/s), "
+                  f"none on the dead host: "
+                  f"{not set(e['alloc']) & set(e['failed'])}")
+        else:
+            print(f"  trained to step {e['until']} (loss {e['loss']:.3f})")
+    assert state["step"] == TOTAL_STEPS
+    print("\nrecovered and completed all steps.")
+
+
+if __name__ == "__main__":
+    main()

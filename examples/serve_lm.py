@@ -1,0 +1,59 @@
+"""Serving example: batched prefill+decode with a KV cache.
+
+Trains a tiny LM briefly on the motif corpus, then serves a batch of
+requests — demonstrating that generation continues motifs it learned
+(prefill/decode path is the exact same code the 32k dry-run cells lower).
+
+  PYTHONPATH=src python examples/serve_lm.py
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.models.model_zoo import build_model
+from repro.serve.engine import ServeConfig, ServeEngine
+from repro.train.optimizer import AdamWConfig
+from repro.train.train_loop import TrainRunConfig, train_loop
+
+
+def main():
+    cfg = get_config("gemma2-9b").reduced()  # local+global attn, softcaps
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    # brief training on a small motif bank so generation is non-trivial
+    data = SyntheticLM(DataConfig(cfg.vocab_size, 64, 16, seed=0, n_motifs=16))
+    steps = 250
+    run = TrainRunConfig(
+        optimizer=AdamWConfig(lr=5e-3, weight_decay=0.01),
+        total_steps=steps, warmup_steps=20, compute_dtype=jnp.float32,
+    )
+    batches = ({k: jnp.asarray(v) for k, v in b.items()}
+               for b in data.batches(steps))
+    params, _, hist = train_loop(model, params, batches, run, log_every=100)
+
+    # serve a batch: prompts drawn from the corpus' motif bank
+    prompts = [data.motifs[i][:8].tolist() for i in (0, 1, 2, 3)]
+    eng = ServeEngine(model, params, ServeConfig(
+        max_len=96, max_new_tokens=12
+    ))
+    outs = eng.generate(prompts)
+    print("\nbatched generation:")
+    hits = 0
+    for i, (p, o) in enumerate(zip(prompts, outs)):
+        target = data.motifs[i][8:8 + len(o)].tolist()
+        match = sum(int(a == b) for a, b in zip(o, target))
+        hits += match
+        print(f"  req{i}: prompt={p} -> {o} "
+              f"(motif continuation match {match}/{len(o)})")
+    print(f"\nmotif-continuation accuracy: "
+          f"{hits}/{sum(len(o) for o in outs)} tokens")
+
+
+if __name__ == "__main__":
+    main()

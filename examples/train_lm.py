@@ -1,0 +1,81 @@
+"""End-to-end driver: train a ~100M-parameter LM for a few hundred steps.
+
+Uses the mistral-nemo block architecture scaled to ~100M params, the
+deterministic synthetic pipeline, AdamW + cosine schedule, checkpointing,
+and (if >1 device) BandPilot-dispatched mesh construction.  Loss drops well
+below ln(V) within a few hundred steps.
+
+  PYTHONPATH=src python examples/train_lm.py            # ~100M, 300 steps
+  PYTHONPATH=src python examples/train_lm.py --quick    # smoke-sized
+"""
+
+import argparse
+import dataclasses
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.ckpt import Checkpointer
+from repro.configs import get_config
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.models.model_zoo import build_model
+from repro.train.optimizer import AdamWConfig
+from repro.train.train_loop import TrainRunConfig, train_loop
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--steps", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm_ckpt")
+    args = ap.parse_args()
+
+    base = get_config("mistral-nemo-12b")
+    if args.quick:
+        cfg = base.reduced()
+        steps = args.steps or 60
+        batch, seq = 8, 64
+    else:
+        # ~100M-param dense LM with the mistral-nemo block layout
+        cfg = dataclasses.replace(
+            base, name="nemo-100m", n_layers=8, d_model=512, n_heads=8,
+            n_kv_heads=4, head_dim=64, d_ff=2048, vocab_size=32768,
+            max_seq_len=512,
+        )
+        steps = args.steps or 300
+        batch, seq = 16, 256
+
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    n_params = sum(int(np.prod(p.shape))
+                   for p in jax.tree_util.tree_leaves(params))
+    print(f"{cfg.name}: {n_params / 1e6:.1f}M params, {steps} steps, "
+          f"batch {batch} x seq {seq}")
+
+    data = SyntheticLM(DataConfig(cfg.vocab_size, seq, batch, seed=0))
+    run = TrainRunConfig(
+        optimizer=AdamWConfig(lr=3e-3, weight_decay=0.01),
+        total_steps=steps, warmup_steps=max(10, steps // 10),
+        compute_dtype=jnp.float32,
+    )
+    ck = Checkpointer(args.ckpt_dir, keep=2, async_save=True)
+    batches = ({k: jnp.asarray(v) for k, v in b.items()}
+               for b in data.batches(steps))
+    t0 = time.time()
+    params, opt_state, hist = train_loop(
+        model, params, batches, run, log_every=max(10, steps // 15),
+        checkpointer=ck, checkpoint_every=max(50, steps // 4),
+    )
+    ck.wait()
+    lnv = float(np.log(cfg.vocab_size))
+    final = hist[-1]["loss"] if hist else float("nan")
+    print(f"\ndone in {time.time() - t0:.0f}s; final loss {final:.3f} "
+          f"vs ln(V)={lnv:.2f} ({'LEARNED' if final < 0.75 * lnv else 'check'})")
+    print(f"checkpoints: {ck.all_steps()} in {args.ckpt_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,98 @@
+"""Dump the top HLO ops by output bytes + top collectives for one cell.
+
+  PYTHONPATH=src python scripts/hlo_top_ops.py qwen3-moe-235b-a22b train_4k \
+      [--groups 1] [--exp moe_ep2d]
+"""
+
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import dataclasses
+import re
+from collections import Counter
+
+from repro.configs import get_config
+from repro.launch import shapes as shp, steps, hlo_analysis as ha
+from repro.launch.mesh import make_production_mesh
+from repro.parallel import sharding as shd
+
+_OP_RE = re.compile(r"^\s*%?([\w\.\-]+)\s*=\s*(\w+\[[^\]]*\])[^=]*?(\w[\w\-]*)\(")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("arch")
+    ap.add_argument("shape")
+    ap.add_argument("--groups", type=int, default=1)
+    ap.add_argument("--exp", default="baseline")
+    ap.add_argument("--top", type=int, default=20)
+    args = ap.parse_args()
+
+    from repro.launch.perf import EXPERIMENTS
+
+    knobs = EXPERIMENTS[args.exp]
+    for k, v in knobs.get("env", {}).items():
+        os.environ[k] = v
+
+    cfg = get_config(args.arch)
+    cell = shp.SHAPES[args.shape]
+    strategy = knobs.get(
+        "strategy", "serve_2d" if cell.kind == "decode" else "fsdp_tp"
+    )
+    rules = shd.STRATEGIES[strategy]()
+    rules.update(knobs.get("rules_patch", {}))
+    p = len(cfg.mixer_pattern)
+    _, n_tail = cfg.n_groups_and_tail()
+    vcfg = dataclasses.replace(
+        cfg, n_layers=args.groups * p + n_tail,
+        **({"n_encoder_layers": args.groups} if cfg.is_encoder_decoder else {}),
+    )
+    mesh = make_production_mesh()
+    step = steps.build_step(
+        vcfg, cell, mesh, strategy=strategy, rules_override=rules,
+        scan_unroll=args.groups + (1 if n_tail else 0),
+        constrain_grads=knobs.get("constrain_grads", False),
+    )
+    compiled = step.compile()
+    hlo = compiled.as_text()
+
+    # top ops by output bytes, aggregated by (opcode, shape)
+    agg = Counter()
+    cnt = Counter()
+    for line in hlo.splitlines():
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        _, shape_str, opcode = m.groups()
+        b = ha._shape_bytes(shape_str)
+        if b < 2**20:
+            continue
+        key = (opcode, shape_str.split("{")[0])
+        agg[key] += b
+        cnt[key] += 1
+    print(f"== top ops by total output bytes ({args.arch} x {args.shape} "
+          f"x {args.groups}g, exp={args.exp}) ==")
+    for (opcode, shape), tot in agg.most_common(args.top):
+        print(f"{opcode:22s} {shape:42s} x{cnt[(opcode, shape)]:4d} "
+              f"= {tot / 2**30:8.2f} GiB")
+
+    print("\n== collectives ==")
+    ops = ha.parse_collectives(hlo)
+    cagg = Counter()
+    ccnt = Counter()
+    for op in ops:
+        cagg[(op.kind, op.bytes)] += op.bytes
+        ccnt[(op.kind, op.bytes)] += 1
+    for (kind, b), tot in cagg.most_common(15):
+        print(f"{kind:20s} size={b / 2**20:9.1f}MiB x{ccnt[(kind, b)]:4d} "
+              f"= {tot / 2**30:8.2f} GiB")
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    print(f"\nflops={cost.get('flops', 0) / 1e12:.2f}T "
+          f"bytes={cost.get('bytes accessed', 0) / 2**30:.1f}GiB")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,92 @@
+"""Render EXPERIMENTS.md tables from the dry-run JSONL records.
+
+  PYTHONPATH=src python scripts/render_dryrun_table.py results/dryrun_baseline.jsonl
+"""
+
+import json
+import sys
+from collections import defaultdict
+
+
+def load(path):
+    return [json.loads(l) for l in open(path)]
+
+
+def fmt_bytes(b):
+    if b >= 2**30:
+        return f"{b / 2**30:.1f}G"
+    return f"{b / 2**20:.0f}M"
+
+
+def render(records, mesh_filter=None):
+    rows = []
+    for r in records:
+        if r["status"] == "skipped":
+            if mesh_filter in (None, "16x16"):
+                rows.append(
+                    f"| {r['arch']} | {r['shape']} | — | — | — | — | — | — | "
+                    f"skip: sub-quadratic mixer required |"
+                )
+            continue
+        if r["status"] != "ok":
+            rows.append(f"| {r['arch']} | {r['shape']} | {r.get('mesh','?')} "
+                        f"| FAILED | | | | | {r.get('error','')[:60]} |")
+            continue
+        if mesh_filter and r["mesh"] != mesh_filter:
+            continue
+        ro = r["roofline"]
+        ma = r["memory_analysis"]
+        mem_dev = ma["argument_gb"] + ma["temp_gb"] + ma["output_gb"] - ma["alias_gb"]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {ro['compute_ms']:.0f} | {ro['memory_ms']:.0f} "
+            f"| {ro['collective_ms']:.0f} | {ro['bottleneck']} "
+            f"| {ro['useful_ratio']:.2f} | {100 * ro['roofline_frac']:.1f}% "
+            f"| {mem_dev:.1f}G |"
+        )
+    header = (
+        "| arch | shape | mesh | compute ms | memory ms | collective ms "
+        "| bound | useful | roofline | mem/chip |\n"
+        "|---|---|---|---|---|---|---|---|---|---|"
+    )
+    return header + "\n" + "\n".join(rows)
+
+
+def summary(records):
+    ok = [r for r in records if r["status"] == "ok"]
+    skipped = [r for r in records if r["status"] == "skipped"]
+    failed = [r for r in records if r["status"] == "FAILED"]
+    by_bound = defaultdict(int)
+    for r in ok:
+        by_bound[r["roofline"]["bottleneck"]] += 1
+    lines = [
+        f"compiled cells: {len(ok)}; skipped: {len(skipped)}; "
+        f"failed: {len(failed)}",
+        f"bottleneck split: {dict(by_bound)}",
+    ]
+    worst = sorted(
+        (r for r in ok if r["shape"].startswith(("train", "prefill"))),
+        key=lambda r: r["roofline"]["roofline_frac"],
+    )[:5]
+    lines.append("worst roofline (train/prefill): " + ", ".join(
+        f"{r['arch']}x{r['shape']}@{r['mesh']}"
+        f"={100 * r['roofline']['roofline_frac']:.1f}%"
+        for r in worst
+    ))
+    most_coll = sorted(
+        ok, key=lambda r: -(r["roofline"]["collective_ms"]),
+    )[:5]
+    lines.append("most collective-bound: " + ", ".join(
+        f"{r['arch']}x{r['shape']}@{r['mesh']}"
+        f"={r['roofline']['collective_ms']:.0f}ms"
+        for r in most_coll
+    ))
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    recs = load(sys.argv[1])
+    mesh = sys.argv[2] if len(sys.argv) > 2 else None
+    print(summary(recs))
+    print()
+    print(render(recs, mesh))

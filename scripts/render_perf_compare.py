@@ -1,0 +1,52 @@
+"""Render baseline-vs-optimized roofline comparison (EXPERIMENTS §Perf).
+
+  PYTHONPATH=src python scripts/render_perf_compare.py \
+      results/dryrun_baseline.jsonl results/dryrun_optimized.jsonl [mesh]
+"""
+
+import json
+import sys
+
+
+def load(path, mesh):
+    out = {}
+    for line in open(path):
+        r = json.loads(line)
+        if r["status"] != "ok" or r.get("mesh") != mesh:
+            continue
+        out[(r["arch"], r["shape"])] = r
+    return out
+
+
+def main():
+    base = load(sys.argv[1], sys.argv[3] if len(sys.argv) > 3 else "16x16")
+    opt = load(sys.argv[2], sys.argv[3] if len(sys.argv) > 3 else "16x16")
+    print("| arch | shape | step-time base→opt (ms) | bound base→opt "
+          "| roofline base→opt | mem/chip base→opt |")
+    print("|---|---|---|---|---|---|")
+    deltas = []
+    for key in sorted(base):
+        if key not in opt:
+            continue
+        b, o = base[key]["roofline"], opt[key]["roofline"]
+        bt = max(b["compute_ms"], b["memory_ms"], b["collective_ms"])
+        ot = max(o["compute_ms"], o["memory_ms"], o["collective_ms"])
+        bm = base[key]["memory_analysis"]
+        om = opt[key]["memory_analysis"]
+        bmem = bm["argument_gb"] + bm["temp_gb"] + bm["output_gb"] - bm["alias_gb"]
+        omem = om["argument_gb"] + om["temp_gb"] + om["output_gb"] - om["alias_gb"]
+        if bt > 1:
+            deltas.append(bt / max(ot, 1e-9))
+        print(f"| {key[0]} | {key[1]} | {bt:.0f} → {ot:.0f} "
+              f"| {b['bottleneck']} → {o['bottleneck']} "
+              f"| {100*b['roofline_frac']:.1f}% → {100*o['roofline_frac']:.1f}% "
+              f"| {bmem:.1f}G → {omem:.1f}G |")
+    if deltas:
+        import math
+        geo = math.exp(sum(math.log(d) for d in deltas) / len(deltas))
+        print(f"\ngeomean step-time speedup (cells > 1 ms): {geo:.2f}x "
+              f"over {len(deltas)} cells")
+
+
+if __name__ == "__main__":
+    main()

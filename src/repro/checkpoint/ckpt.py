@@ -1,0 +1,116 @@
+"""Checkpointing: atomic pytree save/restore with latest-k retention.
+
+Format: one .npz with flattened path-keyed arrays + a JSON sidecar holding
+the step and tree structure.  Writes go to a temp dir that is atomically
+renamed, so a crash mid-save can never corrupt the latest checkpoint —
+restart-from-latest is always safe (the fault-tolerance contract).
+An optional background thread makes saves non-blocking (async checkpointing
+overlaps the next training steps).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+PyTree = Any
+
+_SEP = "/"
+
+
+def _flatten(tree: PyTree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_leaves_with_path(tree):
+        key = jax.tree_util.keystr(path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+class Checkpointer:
+    def __init__(self, directory: str, keep: int = 3, async_save: bool = False):
+        self.directory = directory
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: Optional[threading.Thread] = None
+        os.makedirs(directory, exist_ok=True)
+
+    # -- save -----------------------------------------------------------------
+
+    def save(self, step: int, tree: PyTree, metadata: Optional[dict] = None):
+        # materialize on host *before* handing to the writer thread
+        flat = _flatten(tree)
+        if self.async_save:
+            self.wait()  # one in-flight save at a time
+            self._thread = threading.Thread(
+                target=self._write, args=(step, flat, metadata or {})
+            )
+            self._thread.start()
+        else:
+            self._write(step, flat, metadata or {})
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _write(self, step: int, flat: Dict[str, np.ndarray], metadata: dict):
+        tmp = os.path.join(self.directory, f".tmp-{step}-{os.getpid()}")
+        final = os.path.join(self.directory, f"step_{step:010d}")
+        os.makedirs(tmp, exist_ok=True)
+        np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+        with open(os.path.join(tmp, "meta.json"), "w") as f:
+            json.dump({"step": step, "time": time.time(), **metadata}, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)  # atomic publish
+        self._gc()
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:010d}"),
+                          ignore_errors=True)
+
+    # -- restore ----------------------------------------------------------------
+
+    def all_steps(self):
+        out = []
+        for name in os.listdir(self.directory):
+            if name.startswith("step_"):
+                out.append(int(name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(
+        self, template: PyTree, step: Optional[int] = None
+    ) -> Tuple[int, PyTree]:
+        """Restore into the structure of ``template`` (shapes must match)."""
+        if step is None:
+            step = self.latest_step()
+            if step is None:
+                raise FileNotFoundError(f"no checkpoints in {self.directory}")
+        path = os.path.join(self.directory, f"step_{step:010d}")
+        data = np.load(os.path.join(path, "arrays.npz"))
+        paths_leaves = jax.tree_util.tree_leaves_with_path(template)
+        leaves = []
+        for p, leaf in paths_leaves:
+            key = jax.tree_util.keystr(p)
+            arr = data[key]
+            if tuple(arr.shape) != tuple(leaf.shape):
+                raise ValueError(
+                    f"shape mismatch at {key}: ckpt {arr.shape} vs "
+                    f"template {leaf.shape}"
+                )
+            leaves.append(arr.astype(leaf.dtype))
+        treedef = jax.tree_util.tree_structure(template)
+        return step, jax.tree_util.tree_unflatten(treedef, leaves)

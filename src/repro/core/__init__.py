@@ -1,0 +1,73 @@
+"""BandPilot core: the paper's contribution as a composable library.
+
+Public surface:
+  Cluster / bandwidth simulation:
+    cluster.Cluster, cluster.PAPER_CLUSTERS, bandwidth_sim.BandwidthSimulator
+  Hierarchical surrogate (Sec. 4.2):
+    intra_host.IntraHostTables, surrogate.SurrogatePredictor,
+    training.train_surrogate / online_finetune / evaluate_surrogate
+  Hybrid search (Sec. 4.3):
+    search.eha_search / pts_search / hybrid_search
+  Dispatchers + evaluation (Sec. 5):
+    dispatcher.BandPilotDispatcher / BaselineDispatcher / evaluate_dispatchers,
+    baselines.oracle_dispatch
+"""
+
+from repro.core.bandwidth_sim import BW_SCALE, BandwidthSimulator
+from repro.core.cluster import (
+    Cluster,
+    PAPER_CLUSTERS,
+    h100_cluster,
+    het_4mix_cluster,
+    het_ra_cluster,
+    het_va_cluster,
+    tpu_pod_cluster,
+)
+from repro.core.dispatcher import (
+    BandPilotDispatcher,
+    BaselineDispatcher,
+    GroundTruthPredictor,
+    bw_loss_by_k,
+    evaluate_dispatchers,
+    gbe_by_k,
+    summarize,
+)
+from repro.core.intra_host import IntraHostTables
+from repro.core.search import eha_search, hybrid_search, pts_search
+from repro.core.surrogate import SurrogatePredictor
+from repro.core.training import (
+    TrainConfig,
+    evaluate_surrogate,
+    make_train_test_split,
+    online_finetune,
+    train_surrogate,
+)
+
+__all__ = [
+    "BW_SCALE",
+    "BandwidthSimulator",
+    "Cluster",
+    "PAPER_CLUSTERS",
+    "h100_cluster",
+    "het_4mix_cluster",
+    "het_ra_cluster",
+    "het_va_cluster",
+    "tpu_pod_cluster",
+    "BandPilotDispatcher",
+    "BaselineDispatcher",
+    "GroundTruthPredictor",
+    "bw_loss_by_k",
+    "evaluate_dispatchers",
+    "gbe_by_k",
+    "summarize",
+    "IntraHostTables",
+    "eha_search",
+    "hybrid_search",
+    "pts_search",
+    "SurrogatePredictor",
+    "TrainConfig",
+    "evaluate_surrogate",
+    "make_train_test_split",
+    "online_finetune",
+    "train_surrogate",
+]

@@ -1,0 +1,168 @@
+"""BandPilot dispatcher service + evaluation harness (Secs. 4.1, 5.3).
+
+The ``Dispatcher`` interface is what the rest of the framework consumes
+(``repro.launch`` builds meshes from dispatched device sets).  The harness
+reproduces the paper's protocol: randomized availability scenarios, request
+sizes 1..N, GBE = B(S_sol) / B(S*) against the exact Oracle.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import baselines, search
+from repro.core.bandwidth_sim import BandwidthSimulator
+from repro.core.cluster import Cluster, availability_scenario
+from repro.core.intra_host import IntraHostTables
+from repro.core.surrogate import SurrogatePredictor
+
+Subset = List[int]
+
+
+class GroundTruthPredictor:
+    """Predictor view over the true B(S) — powers Ideal-BP and the Oracle
+    comparisons (isolates search quality from surrogate error)."""
+
+    def __init__(self, sim: BandwidthSimulator):
+        self.sim = sim
+        self.n_model_calls = 0
+        self.predict_seconds = 0.0
+
+    def predict(self, subsets: Sequence[Sequence[int]]) -> np.ndarray:
+        t0 = time.time()
+        out = np.asarray([self.sim.true_bandwidth(s) for s in subsets])
+        self.predict_seconds += time.time() - t0
+        self.n_model_calls += len(subsets)
+        return out
+
+
+class BandPilotDispatcher:
+    """The full system: hierarchical surrogate + hybrid EHA/PTS search."""
+
+    def __init__(
+        self,
+        cluster: Cluster,
+        tables: IntraHostTables,
+        predictor,
+        name: str = "BandPilot",
+    ):
+        self.cluster = cluster
+        self.tables = tables
+        self.predictor = predictor
+        self.name = name
+        self.last_result: Optional[search.HybridResult] = None
+
+    def dispatch(self, avail: Sequence[int], k: int, rng=None) -> Subset:
+        res = search.hybrid_search(
+            self.cluster, self.tables, self.predictor, avail, k
+        )
+        self.last_result = res
+        return res.subset
+
+
+class BaselineDispatcher:
+    def __init__(self, cluster: Cluster, kind: str):
+        self.cluster = cluster
+        self.name = {"random": "Random", "default": "Default", "topo": "Topo"}[kind]
+        self.kind = kind
+
+    def dispatch(self, avail: Sequence[int], k: int, rng=None) -> Subset:
+        if self.kind == "random":
+            assert rng is not None
+            return baselines.random_dispatch(self.cluster, avail, k, rng)
+        if self.kind == "default":
+            return baselines.default_dispatch(self.cluster, avail, k)
+        return baselines.topo_dispatch(self.cluster, avail, k)
+
+
+# ---------------------------------------------------------------------------
+# Evaluation harness (Sec. 5.3 protocol)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class EvalRecord:
+    dispatcher: str
+    k: int
+    scenario: int
+    gbe: float
+    bw: float
+    optimal_bw: float
+    seconds: float
+
+
+def evaluate_dispatchers(
+    cluster: Cluster,
+    sim: BandwidthSimulator,
+    tables: IntraHostTables,
+    dispatchers: Sequence,
+    request_sizes: Optional[Sequence[int]] = None,
+    n_scenarios: int = 50,
+    seed: int = 0,
+) -> List[EvalRecord]:
+    """For every request size and availability scenario, run each dispatcher
+    and grade it with GBE against the exact Oracle."""
+    rng = np.random.default_rng(seed)
+    if request_sizes is None:
+        request_sizes = range(1, cluster.n_gpus + 1)
+    records: List[EvalRecord] = []
+    for k in request_sizes:
+        for s in range(n_scenarios):
+            avail = availability_scenario(cluster, rng)
+            if len(avail) < k:
+                avail = cluster.all_gpus()  # k must be satisfiable
+            _, opt_bw = baselines.oracle_dispatch(cluster, sim, tables, avail, k)
+            for d in dispatchers:
+                t0 = time.time()
+                subset = d.dispatch(avail, k, rng=rng)
+                dt = time.time() - t0
+                assert len(subset) == k and set(subset) <= set(avail), (
+                    f"{d.name} returned invalid allocation"
+                )
+                bw = sim.true_bandwidth(subset)
+                records.append(
+                    EvalRecord(d.name, k, s, bw / opt_bw, bw, opt_bw, dt)
+                )
+    return records
+
+
+def summarize(records: Sequence[EvalRecord]) -> Dict[str, Dict[str, float]]:
+    """-> {dispatcher: {mean_gbe, mean_bw_loss, mean_seconds}} (Table 2)."""
+    out: Dict[str, Dict[str, float]] = {}
+    names = sorted({r.dispatcher for r in records})
+    for name in names:
+        rs = [r for r in records if r.dispatcher == name]
+        out[name] = {
+            "mean_gbe": float(np.mean([r.gbe for r in rs])),
+            "mean_bw_loss": float(np.mean([r.optimal_bw - r.bw for r in rs])),
+            "mean_seconds": float(np.mean([r.seconds for r in rs])),
+            "n": len(rs),
+        }
+    return out
+
+
+def gbe_by_k(records: Sequence[EvalRecord]) -> Dict[str, Dict[int, float]]:
+    """-> {dispatcher: {k: mean_gbe}} (Fig. 6 curves)."""
+    out: Dict[str, Dict[int, float]] = {}
+    for r in records:
+        out.setdefault(r.dispatcher, {}).setdefault(r.k, []).append(r.gbe)
+    return {
+        name: {k: float(np.mean(v)) for k, v in sorted(ks.items())}
+        for name, ks in out.items()
+    }
+
+
+def bw_loss_by_k(records: Sequence[EvalRecord]) -> Dict[str, Dict[int, float]]:
+    """-> {dispatcher: {k: mean bandwidth loss vs oracle}} (Fig. 7)."""
+    out: Dict[str, Dict[int, List[float]]] = {}
+    for r in records:
+        out.setdefault(r.dispatcher, {}).setdefault(r.k, []).append(
+            r.optimal_bw - r.bw
+        )
+    return {
+        name: {k: float(np.mean(v)) for k, v in sorted(ks.items())}
+        for name, ks in out.items()
+    }

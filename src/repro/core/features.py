@@ -1,0 +1,81 @@
+"""Feature extraction for the hierarchical surrogate (Sec. 4.2.1, Fig. 4).
+
+For an allocation S, the Transformer receives one token per *participating
+host*: a feature tuple of (i) the Stage-1 measured intra-host bandwidth of
+the GPUs selected on that host and (ii) the number of GPUs selected there.
+Padding + mask make the representation batchable; the architecture itself is
+size-agnostic (any number of hosts / any k).
+"""
+
+from __future__ import annotations
+
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.bandwidth_sim import BW_SCALE
+from repro.core.cluster import Cluster
+from repro.core.intra_host import IntraHostTables
+
+# Per-host token features.  The paper's tuple is (intra-host bandwidth from
+# the Stage-1 lookup, GPU count on that host); we encode the bandwidth in
+# log-space (it spans ~2.5 decades across heterogeneous hosts) and append
+# two request-context features the dispatcher trivially knows — the host's
+# share of the request (n_h/k) and the normalized request size — which
+# resolve the inter-host rail term without asking pooling to count tokens.
+N_FEATURES = 4
+_LOG_SCALE = 5.0  # keep in sync with surrogate.LOG_SCALE
+
+
+def featurize_one(
+    cluster: Cluster,
+    tables: IntraHostTables,
+    subset: Sequence[int],
+    max_hosts: int,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """-> (feats [max_hosts, N_FEATURES] float32, mask [max_hosts] float32)."""
+    by_host = cluster.partition_by_host(subset)
+    feats = np.zeros((max_hosts, N_FEATURES), np.float32)
+    mask = np.zeros((max_hosts,), np.float32)
+    k = len(subset)
+    for i, (hid, gpus) in enumerate(sorted(by_host.items())):
+        intra = tables.lookup(hid, cluster.local_tuple(hid, gpus))
+        feats[i, 0] = np.log1p(intra) / _LOG_SCALE
+        feats[i, 1] = len(gpus) / 8.0
+        feats[i, 2] = len(gpus) / k
+        feats[i, 3] = k / max(cluster.n_gpus, 1)
+        mask[i] = 1.0
+    return feats, mask
+
+
+def featurize_batch(
+    cluster: Cluster,
+    tables: IntraHostTables,
+    subsets: Sequence[Sequence[int]],
+    max_hosts: int | None = None,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """-> (feats [B, H, F], mask [B, H]) for a batch of allocations."""
+    if max_hosts is None:
+        max_hosts = cluster.n_hosts
+    B = len(subsets)
+    feats = np.zeros((B, max_hosts, N_FEATURES), np.float32)
+    mask = np.zeros((B, max_hosts), np.float32)
+    for b, subset in enumerate(subsets):
+        feats[b], mask[b] = featurize_one(cluster, tables, subset, max_hosts)
+    return feats, mask
+
+
+def featurize_gpu_ids(
+    cluster: Cluster, subsets: Sequence[Sequence[int]], max_k: int
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Raw-identifier featurization for the *naive* baseline (Sec. 5.5.1):
+    one token per GPU, feature = global GPU id (embedded by the model).
+    -> (ids [B, max_k] int32, mask [B, max_k])."""
+    B = len(subsets)
+    ids = np.zeros((B, max_k), np.int32)
+    mask = np.zeros((B, max_k), np.float32)
+    for b, subset in enumerate(subsets):
+        for i, g in enumerate(sorted(subset)):
+            ids[b, i] = g
+            mask[b, i] = 1.0
+    return ids, mask

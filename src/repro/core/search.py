@@ -1,0 +1,234 @@
+"""Fast hybrid search (Sec. 4.3): EHA + PTS, guided by the surrogate.
+
+Both components consume a *predictor* object exposing
+``predict(list_of_subsets) -> np.ndarray`` (the hierarchical surrogate, or
+ground truth for the Ideal-BP upper bound) and return a (subset, predicted_bw)
+pair.  ``hybrid_search`` runs both and keeps the argmax (Sec. 4.3.1).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.cluster import Cluster
+from repro.core.intra_host import IntraHostTables
+
+Subset = List[int]
+
+
+@dataclasses.dataclass
+class SearchResult:
+    subset: Subset
+    predicted_bw: float
+    seconds: float
+    n_candidates: int
+
+
+def _available_by_host(
+    cluster: Cluster, avail: Sequence[int]
+) -> Dict[int, List[int]]:
+    return cluster.partition_by_host(avail)
+
+
+# ---------------------------------------------------------------------------
+# Single-host prioritization (shared by EHA and PTS pruning)
+# ---------------------------------------------------------------------------
+
+def best_single_host(
+    cluster: Cluster,
+    tables: IntraHostTables,
+    avail_by_host: Dict[int, List[int]],
+    k: int,
+) -> Optional[Tuple[float, int, Subset]]:
+    """Best k-GPU allocation on any single host with >=k available GPUs,
+    using exact Stage-1 lookups.  Returns (bw, host_id, global_subset)."""
+    best = None
+    for hid, gpus in avail_by_host.items():
+        if len(gpus) < k:
+            continue
+        locals_ = [cluster.gpu_local[g] for g in gpus]
+        bw, sub = tables.best_subset(hid, k, locals_)
+        if best is None or bw > best[0]:
+            best = (bw, hid, tables.to_globals(hid, sub))
+    return best
+
+
+# ---------------------------------------------------------------------------
+# EHA — Equilibrium-driven Heuristic Algorithm (Algorithm 1)
+# ---------------------------------------------------------------------------
+
+def balanced_count_assignments(
+    capacities: Sequence[int], k: int, max_assignments: int = 16
+) -> List[Tuple[int, ...]]:
+    """Distinct near-even distributions of k over hosts with capacities.
+
+    E.g. k=8 over 3 hosts -> permutations of (3,3,2) that respect capacity.
+    Capacity overflow is re-waterfilled onto the remaining hosts.
+    """
+    m = len(capacities)
+    base, rem = divmod(k, m)
+    shape = [base + 1] * rem + [base] * (m - rem)
+    out: List[Tuple[int, ...]] = []
+    seen = set()
+    for perm in sorted(set(itertools.permutations(shape))):
+        counts = list(perm)
+        # re-waterfill overflow (a host's share may exceed its availability)
+        overflow = 0
+        for i in range(m):
+            if counts[i] > capacities[i]:
+                overflow += counts[i] - capacities[i]
+                counts[i] = capacities[i]
+        while overflow > 0:
+            # give to the host with the most remaining headroom
+            heads = [(capacities[i] - counts[i], i) for i in range(m)]
+            heads.sort(reverse=True)
+            if heads[0][0] <= 0:
+                break  # infeasible
+            counts[heads[0][1]] += 1
+            overflow -= 1
+        if overflow > 0:
+            continue
+        # zero counts are fine (k < m): the host simply goes unused
+        t = tuple(counts)
+        if t not in seen:
+            seen.add(t)
+            out.append(t)
+        if len(out) >= max_assignments:
+            break
+    return out
+
+
+def eha_search(
+    cluster: Cluster,
+    tables: IntraHostTables,
+    predictor,
+    avail: Sequence[int],
+    k: int,
+    max_host_combos: int = 64,
+) -> SearchResult:
+    """Algorithm 1.  Fast constructive search around the equilibrium insight."""
+    t0 = time.time()
+    by_host = _available_by_host(cluster, avail)
+    n_cands = 0
+
+    # Phase 1: single-host prioritization (exact via Stage-1 tables).
+    single = best_single_host(cluster, tables, by_host, k)
+    if single is not None:
+        bw, _, subset = single
+        return SearchResult(subset, bw, time.time() - t0, 1)
+
+    # Phase 2: balanced multi-host construction over the minimum host count.
+    hosts = sorted(by_host.items(), key=lambda kv: -len(kv[1]))
+    sizes = [len(g) for _, g in hosts]
+    m = 0
+    total = 0
+    for s in sizes:
+        m += 1
+        total += s
+        if total >= k:
+            break
+    if total < k:
+        raise ValueError(f"request k={k} exceeds available pool {sum(sizes)}")
+
+    # Host combinations of size m with enough capacity (largest-first bias).
+    candidates: List[Subset] = []
+    host_ids = [hid for hid, _ in hosts]
+    combos = 0
+    for combo in itertools.combinations(range(len(host_ids)), m):
+        caps = [sizes[i] for i in combo]
+        if sum(caps) < k:
+            continue
+        combos += 1
+        if combos > max_host_combos:
+            break
+        chosen_hids = [host_ids[i] for i in combo]
+        for counts in balanced_count_assignments(caps, k):
+            subset: Subset = []
+            for hid, n_h in zip(chosen_hids, counts):
+                if n_h == 0:
+                    continue
+                locals_ = [cluster.gpu_local[g] for g in by_host[hid]]
+                _, sub = tables.best_subset(hid, n_h, locals_)
+                subset.extend(tables.to_globals(hid, sub))
+            candidates.append(sorted(subset))
+
+    if not candidates:  # degenerate fallback: greedy fill
+        pool = [g for _, gs in hosts for g in gs]
+        candidates = [sorted(pool[:k])]
+    preds = predictor.predict(candidates)
+    n_cands = len(candidates)
+    best_idx = int(np.argmax(preds))
+    return SearchResult(
+        candidates[best_idx], float(preds[best_idx]), time.time() - t0, n_cands
+    )
+
+
+# ---------------------------------------------------------------------------
+# PTS — Pruned Tree Search (Algorithm 2)
+# ---------------------------------------------------------------------------
+
+def pts_search(
+    cluster: Cluster,
+    tables: IntraHostTables,
+    predictor,
+    avail: Sequence[int],
+    k: int,
+) -> SearchResult:
+    """Algorithm 2.  Top-down iterative elimination of the bottleneck GPU."""
+    t0 = time.time()
+    by_host = _available_by_host(cluster, avail)
+    s_curr: Subset = sorted(avail)
+    n_cands = 0
+
+    # Search pruning: node-insertion heuristic for small requests.
+    if k <= 8:
+        single = best_single_host(cluster, tables, by_host, k)
+        if single is not None:
+            _, hid, _ = single
+            s_curr = sorted(by_host[hid])
+
+    # Iterative elimination |S| -> k, one GPU at a time.
+    while len(s_curr) > k:
+        children = [s_curr[:i] + s_curr[i + 1:] for i in range(len(s_curr))]
+        preds = predictor.predict(children)
+        n_cands += len(children)
+        s_curr = children[int(np.argmax(preds))]
+
+    final_bw = float(predictor.predict([s_curr])[0])
+    return SearchResult(s_curr, final_bw, time.time() - t0, n_cands + 1)
+
+
+# ---------------------------------------------------------------------------
+# Hybrid (Sec. 4.3.1)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class HybridResult:
+    subset: Subset
+    predicted_bw: float
+    eha: SearchResult
+    pts: SearchResult
+    winner: str
+
+    @property
+    def total_seconds(self) -> float:
+        return self.eha.seconds + self.pts.seconds
+
+
+def hybrid_search(
+    cluster: Cluster,
+    tables: IntraHostTables,
+    predictor,
+    avail: Sequence[int],
+    k: int,
+) -> HybridResult:
+    eha = eha_search(cluster, tables, predictor, avail, k)
+    pts = pts_search(cluster, tables, predictor, avail, k)
+    if eha.predicted_bw >= pts.predicted_bw:
+        return HybridResult(eha.subset, eha.predicted_bw, eha, pts, "EHA")
+    return HybridResult(pts.subset, pts.predicted_bw, eha, pts, "PTS")

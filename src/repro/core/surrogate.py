@@ -1,0 +1,258 @@
+"""Bandwidth surrogate models in pure JAX (Sec. 4.2).
+
+Two models share one Transformer-encoder trunk:
+
+* **HierarchicalSurrogate** (the paper's design): tokens are per-host feature
+  tuples (Stage-1 intra-host bandwidth lookup, GPU count); a 6-layer,
+  d_model=32 encoder with a 3-layer MLP head predicts normalized end-to-end
+  bandwidth.  ~89k params ~= 356 KB fp32, matching the paper's "354 KB".
+* **NaiveSurrogate** (ablation baseline, Sec. 5.5.1): tokens are raw GPU
+  identifiers passed through a learned embedding; the model must infer the
+  physical hierarchy from scratch.
+
+Everything is written against plain parameter pytrees (dicts) so the model
+is trivially checkpointable and shardable with the rest of the framework.
+"""
+
+from __future__ import annotations
+
+import functools
+import time
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import features as feat_lib
+from repro.core.bandwidth_sim import BW_SCALE
+from repro.core.cluster import Cluster
+from repro.core.intra_host import IntraHostTables
+
+PyTree = Any
+
+D_MODEL = 32
+N_LAYERS = 6
+N_HEADS = 4
+D_FF = 128
+HEAD_HIDDEN = 64
+
+# The model regresses log-bandwidth: collective bandwidths span ~2.5 orders
+# of magnitude across heterogeneous clusters, and the paper's accuracy
+# metric (MAPE) is a *relative* error — log-space MSE optimizes it directly.
+LOG_SCALE = 5.0
+
+
+def encode_bw(bw_gbps):
+    """GB/s -> normalized log-space target."""
+    return jnp.log1p(jnp.asarray(bw_gbps)) / LOG_SCALE
+
+
+def decode_bw(y):
+    """normalized log-space prediction -> GB/s."""
+    return jnp.expm1(jnp.clip(y, 0.0, 2.0) * LOG_SCALE)
+
+
+# ---------------------------------------------------------------------------
+# Parameter init
+# ---------------------------------------------------------------------------
+
+def _dense_init(key, d_in, d_out, scale=None):
+    if scale is None:
+        scale = 1.0 / np.sqrt(d_in)
+    w = jax.random.normal(key, (d_in, d_out), jnp.float32) * scale
+    return {"w": w, "b": jnp.zeros((d_out,), jnp.float32)}
+
+
+def _layer_init(key, d=D_MODEL, d_ff=D_FF):
+    ks = jax.random.split(key, 6)
+    return {
+        "ln1": {"g": jnp.ones((d,)), "b": jnp.zeros((d,))},
+        "qkv": _dense_init(ks[0], d, 3 * d),
+        "o": _dense_init(ks[1], d, d),
+        "ln2": {"g": jnp.ones((d,)), "b": jnp.zeros((d,))},
+        "ff1": _dense_init(ks[2], d, d_ff),
+        "ff2": _dense_init(ks[3], d_ff, d),
+    }
+
+
+def _trunk_init(key, d=D_MODEL, n_layers=N_LAYERS):
+    ks = jax.random.split(key, n_layers + 2)
+    head_keys = jax.random.split(ks[-1], 3)
+    return {
+        "layers": [_layer_init(ks[i], d) for i in range(n_layers)],
+        "ln_f": {"g": jnp.ones((d,)), "b": jnp.zeros((d,))},
+        "head": [
+            _dense_init(head_keys[0], d, HEAD_HIDDEN),
+            _dense_init(head_keys[1], HEAD_HIDDEN, HEAD_HIDDEN),
+            _dense_init(head_keys[2], HEAD_HIDDEN, 1),
+        ],
+    }
+
+
+def init_hierarchical_params(key) -> PyTree:
+    k_embed, k_trunk = jax.random.split(key)
+    return {
+        "embed": _dense_init(k_embed, feat_lib.N_FEATURES, D_MODEL, scale=1.0),
+        "trunk": _trunk_init(k_trunk),
+    }
+
+
+def init_naive_params(key, n_gpus: int) -> PyTree:
+    k_embed, k_trunk = jax.random.split(key)
+    return {
+        "id_embed": jax.random.normal(k_embed, (n_gpus, D_MODEL)) * 0.1,
+        "trunk": _trunk_init(k_trunk),
+    }
+
+
+def param_count(params: PyTree) -> int:
+    return sum(int(np.prod(p.shape)) for p in jax.tree_util.tree_leaves(params))
+
+
+def param_bytes(params: PyTree) -> int:
+    return sum(
+        int(np.prod(p.shape)) * p.dtype.itemsize
+        for p in jax.tree_util.tree_leaves(params)
+    )
+
+
+# ---------------------------------------------------------------------------
+# Forward pass
+# ---------------------------------------------------------------------------
+
+def _dense(p, x):
+    return x @ p["w"] + p["b"]
+
+
+def _layernorm(p, x, eps=1e-6):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * p["g"] + p["b"]
+
+
+def _mha(p, x, mask):
+    """Masked multi-head self-attention.  x: [B,H,D], mask: [B,H]."""
+    B, H, D = x.shape
+    dh = D // N_HEADS
+    qkv = _dense(p["qkv"], x)  # [B,H,3D]
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    q = q.reshape(B, H, N_HEADS, dh).transpose(0, 2, 1, 3)
+    k = k.reshape(B, H, N_HEADS, dh).transpose(0, 2, 1, 3)
+    v = v.reshape(B, H, N_HEADS, dh).transpose(0, 2, 1, 3)
+    scores = jnp.einsum("bnid,bnjd->bnij", q, k) / np.sqrt(dh)
+    neg = jnp.finfo(scores.dtype).min
+    scores = jnp.where(mask[:, None, None, :] > 0, scores, neg)
+    att = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bnij,bnjd->bnid", att, v)
+    out = out.transpose(0, 2, 1, 3).reshape(B, H, D)
+    return _dense(p["o"], out)
+
+
+def _encoder(trunk: PyTree, x: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """Pre-LN Transformer encoder + masked mean-pool + MLP head -> [B]."""
+    for layer in trunk["layers"]:
+        x = x + _mha(layer, _layernorm(layer["ln1"], x), mask)
+        h = _layernorm(layer["ln2"], x)
+        h = _dense(layer["ff2"], jax.nn.gelu(_dense(layer["ff1"], h)))
+        x = x + h
+    x = _layernorm(trunk["ln_f"], x)
+    denom = jnp.maximum(jnp.sum(mask, axis=-1, keepdims=True), 1.0)
+    pooled = jnp.sum(x * mask[..., None], axis=1) / denom  # [B, D]
+    h = jax.nn.gelu(_dense(trunk["head"][0], pooled))
+    h = jax.nn.gelu(_dense(trunk["head"][1], h))
+    return _dense(trunk["head"][2], h)[..., 0]
+
+
+def apply_hierarchical(params: PyTree, feats: jnp.ndarray, mask: jnp.ndarray):
+    """feats: [B, H, F], mask: [B, H] -> normalized bandwidth [B]."""
+    x = _dense(params["embed"], feats)
+    return _encoder(params["trunk"], x, mask)
+
+
+def apply_naive(params: PyTree, ids: jnp.ndarray, mask: jnp.ndarray):
+    """ids: [B, K] int32 GPU identifiers, mask: [B, K] -> normalized bw [B]."""
+    x = params["id_embed"][ids]
+    return _encoder(params["trunk"], x, mask)
+
+
+# ---------------------------------------------------------------------------
+# Predictor: the deployable surrogate B̂(S)
+# ---------------------------------------------------------------------------
+
+def _round_up_pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
+class SurrogatePredictor:
+    """Deployable B̂(S): Stage-1 exact lookup for single-host allocations,
+    Stage-2 Transformer for multi-host ones (Fig. 4).
+
+    Batched evaluation pads the batch to a power of two so the jitted apply
+    function compiles only O(log B_max) times.
+    """
+
+    def __init__(
+        self,
+        cluster: Cluster,
+        tables: IntraHostTables,
+        params: PyTree,
+        naive: bool = False,
+        max_k: Optional[int] = None,
+    ):
+        self.cluster = cluster
+        self.tables = tables
+        self.params = params
+        self.naive = naive
+        self.max_k = max_k or cluster.n_gpus
+        self.n_model_calls = 0      # instrumentation for Fig. 8
+        self.predict_seconds = 0.0  # cumulative surrogate-inference time
+        if naive:
+            self._apply = jax.jit(apply_naive)
+        else:
+            self._apply = jax.jit(apply_hierarchical)
+
+    # hierarchical stage dispatch --------------------------------------------
+
+    def predict(self, subsets: Sequence[Sequence[int]]) -> np.ndarray:
+        """B̂ for a batch of allocations (GB/s, denormalized)."""
+        t0 = time.time()
+        out = np.zeros((len(subsets),), np.float64)
+        model_idx: List[int] = []
+        model_subsets: List[Sequence[int]] = []
+        for i, s in enumerate(subsets):
+            if not self.naive and len(self.cluster.partition_by_host(s)) == 1:
+                out[i] = self.tables.lookup_global(list(s))  # Stage-1: exact
+            else:
+                model_idx.append(i)
+                model_subsets.append(s)
+        if model_subsets:
+            preds = self._predict_model(model_subsets)
+            for i, p in zip(model_idx, preds):
+                out[i] = p
+        self.predict_seconds += time.time() - t0
+        return out
+
+    def predict_one(self, subset: Sequence[int]) -> float:
+        return float(self.predict([subset])[0])
+
+    def _predict_model(self, subsets: Sequence[Sequence[int]]) -> np.ndarray:
+        B = len(subsets)
+        Bp = _round_up_pow2(max(B, 1))
+        if self.naive:
+            ids, mask = feat_lib.featurize_gpu_ids(self.cluster, subsets, self.max_k)
+            ids = np.pad(ids, ((0, Bp - B), (0, 0)))
+            mask_p = np.pad(mask, ((0, Bp - B), (0, 0)))
+            mask_p[B:, 0] = 1.0  # keep padded rows non-degenerate
+            preds = self._apply(self.params, jnp.asarray(ids), jnp.asarray(mask_p))
+        else:
+            feats, mask = feat_lib.featurize_batch(self.cluster, self.tables, subsets)
+            feats = np.pad(feats, ((0, Bp - B), (0, 0), (0, 0)))
+            mask_p = np.pad(mask, ((0, Bp - B), (0, 0)))
+            mask_p[B:, 0] = 1.0
+            preds = self._apply(self.params, jnp.asarray(feats), jnp.asarray(mask_p))
+        self.n_model_calls += B
+        return np.asarray(decode_bw(preds))[:B]

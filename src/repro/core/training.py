@@ -1,0 +1,162 @@
+"""Surrogate training: offline initialization + online adaptation (Sec. 4.1.2).
+
+The paper trains the hierarchical Transformer on a deliberately sparse set of
+inter-host measurements (250 samples in the headline results) and keeps it
+fresh by fine-tuning on bandwidths observed from live jobs.  Both paths share
+one jitted AdamW step.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import features as feat_lib
+from repro.core import surrogate as surr
+from repro.core.bandwidth_sim import BW_SCALE, BandwidthSimulator
+from repro.core.cluster import Cluster
+from repro.core.intra_host import IntraHostTables
+from repro.train.optimizer import AdamWConfig, adamw, cosine_schedule
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    steps: int = 3000
+    batch_size: int = 64
+    lr: float = 3e-3
+    weight_decay: float = 1e-4
+    warmup_steps: int = 100
+    seed: int = 0
+    log_every: int = 0  # 0 = silent
+
+
+def _mse_loss(apply_fn, params, x, mask, y):
+    pred = apply_fn(params, x, mask)
+    return jnp.mean(jnp.square(pred - y))
+
+
+def train_surrogate(
+    cluster: Cluster,
+    tables: IntraHostTables,
+    dataset: Sequence[Tuple[Sequence[int], float]],
+    config: TrainConfig = TrainConfig(),
+    naive: bool = False,
+    init_params: Optional[PyTree] = None,
+) -> Tuple[PyTree, Dict[str, float]]:
+    """Train hierarchical (or naive) surrogate on (allocation, bandwidth) pairs.
+
+    Returns (params, info) where info records wall time and final loss.
+    """
+    key = jax.random.PRNGKey(config.seed)
+    subsets = [list(s) for s, _ in dataset]
+    targets = np.asarray(
+        surr.encode_bw(np.asarray([bw for _, bw in dataset], np.float32))
+    )
+
+    if naive:
+        x, mask = feat_lib.featurize_gpu_ids(cluster, subsets, cluster.n_gpus)
+        apply_fn = surr.apply_naive
+        params = init_params or surr.init_naive_params(key, cluster.n_gpus)
+    else:
+        x, mask = feat_lib.featurize_batch(cluster, tables, subsets)
+        apply_fn = surr.apply_hierarchical
+        params = init_params or surr.init_hierarchical_params(key)
+
+    x = jnp.asarray(x)
+    mask = jnp.asarray(mask)
+    targets = jnp.asarray(targets)
+    n = len(subsets)
+
+    opt_cfg = AdamWConfig(
+        lr=config.lr, weight_decay=config.weight_decay, grad_clip_norm=1.0
+    )
+    opt_init, opt_update = adamw(
+        opt_cfg, cosine_schedule(config.steps, config.warmup_steps)
+    )
+    opt_state = opt_init(params)
+
+    @jax.jit
+    def step(params, opt_state, idx):
+        xb, mb, yb = x[idx], mask[idx], targets[idx]
+        loss, grads = jax.value_and_grad(
+            lambda p: _mse_loss(apply_fn, p, xb, mb, yb)
+        )(params)
+        params, opt_state, metrics = opt_update(grads, opt_state, params)
+        return params, opt_state, loss
+
+    rng = np.random.default_rng(config.seed)
+    t0 = time.time()
+    loss = np.inf
+    for i in range(config.steps):
+        idx = jnp.asarray(rng.integers(0, n, size=min(config.batch_size, n)))
+        params, opt_state, loss = step(params, opt_state, idx)
+        if config.log_every and (i + 1) % config.log_every == 0:
+            print(f"  surrogate step {i + 1}/{config.steps} loss={float(loss):.5f}")
+    info = {
+        "train_seconds": time.time() - t0,
+        "final_loss": float(loss),
+        "n_samples": n,
+        "param_bytes": surr.param_bytes(params),
+    }
+    return params, info
+
+
+def online_finetune(
+    cluster: Cluster,
+    tables: IntraHostTables,
+    params: PyTree,
+    new_measurements: Sequence[Tuple[Sequence[int], float]],
+    steps: int = 200,
+    lr: float = 5e-4,
+    seed: int = 1,
+) -> PyTree:
+    """Online adaptation: a few low-LR steps on freshly observed bandwidths
+    (Sec. 4.2.2).  No architecture change, no full retraining."""
+    cfg = TrainConfig(steps=steps, lr=lr, warmup_steps=0, seed=seed)
+    params, _ = train_surrogate(
+        cluster, tables, new_measurements, cfg, init_params=params
+    )
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Accuracy metrics (Sec. 5.2): R^2 and MAPE
+# ---------------------------------------------------------------------------
+
+def evaluate_surrogate(
+    predictor: "surr.SurrogatePredictor",
+    dataset: Sequence[Tuple[Sequence[int], float]],
+) -> Dict[str, float]:
+    subsets = [list(s) for s, _ in dataset]
+    y = np.asarray([bw for _, bw in dataset], np.float64)
+    pred = predictor.predict(subsets)
+    resid = y - pred
+    ss_res = float(np.sum(resid**2))
+    ss_tot = float(np.sum((y - y.mean()) ** 2))
+    r2 = 1.0 - ss_res / max(ss_tot, 1e-12)
+    mape = float(np.mean(np.abs(resid) / np.maximum(np.abs(y), 1e-9))) * 100.0
+    return {"r2": r2, "mape": mape, "n": len(dataset)}
+
+
+def make_train_test_split(
+    sim: BandwidthSimulator,
+    n_train: int,
+    test_mult: int = 5,
+    seed: int = 0,
+) -> Tuple[List, List]:
+    """Paper protocol: test set is 5x the training set, all inter-host, and
+    disjoint from the training allocations."""
+    rng = np.random.default_rng(seed)
+    total = sim.build_dataset(n_train * (test_mult + 1), rng, noisy=True)
+    train = total[:n_train]
+    # test targets are *noiseless* ground truth: we grade the model against
+    # reality, not against one noisy measurement of it.
+    test = [(s, sim.true_bandwidth(s)) for s, _ in total[n_train:]]
+    return train, test

@@ -1,0 +1,17 @@
+"""Pallas TPU kernels for the perf-critical compute hot spots.
+
+Each kernel lives in its own subpackage with three files:
+  <name>.py — the pl.pallas_call kernel with explicit BlockSpec VMEM tiling
+  ops.py    — the public jit-able wrapper with backend dispatch + VJP
+  ref.py    — the pure-jnp oracle the kernel is validated against
+
+Kernels target TPU (MXU/VPU + VMEM pipelines) and are validated on CPU in
+interpret mode; model code selects the `reference` backend when lowering on
+non-TPU platforms (including the multi-pod dry-run).
+"""
+
+from repro.kernels.flash_attention.ops import attention
+from repro.kernels.rglru.ops import linear_scan
+from repro.kernels.rwkv6.ops import wkv
+
+__all__ = ["attention", "linear_scan", "wkv"]

@@ -1,0 +1,163 @@
+"""Flash attention for TPU in Pallas (pl.pallas_call + explicit BlockSpecs).
+
+TPU-native adaptation of FlashAttention: online-softmax tiling where the KV
+axis is the innermost (sequential) grid dimension, so the running max / sum /
+accumulator live in VMEM scratch across KV steps and q/k/v blocks stream
+HBM -> VMEM via the BlockSpec pipeline.  MXU alignment: block_q and block_kv
+are multiples of 128 and the contraction is over head_dim (128/256 for the
+assigned archs).
+
+Supports: GQA (kv-head indexed as q_head // group via the BlockSpec index
+map — no materialized head broadcast), causal masking, sliding-window
+attention (Mistral/Gemma2 local layers), and logit soft-capping (Gemma2).
+
+Layouts: q [B, H_q, S_q, D], k/v [B, H_kv, S_k, D] — heads-major so that a
+(S, D) tile is contiguous in the two minor dimensions.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_KV = 128
+
+
+def _attn_kernel(
+    q_ref,    # [1, 1, block_q, D]
+    k_ref,    # [1, 1, block_kv, D]
+    v_ref,    # [1, 1, block_kv, D]
+    o_ref,    # [1, 1, block_q, D]
+    m_ref,    # scratch [block_q, 1] running max
+    l_ref,    # scratch [block_q, 1] running sum
+    acc_ref,  # scratch [block_q, D] fp32 accumulator
+    *,
+    causal: bool,
+    window: Optional[int],
+    softcap: Optional[float],
+    scale: float,
+    block_q: int,
+    block_kv: int,
+    n_kv_blocks: int,
+    q_offset: int,
+):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale       # [bq, D]
+    k = k_ref[0, 0].astype(jnp.float32)               # [bkv, D]
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )                                                 # [bq, bkv]
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+
+    # positional mask (causal / sliding window)
+    row = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) + q_offset
+    col = ki * block_kv + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = jnp.ones_like(s, dtype=jnp.bool_)
+    if causal:
+        mask &= col <= row
+    if window is not None:
+        mask &= col > row - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]                               # [bq, 1]
+    m_cur = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    # guard fully-masked rows: exp(NEG_INF - NEG_INF) would be exp(0)=1
+    p = jnp.exp(s - jnp.where(m_new <= NEG_INF / 2, 0.0, m_new))
+    p = jnp.where(mask, p, 0.0)
+    alpha = jnp.exp(m_prev - jnp.where(m_new <= NEG_INF / 2, 0.0, m_new))
+    alpha = jnp.where(m_prev <= NEG_INF / 2, 0.0, alpha)
+
+    l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=-1, keepdims=True)
+    v = v_ref[0, 0].astype(jnp.float32)               # [bkv, D]
+    pv = jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    acc_ref[...] = alpha * acc_ref[...] + pv
+    m_ref[...] = m_new
+
+    @pl.when(ki == n_kv_blocks - 1)
+    def _finalize():
+        l = l_ref[...]
+        o_ref[0, 0, :, :] = (
+            acc_ref[...] / jnp.where(l == 0.0, 1.0, l)
+        ).astype(o_ref.dtype)
+
+
+def flash_attention_fwd(
+    q: jnp.ndarray,  # [B, H_q, S_q, D]
+    k: jnp.ndarray,  # [B, H_kv, S_k, D]
+    v: jnp.ndarray,  # [B, H_kv, S_k, D]
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_kv: int = DEFAULT_BLOCK_KV,
+    q_offset: int = 0,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Pallas flash attention forward.  Returns [B, H_q, S_q, D]."""
+    B, H_q, S_q, D = q.shape
+    _, H_kv, S_k, _ = k.shape
+    assert H_q % H_kv == 0
+    group = H_q // H_kv
+    from repro.kernels.rglru.rglru import largest_divisor_block
+
+    block_q = largest_divisor_block(S_q, block_q)
+    block_kv = largest_divisor_block(S_k, block_kv)
+    n_q_blocks = S_q // block_q
+    n_kv_blocks = S_k // block_kv
+    grid = (B, H_q, n_q_blocks, n_kv_blocks)
+
+    kernel = functools.partial(
+        _attn_kernel,
+        causal=causal,
+        window=window,
+        softcap=softcap,
+        scale=1.0 / (D**0.5),
+        block_q=block_q,
+        block_kv=block_kv,
+        n_kv_blocks=n_kv_blocks,
+        q_offset=q_offset,
+    )
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, D), lambda b, h, qi, ki: (b, h, qi, 0)),
+            pl.BlockSpec(
+                (1, 1, block_kv, D), lambda b, h, qi, ki: (b, h // group, ki, 0)
+            ),
+            pl.BlockSpec(
+                (1, 1, block_kv, D), lambda b, h, qi, ki: (b, h // group, ki, 0)
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, block_q, D), lambda b, h, qi, ki: (b, h, qi, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, H_q, S_q, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,105 @@
+"""Public attention op: Pallas kernel on TPU, jnp oracle elsewhere.
+
+``attention(...)`` takes [B, S, H, D]-layout tensors (the model-side layout),
+handles the transpose to the kernel's heads-major layout, and provides a
+``custom_vjp`` whose forward is the flash kernel and whose backward is the
+(recompute-based) reference gradient — the O(S^2) score matrix is never
+materialized in the forward pass.
+
+Backend selection:
+  * backend="pallas"     — TPU compiled kernel (the deployment target)
+  * backend="interpret"  — Pallas interpret mode (CPU correctness runs/tests)
+  * backend="reference"  — pure-jnp XLA path (CPU smoke tests + the multi-pod
+                            dry-run, where CPU devices stand in for TPUs)
+  * backend="auto"       — pallas on TPU, reference otherwise
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import ref
+from repro.kernels.flash_attention.flash_attention import flash_attention_fwd
+
+
+def _default_backend() -> str:
+    return "pallas" if jax.default_backend() == "tpu" else "reference"
+
+
+@functools.partial(
+    jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7)
+)
+def _flash_attn(q, k, v, causal, window, softcap, q_offset, interpret):
+    # [B, S, H, D] -> [B, H, S, D] for the kernel
+    out = flash_attention_fwd(
+        q.transpose(0, 2, 1, 3),
+        k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3),
+        causal=causal,
+        window=window,
+        softcap=softcap,
+        q_offset=q_offset,
+        interpret=interpret,
+    )
+    return out.transpose(0, 2, 1, 3)
+
+
+def _flash_attn_fwd(q, k, v, causal, window, softcap, q_offset, interpret):
+    out = _flash_attn(q, k, v, causal, window, softcap, q_offset, interpret)
+    return out, (q, k, v)
+
+
+def _flash_attn_bwd(causal, window, softcap, q_offset, interpret, res, g):
+    # Recompute-based backward via the reference implementation (XLA).
+    # Correct for all kernel options; a dedicated Pallas backward is a
+    # further optimization, not a correctness requirement.
+    q, k, v = res
+    _, vjp = jax.vjp(
+        lambda q_, k_, v_: ref.mha_reference(
+            q_, k_, v_, causal=causal, window=window, softcap=softcap,
+            q_offset=q_offset,
+        ),
+        q, k, v,
+    )
+    return vjp(g)
+
+
+_flash_attn.defvjp(_flash_attn_fwd, _flash_attn_bwd)
+
+
+def attention(
+    q: jnp.ndarray,  # [B, S_q, H_q, D]
+    k: jnp.ndarray,  # [B, S_k, H_kv, D]
+    v: jnp.ndarray,  # [B, S_k, H_kv, D]
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    q_offset: int = 0,
+    kv_len: Optional[jnp.ndarray] = None,
+    backend: str = "auto",
+) -> jnp.ndarray:
+    """Grouped-query attention with optional sliding window / soft-capping."""
+    if backend == "auto":
+        backend = _default_backend()
+    if backend == "reference" or kv_len is not None:
+        # variable-length decode masking stays on the XLA path
+        import os
+
+        threshold = int(os.environ.get("REPRO_ATTN_CHUNK_THRESHOLD",
+                                       ref.CHUNK_THRESHOLD))
+        if kv_len is None and q.shape[1] * k.shape[1] > threshold:
+            return ref.mha_chunked(
+                q, k, v, causal=causal, window=window, softcap=softcap,
+                q_offset=q_offset,
+            )
+        return ref.mha_reference(
+            q, k, v, causal=causal, window=window, softcap=softcap,
+            q_offset=q_offset, kv_len=kv_len,
+        )
+    interpret = backend == "interpret"
+    return _flash_attn(q, k, v, causal, window, softcap, q_offset, interpret)

@@ -1,0 +1,125 @@
+"""Pure-jnp oracle for flash attention (GQA / causal / sliding / softcap).
+
+This is both the correctness reference for the Pallas kernel (tests compare
+against it in interpret mode) and the XLA lowering path used by the models
+when running on CPU or in the multi-pod dry-run (kernels target TPU).
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _bf16_wire() -> bool:
+    """Perf knob (§Perf iteration): keep attention inputs in bf16 through
+    any GSPMD-inserted collectives and let the MXU accumulate in fp32 via
+    preferred_element_type, instead of casting to fp32 *before* the einsum
+    (which puts 4-byte activations on the ICI for sequence-parallel
+    gathers).  Numerics match the Pallas kernel's bf16-in/fp32-accumulate."""
+    return os.environ.get("REPRO_ATTN_BF16_WIRE", "0") == "1"
+
+
+def attention_mask(
+    s_q: int,
+    s_k: int,
+    causal: bool,
+    window: Optional[int],
+    q_offset: int = 0,
+) -> jnp.ndarray:
+    """[s_q, s_k] boolean mask; True = attend.
+
+    ``q_offset`` positions the query block inside the full sequence (used for
+    decode where s_q=1 sits at position cache_len-1).
+    """
+    iq = jnp.arange(s_q)[:, None] + q_offset
+    jk = jnp.arange(s_k)[None, :]
+    mask = jnp.ones((s_q, s_k), bool)
+    if causal:
+        mask &= jk <= iq
+    if window is not None:
+        mask &= jk > iq - window
+    return mask
+
+
+def mha_reference(
+    q: jnp.ndarray,  # [B, S_q, H_q, D]
+    k: jnp.ndarray,  # [B, S_k, H_kv, D]
+    v: jnp.ndarray,  # [B, S_k, H_kv, D]
+    causal: bool = True,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    q_offset: int = 0,
+    kv_len: Optional[jnp.ndarray] = None,  # [B] valid KV lengths (decode)
+) -> jnp.ndarray:
+    """Grouped-query attention, O(S^2) reference.  Returns [B, S_q, H_q, D]."""
+    B, S_q, H_q, D = q.shape
+    _, S_k, H_kv, _ = k.shape
+    assert H_q % H_kv == 0, (H_q, H_kv)
+    group = H_q // H_kv
+    scale = 1.0 / jnp.sqrt(jnp.asarray(D, jnp.float32))
+
+    # GQA via a grouped einsum — the KV tensors are never materialized at
+    # q-head width (an 8x cache blow-up for 64q/8kv decode otherwise).
+    if _bf16_wire():
+        qf = (q * jnp.asarray(scale, q.dtype)).reshape(B, S_q, H_kv, group, D)
+        scores = jnp.einsum("bqhgd,bkhd->bhgqk", qf, k,
+                            preferred_element_type=jnp.float32)
+    else:
+        qf = (q.astype(jnp.float32) * scale).reshape(B, S_q, H_kv, group, D)
+        scores = jnp.einsum("bqhgd,bkhd->bhgqk", qf, k.astype(jnp.float32))
+    if softcap is not None:
+        scores = softcap * jnp.tanh(scores / softcap)
+    mask = attention_mask(S_q, S_k, causal, window, q_offset)[None, None, None]
+    if kv_len is not None:
+        valid = jnp.arange(S_k)[None, :] < kv_len[:, None]  # [B, S_k]
+        mask = mask & valid[:, None, None, None, :]
+    scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    if _bf16_wire():
+        out = jnp.einsum("bhgqk,bkhd->bqhgd", probs.astype(q.dtype), v,
+                         preferred_element_type=jnp.float32)
+    else:
+        out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v.astype(jnp.float32))
+    return out.reshape(B, S_q, H_q, D).astype(q.dtype)
+
+
+# Above this many score elements per (batch, head), the XLA path switches to
+# a q-chunked scan so the S_q x S_k matrix is never fully materialized
+# (flash-style memory behaviour for the reference backend; exact math).
+CHUNK_THRESHOLD = 4096 * 4096
+CHUNK_Q = 1024
+
+
+def mha_chunked(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    causal: bool = True,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    q_offset: int = 0,
+    chunk_q: int = CHUNK_Q,
+) -> jnp.ndarray:
+    """Exact attention via lax.map over query chunks (O(chunk*S_k) memory)."""
+    B, S_q, H_q, D = q.shape
+    cq = chunk_q
+    while S_q % cq:
+        cq -= 1
+    n_chunks = S_q // cq
+    qc = q.reshape(B, n_chunks, cq, H_q, D).transpose(1, 0, 2, 3, 4)
+
+    def one(args):
+        i, q_i = args
+        return mha_reference(
+            q_i, k, v, causal=causal, window=window, softcap=softcap,
+            q_offset=q_offset + i * cq,
+        )
+
+    out = jax.lax.map(one, (jnp.arange(n_chunks), qc))
+    return out.transpose(1, 0, 2, 3, 4).reshape(B, S_q, H_q, D)

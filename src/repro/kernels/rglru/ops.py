@@ -1,0 +1,82 @@
+"""Public RG-LRU scan op with backend dispatch and custom VJP.
+
+The VJP of the diagonal recurrence is itself a (reversed) diagonal
+recurrence:  with  h_t = a_t h_{t-1} + b_t  and upstream dh_t:
+
+    g_t   = dh_t + a_{t+1} g_{t+1}          (reverse scan)
+    db_t  = g_t
+    da_t  = g_t * h_{t-1}
+    dh0   = a_1 g_1
+
+so the backward pass reuses the same kernel with time-reversed inputs.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rglru import ref
+from repro.kernels.rglru.rglru import rglru_scan
+
+
+def _default_backend() -> str:
+    return "pallas" if jax.default_backend() == "tpu" else "reference"
+
+
+def _scan_impl(a, b, h0, backend: str):
+    if backend == "reference":
+        return ref.linear_scan_reference(a, b, h0)
+    return rglru_scan(a, b, h0, interpret=(backend == "interpret"))
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def _scan(a, b, h0, backend):
+    return _scan_impl(a, b, h0, backend)
+
+
+def _scan_fwd(a, b, h0, backend):
+    h, hn = _scan_impl(a, b, h0, backend)
+    return (h, hn), (a, h, h0)
+
+
+def _scan_bwd(backend, res, grads):
+    a, h, h0 = res
+    dh, dhn = grads
+    dh = dh.astype(jnp.float32)
+    dh = dh.at[:, -1].add(dhn.astype(jnp.float32))
+    # reverse scan: g_t = dh_t + a_{t+1} g_{t+1}
+    a_rev = jnp.flip(a, axis=1)
+    a_shift = jnp.concatenate(
+        [jnp.ones_like(a_rev[:, :1]), a_rev[:, :-1]], axis=1
+    )  # time-reversed a_{t+1}
+    g_rev, _ = _scan_impl(a_shift, jnp.flip(dh, axis=1), None, backend)
+    g = jnp.flip(g_rev, axis=1).astype(jnp.float32)
+    h_prev = jnp.concatenate([h0[:, None], h[:, :-1]], axis=1).astype(jnp.float32)
+    da = (g * h_prev).astype(a.dtype)
+    db = g.astype(a.dtype)
+    dh0 = (g[:, 0] * a[:, 0].astype(jnp.float32)).astype(h0.dtype)
+    return da, db, dh0
+
+
+_scan.defvjp(_scan_fwd, _scan_bwd)
+
+
+def linear_scan(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    h0: Optional[jnp.ndarray] = None,
+    *,
+    backend: str = "auto",
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Differentiable diagonal linear recurrence h_t = a_t h_{t-1} + b_t.
+
+    Returns (h [B,T,C], h_final [B,C])."""
+    if backend == "auto":
+        backend = _default_backend()
+    if h0 is None:
+        h0 = jnp.zeros((a.shape[0], a.shape[2]), a.dtype)
+    return _scan(a, b, h0, backend)

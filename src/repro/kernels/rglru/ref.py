@@ -1,0 +1,58 @@
+"""Pure-jnp oracle for the RG-LRU diagonal linear recurrence (Griffin).
+
+The RG-LRU layer (arXiv:2402.19427) reduces to the diagonal recurrence
+
+    h_t = a_t * h_{t-1} + b_t
+
+with per-channel, data-dependent decay a_t in (0, 1] and gated input b_t.
+The gates are computed in the model layer (repro/models/rglru.py); the
+kernel/oracle implement only the scan, which is the sequential hot spot.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def linear_scan_reference(
+    a: jnp.ndarray,  # [B, T, C] decay in (0, 1]
+    b: jnp.ndarray,  # [B, T, C] input term
+    h0: Optional[jnp.ndarray] = None,  # [B, C] initial state
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (h [B, T, C], h_final [B, C]) via lax.scan (time-major)."""
+    B, T, C = a.shape
+    if h0 is None:
+        h0 = jnp.zeros((B, C), jnp.float32)
+    h0 = h0.astype(jnp.float32)
+
+    def step(h, ab):
+        a_t, b_t = ab
+        h = a_t.astype(jnp.float32) * h + b_t.astype(jnp.float32)
+        return h, h
+
+    at = a.transpose(1, 0, 2)
+    bt = b.transpose(1, 0, 2)
+    h_final, hs = jax.lax.scan(step, h0, (at, bt))
+    return hs.transpose(1, 0, 2).astype(a.dtype), h_final
+
+
+def linear_scan_associative(
+    a: jnp.ndarray, b: jnp.ndarray, h0: Optional[jnp.ndarray] = None
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """O(log T) alternative via associative_scan (cross-check in tests)."""
+    B, T, C = a.shape
+    a32 = a.astype(jnp.float32)
+    b32 = b.astype(jnp.float32)
+    if h0 is not None:
+        b32 = b32.at[:, 0].add(a32[:, 0] * h0)
+
+    def combine(x, y):
+        ax, bx = x
+        ay, by = y
+        return ax * ay, ay * bx + by
+
+    _, hs = jax.lax.associative_scan(combine, (a32, b32), axis=1)
+    return hs.astype(a.dtype), hs[:, -1]

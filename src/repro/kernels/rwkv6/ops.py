@@ -1,0 +1,40 @@
+"""Public WKV6 op with backend dispatch.
+
+Gradients flow through the reference implementation (lax.scan autodiff) via
+custom_vjp-free dispatch: the Pallas kernel is used for inference/forward
+paths on TPU; training differentiates the scan reference (which XLA
+optimizes well for this recurrence).  This mirrors how RWKV production
+stacks treat the fused kernel (fwd-optimized) vs training (autodiff scan).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rwkv6 import ref
+from repro.kernels.rwkv6.rwkv6 import wkv6 as wkv6_kernel
+
+
+def _default_backend() -> str:
+    return "pallas" if jax.default_backend() == "tpu" else "reference"
+
+
+def wkv(
+    r: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    w: jnp.ndarray,
+    u: jnp.ndarray,
+    s0: Optional[jnp.ndarray] = None,
+    *,
+    backend: str = "auto",
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """RWKV-6 WKV.  Returns (y [B,T,H,V], s_final [B,H,K,V])."""
+    if backend == "auto":
+        backend = _default_backend()
+    if backend == "reference":
+        return ref.wkv6_reference(r, k, v, w, u, s0)
+    return wkv6_kernel(r, k, v, w, u, s0, interpret=(backend == "interpret"))

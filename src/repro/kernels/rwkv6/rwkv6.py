@@ -1,0 +1,113 @@
+"""Pallas TPU kernel for the RWKV-6 WKV recurrence.
+
+TPU adaptation: the per-head state S [K, V] (64x64 fp32 = 16 KB) lives in
+VMEM scratch across sequential time blocks; (r, k, v, w) tiles stream
+through the BlockSpec pipeline.  Each timestep performs a rank-1 update and
+a [K]x[K,V] contraction — small matmuls that map onto the MXU when K=V=64
+(padded to the 128 lane width by Mosaic).  Heads and batch tile the parallel
+grid axes.
+
+Grid: (B, H, T // block_t); carry resets at t_block == 0.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_T = 64
+
+
+def _wkv6_kernel(
+    r_ref,   # [1, block_t, 1, K]
+    k_ref,   # [1, block_t, 1, K]
+    v_ref,   # [1, block_t, 1, V]
+    w_ref,   # [1, block_t, 1, K]
+    u_ref,   # [1, K]
+    s0_ref,  # [1, 1, K, V]
+    y_ref,   # [1, block_t, 1, V]
+    sn_ref,  # [1, 1, K, V]
+    s_ref,   # scratch [K, V] fp32
+    *,
+    block_t: int,
+    n_t_blocks: int,
+):
+    ti = pl.program_id(2)
+
+    @pl.when(ti == 0)
+    def _init():
+        s_ref[...] = s0_ref[0, 0].astype(jnp.float32)
+
+    u = u_ref[0, :].astype(jnp.float32)  # [K]
+
+    def body(t, _):
+        r_t = r_ref[0, t, 0, :].astype(jnp.float32)  # [K]
+        k_t = k_ref[0, t, 0, :].astype(jnp.float32)  # [K]
+        v_t = v_ref[0, t, 0, :].astype(jnp.float32)  # [V]
+        w_t = w_ref[0, t, 0, :].astype(jnp.float32)  # [K]
+        S = s_ref[...]                               # [K, V]
+        kv = k_t[:, None] * v_t[None, :]             # rank-1 [K, V]
+        y = (r_t[:, None] * (S + u[:, None] * kv)).sum(axis=0)  # [V]
+        y_ref[0, t, 0, :] = y.astype(y_ref.dtype)
+        s_ref[...] = w_t[:, None] * S + kv
+        return 0
+
+    jax.lax.fori_loop(0, block_t, body, 0)
+
+    @pl.when(ti == n_t_blocks - 1)
+    def _final():
+        sn_ref[0, 0] = s_ref[...].astype(sn_ref.dtype)
+
+
+def wkv6(
+    r: jnp.ndarray,  # [B, T, H, K]
+    k: jnp.ndarray,  # [B, T, H, K]
+    v: jnp.ndarray,  # [B, T, H, V]
+    w: jnp.ndarray,  # [B, T, H, K]
+    u: jnp.ndarray,  # [H, K]
+    s0: Optional[jnp.ndarray] = None,  # [B, H, K, V]
+    *,
+    block_t: int = DEFAULT_BLOCK_T,
+    interpret: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Pallas WKV6.  Returns (y [B,T,H,V], s_final [B,H,K,V])."""
+    B, T, H, K = r.shape
+    V = v.shape[-1]
+    if s0 is None:
+        s0 = jnp.zeros((B, H, K, V), jnp.float32)
+    from repro.kernels.rglru.rglru import largest_divisor_block
+
+    block_t = largest_divisor_block(T, block_t)
+    grid = (B, H, T // block_t)
+
+    kernel = functools.partial(
+        _wkv6_kernel, block_t=block_t, n_t_blocks=T // block_t
+    )
+    y, sn = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_t, 1, K), lambda bi, hi, ti: (bi, ti, hi, 0)),
+            pl.BlockSpec((1, block_t, 1, K), lambda bi, hi, ti: (bi, ti, hi, 0)),
+            pl.BlockSpec((1, block_t, 1, V), lambda bi, hi, ti: (bi, ti, hi, 0)),
+            pl.BlockSpec((1, block_t, 1, K), lambda bi, hi, ti: (bi, ti, hi, 0)),
+            pl.BlockSpec((1, K), lambda bi, hi, ti: (hi, 0)),
+            pl.BlockSpec((1, 1, K, V), lambda bi, hi, ti: (bi, hi, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_t, 1, V), lambda bi, hi, ti: (bi, ti, hi, 0)),
+            pl.BlockSpec((1, 1, K, V), lambda bi, hi, ti: (bi, hi, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, T, H, V), r.dtype),
+            jax.ShapeDtypeStruct((B, H, K, V), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((K, V), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w, u, s0)
+    return y, sn

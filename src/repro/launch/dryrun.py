@@ -1,0 +1,233 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) on the
+production meshes, print memory/cost analysis, emit roofline rows.
+
+The two lines above MUST precede any jax-importing module: jax pins the
+device count at first backend init, and the dry-run needs 512 placeholder
+CPU devices to build the (2, 16, 16) multi-pod mesh.  (Tests and benches
+must NOT inherit this — it is set here only, never in conftest/pyproject.)
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma-7b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod both \
+      --out results/dryrun
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCHS, get_config
+from repro.launch import hlo_analysis, roofline, shapes as shp, steps
+from repro.launch.mesh import make_production_mesh
+
+
+def _cell_costs(cfg, cell, mesh, pod_size, strategy, remat_policy,
+                rules_override, grad_accum=1):
+    """Exact per-device (flops, bytes, ici, dcn, by_kind) via two-point
+    extrapolation over UNROLLED reduced-depth compiles.
+
+    XLA's cost_analysis tallies while-loop bodies once, so the loop-form
+    module undercounts by ~n_groups.  With unrolled scans the counts are
+    exact and linear in depth: cost(k groups) = outside + k * body.  Two
+    cheap compiles at 1 and 2 groups (tail layers included in both) give
+    the exact body delta; the full total follows analytically.
+    """
+    import dataclasses as _dc
+
+    p = len(cfg.mixer_pattern)
+    n_groups, n_tail = cfg.n_groups_and_tail()
+
+    def variant(groups):
+        kw = {"n_layers": groups * p + n_tail}
+        if cfg.is_encoder_decoder:
+            kw["n_encoder_layers"] = groups
+        return _dc.replace(cfg, **kw)
+
+    def measure(vcfg, unroll):
+        step = steps.build_step(vcfg, cell, mesh, strategy=strategy,
+                                remat_policy=remat_policy,
+                                rules_override=rules_override,
+                                scan_unroll=unroll,
+                                grad_accum=grad_accum)
+        compiled = step.compile()
+        cost = compiled.cost_analysis()
+        if isinstance(cost, list):
+            cost = cost[0]
+        coll = hlo_analysis.collective_summary(compiled.as_text(),
+                                               pod_size=pod_size)
+        return {
+            "flops": float(cost.get("flops", 0.0)),
+            "bytes": float(cost.get("bytes accessed", 0.0)),
+            "ici": float(coll["ici_bytes"]),
+            "dcn": float(coll["dcn_bytes"]),
+            "by_kind": coll["by_kind"],
+        }
+
+    c1 = measure(variant(1), unroll=1 + (1 if n_tail else 0))
+    if n_groups <= 1:
+        return c1
+    c2 = measure(variant(2), unroll=2 + (1 if n_tail else 0))
+    extra = n_groups - 1
+    out = {}
+    for key in ("flops", "bytes", "ici", "dcn"):
+        body = c2[key] - c1[key]
+        # GSPMD occasionally picks different collectives at tiny depths;
+        # clamp so extrapolation never dips below the 1-group floor.
+        out[key] = max(c1[key] + extra * body, c1[key] if body >= 0 else 0.0)
+    by_kind = {}
+    for k in set(c1["by_kind"]) | set(c2["by_kind"]):
+        b1 = c1["by_kind"].get(k, 0)
+        b2 = c2["by_kind"].get(k, 0)
+        by_kind[k] = max(int(b1 + extra * (b2 - b1)), 0)
+    out["by_kind"] = by_kind
+    return out
+
+
+def run_cell(
+    arch: str,
+    shape: str,
+    multi_pod: bool,
+    strategy: str = "fsdp_tp",
+    remat_policy: str = "nothing",
+    verbose: bool = True,
+    rules_override=None,
+):
+    """Lower+compile one cell.  Returns (roofline_report, record_dict)."""
+    cfg = get_config(arch)
+    cell = shp.SHAPES[shape]
+    skip = shp.cell_skip_reason(arch, shape)
+    if skip:
+        return None, {"arch": arch, "shape": shape, "status": "skipped",
+                      "reason": skip}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    n_chips = mesh.devices.size
+    pod_size = 256
+    if cell.kind == "decode" and strategy == "fsdp_tp":
+        strategy = "serve_2d"  # weight-stationary decode default
+    # (1) loop-form full-depth compile: proves the sharding config is
+    # coherent at full scale and yields the realistic memory analysis.
+    t0 = time.time()
+    step = steps.build_step(cfg, cell, mesh, strategy=strategy,
+                            remat_policy=remat_policy,
+                            rules_override=rules_override)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = step.compile()
+    t_compile = time.time() - t0
+    # (2) exact cost terms via unrolled reduced-depth extrapolation.
+    costs = _cell_costs(cfg, cell, mesh, pod_size, strategy, remat_policy,
+                        rules_override)
+    rep = roofline.analyze_from_costs(
+        arch, cfg, shape, cell.kind, mesh_name, n_chips,
+        costs, compiled, cell.global_batch, cell.seq_len,
+    )
+    mem = compiled.memory_analysis()
+    record = {
+        "arch": arch, "shape": shape, "mesh": mesh_name,
+        "strategy": strategy, "remat": remat_policy, "status": "ok",
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory_analysis": {
+            "argument_gb": getattr(mem, "argument_size_in_bytes", 0) / 2**30,
+            "output_gb": getattr(mem, "output_size_in_bytes", 0) / 2**30,
+            "temp_gb": getattr(mem, "temp_size_in_bytes", 0) / 2**30,
+            "alias_gb": getattr(mem, "alias_size_in_bytes", 0) / 2**30,
+        },
+        "cost_analysis": {
+            "flops": rep.hlo_flops, "bytes": rep.hlo_bytes,
+        },
+        "collectives": {
+            "ici_bytes": rep.ici_bytes, "dcn_bytes": rep.dcn_bytes,
+            "by_kind": rep.by_kind,
+        },
+        "roofline": rep.row(),
+    }
+    if verbose:
+        ma = record["memory_analysis"]
+        print(f"[{arch} x {shape} x {mesh_name}] lower={t_lower:.1f}s "
+              f"compile={t_compile:.1f}s")
+        print(f"  memory/device: args={ma['argument_gb']:.2f}G "
+              f"out={ma['output_gb']:.2f}G temp={ma['temp_gb']:.2f}G "
+              f"(aliased {ma['alias_gb']:.2f}G)")
+        print(f"  cost: {rep.hlo_flops/1e12:.2f} TFLOP, "
+              f"{rep.hlo_bytes/2**30:.2f} GiB touched; collectives: "
+              f"ICI {rep.ici_bytes/2**20:.1f} MiB, DCN {rep.dcn_bytes/2**20:.1f} MiB")
+        print(f"  roofline: compute={1e3*rep.compute_s:.1f}ms "
+              f"memory={1e3*rep.memory_s:.1f}ms "
+              f"collective={1e3*rep.collective_s:.1f}ms "
+              f"-> {rep.bottleneck}-bound, useful={rep.useful_ratio:.2f}, "
+              f"roofline={100*rep.roofline_fraction:.1f}%")
+    return rep, record
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", choices=["off", "on", "both"], default="off")
+    ap.add_argument("--strategy", default="fsdp_tp")
+    ap.add_argument("--remat", default="nothing")
+    ap.add_argument("--out", default=None, help="JSONL output path prefix")
+    args = ap.parse_args()
+
+    assert len(jax.devices()) == 512, (
+        "dry-run requires 512 placeholder devices; do not import jax before "
+        "this module sets XLA_FLAGS"
+    )
+
+    cells = (
+        shp.all_cells() if args.all
+        else [(args.arch or "gemma-7b", args.shape or "train_4k")]
+    )
+    pods = {"off": [False], "on": [True], "both": [False, True]}[args.multi_pod]
+
+    out_path = None
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        out_path = args.out + ".jsonl"
+        open(out_path, "w").close()  # truncate
+
+    reports, records = [], []
+    failures = []
+    for arch, shape in cells:
+        for mp in pods:
+            try:
+                rep, rec = run_cell(arch, shape, mp, args.strategy, args.remat)
+            except Exception as e:  # a failure here is a bug in the system
+                traceback.print_exc()
+                rec = {"arch": arch, "shape": shape,
+                       "mesh": "2x16x16" if mp else "16x16",
+                       "status": "FAILED", "error": f"{type(e).__name__}: {e}"}
+                rep = None
+                failures.append(rec)
+            records.append(rec)
+            if rep:
+                reports.append(rep)
+            if out_path:  # incremental flush: sweep progress survives crashes
+                with open(out_path, "a") as f:
+                    f.write(json.dumps(rec) + "\n")
+            if rec["status"] == "skipped":
+                print(f"[{arch} x {shape}] SKIPPED: {rec['reason']}")
+                break  # skip applies to both meshes
+
+    if reports:
+        print("\n" + roofline.format_table(reports))
+    if out_path:
+        print(f"\nwrote {len(records)} records to {out_path}")
+    if failures:
+        print(f"\n{len(failures)} FAILURES")
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

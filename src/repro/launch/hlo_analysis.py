@@ -1,0 +1,153 @@
+"""HLO analysis: collective-traffic extraction + roofline terms.
+
+``cost_analysis()`` gives FLOPs and HBM bytes of the compiled (post-SPMD,
+per-device) module but not collective traffic; we parse the HLO text and
+sum operand bytes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute, split by whether the op's replica groups
+cross the pod (DCN) axis or stay within a pod (ICI).
+
+Shapes in SPMD HLO are per-partition, so all numbers here are per-device.
+Calibration of these semantics is pinned by tests/test_roofline_calibration.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+COLLECTIVE_KINDS = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """'f32[128,1024]{1,0}' -> bytes."""
+    m = _SHAPE_RE.match(shape_str)
+    if not m:
+        return 0
+    dtype, dims = m.groups()
+    b = DTYPE_BYTES.get(dtype)
+    if b is None:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * b
+
+
+@dataclasses.dataclass
+class CollectiveOp:
+    kind: str
+    bytes: int
+    name: str
+    replica_groups: str
+
+
+def parse_collectives(hlo_text: str) -> List[CollectiveOp]:
+    """Extract collective ops + operand sizes from HLO text.
+
+    We take the *output* shape for all-gather/all-to-all (data received) and
+    the operand shape for all-reduce/reduce-scatter/collective-permute (data
+    sent) — a consistent per-device wire-traffic estimate.
+    """
+    ops: List[CollectiveOp] = []
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        m = re.match(r"%?([\w\.\-]+)\s*=\s*(.*)", s)
+        if not m:
+            continue
+        name, rhs = m.groups()
+        kind = None
+        for ck in COLLECTIVE_KINDS:
+            if re.search(rf"=?\s*{ck}\(", s) or rhs.startswith(ck) or (
+                f" {ck}(" in s
+            ):
+                kind = ck
+                break
+        # also match fused/typed forms like "all-reduce-start"
+        if kind is None:
+            for ck in COLLECTIVE_KINDS:
+                if f"{ck}-start(" in s:
+                    kind = ck
+                    break
+        if kind is None:
+            continue
+        # output shape(s): tuple or single, directly after '='
+        shape_part = rhs.split("=")[0]
+        shapes = _SHAPE_RE.findall(rhs.split(kind)[0])
+        total = 0
+        for dtype, dims in shapes:
+            total += _shape_bytes(f"{dtype}[{dims}]")
+        groups = ""
+        gm = re.search(r"replica_groups=(\{[^}]*\}+|\S+)", s)
+        if gm:
+            groups = gm.group(1)[:2000]
+        ops.append(CollectiveOp(kind, total, name, groups))
+    return ops
+
+
+def _parse_groups(groups: str) -> Optional[List[List[int]]]:
+    """'{{0,1},{2,3}}' -> [[0,1],[2,3]]; iota forms handled separately."""
+    if not groups or "maximal" in groups:
+        return None
+    if groups.startswith("[") :
+        return None  # iota tile form, handled by caller heuristics
+    inner = re.findall(r"\{([\d,\s]+)\}", groups)
+    out = []
+    for g in inner:
+        ids = [int(x) for x in g.split(",") if x.strip()]
+        if ids:
+            out.append(ids)
+    return out or None
+
+
+def split_by_fabric(
+    ops: List[CollectiveOp], pod_size: int
+) -> Tuple[int, int, Dict[str, int]]:
+    """-> (ici_bytes, dcn_bytes, by_kind).
+
+    A collective whose replica group spans device ids from different pods
+    (id // pod_size differs) rides the DCN; otherwise ICI.  Iota-form groups
+    that we cannot parse default to ICI unless they span the whole fleet.
+    """
+    ici = 0
+    dcn = 0
+    by_kind: Dict[str, int] = {}
+    for op in ops:
+        by_kind[op.kind] = by_kind.get(op.kind, 0) + op.bytes
+        groups = _parse_groups(op.replica_groups)
+        crosses = False
+        if groups:
+            for g in groups:
+                pods = {d // pod_size for d in g}
+                if len(pods) > 1:
+                    crosses = True
+                    break
+        if crosses:
+            dcn += op.bytes
+        else:
+            ici += op.bytes
+    return ici, dcn, by_kind
+
+
+def collective_summary(hlo_text: str, pod_size: int = 256) -> Dict:
+    ops = parse_collectives(hlo_text)
+    ici, dcn, by_kind = split_by_fabric(ops, pod_size)
+    return {
+        "n_collectives": len(ops),
+        "total_bytes": ici + dcn,
+        "ici_bytes": ici,
+        "dcn_bytes": dcn,
+        "by_kind": by_kind,
+    }

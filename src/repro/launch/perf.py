@@ -1,0 +1,208 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Perf-iteration driver: hypothesis -> change -> re-lower -> validate.
+
+Each named experiment is a set of knobs over the same cell; the driver
+compiles baseline + variants, prints the three roofline terms side by side,
+and appends a JSONL log consumed by EXPERIMENTS.md §Perf.
+
+  PYTHONPATH=src python -m repro.launch.perf --cell gemma-7b:train_4k \
+      --exp baseline bf16_wire rs_grads --out results/perf_gemma
+"""
+
+import argparse
+import json
+import time
+
+from repro.configs import get_config
+from repro.launch import shapes as shp, steps, roofline, hlo_analysis
+from repro.launch.dryrun import _cell_costs
+from repro.launch.mesh import make_production_mesh
+from repro.parallel import sharding as shd
+
+# ---------------------------------------------------------------------------
+# Experiment registry: name -> dict of knobs.
+#   env: environment variables set during lowering (trace-time knobs)
+#   strategy / rules_patch / remat / constrain_grads: builder knobs
+# ---------------------------------------------------------------------------
+
+EXPERIMENTS = {
+    "baseline": {},
+    # H1: fp32 activations ride the ICI for SP all-gathers; bf16-on-wire
+    # should ~halve attention-side collective bytes.
+    "bf16_wire": {"env": {"REPRO_ATTN_BF16_WIRE": "1"}},
+    # H2: constraining grads to the FSDP shards turns all-reduce(+slice)
+    # into reduce-scatter (~2x less gradient wire traffic).
+    "rs_grads": {"constrain_grads": True},
+    "bf16_wire+rs_grads": {"env": {"REPRO_ATTN_BF16_WIRE": "1"},
+                           "constrain_grads": True},
+    # H3: drop residual-stream sequence sharding (ablation — more memory,
+    # fewer gathers?)
+    "no_seq_shard": {"strategy": "fsdp_tp_noseq"},
+    # H4 (MoE): 2D expert sharding — experts on "model", expert-ff on
+    # "data"; expert weights never gathered (replaces per-layer FSDP
+    # gathers with token all-to-alls).
+    "moe_ep2d": {"rules_patch": {"experts": "model", "ff": "data",
+                                 "embed": None}},
+    "moe_ep2d+bf16_wire": {
+        "rules_patch": {"experts": "model", "ff": "data", "embed": None},
+        "env": {"REPRO_ATTN_BF16_WIRE": "1"},
+    },
+    "moe_ep2d+bf16_wire+rs_grads": {
+        "rules_patch": {"experts": "model", "ff": "data", "embed": None},
+        "env": {"REPRO_ATTN_BF16_WIRE": "1"},
+        "constrain_grads": True,
+    },
+    # H5: remat policy — save matmul outputs (less recompute, more memory)
+    "remat_dots": {"remat": "dots_with_no_batch_dims"},
+    # H6: chunk attention scores at train seq lens (peak-memory lever: the
+    # unchunked jnp path materializes fp32 S^2 scores per layer)
+    "chunked_attn": {"env": {"REPRO_ATTN_CHUNK_THRESHOLD": "2097152"}},
+    "chunked+bf16_wire": {
+        "env": {"REPRO_ATTN_CHUNK_THRESHOLD": "2097152",
+                "REPRO_ATTN_BF16_WIRE": "1"},
+    },
+    "chunked+bf16_wire+rs_grads": {
+        "env": {"REPRO_ATTN_CHUNK_THRESHOLD": "2097152",
+                "REPRO_ATTN_BF16_WIRE": "1"},
+        "constrain_grads": True,
+    },
+    # H7: pin the master-weight bf16 cast before the FSDP gather
+    "cast_barrier": {"env": {"REPRO_CAST_BARRIER": "1"}},
+    # H8: gradient sync in bf16 (2 bytes on the wire)
+    "grad_bf16": {"env": {"REPRO_GRAD_SYNC_BF16": "1"}},
+    "kitchen_sink": {
+        "env": {"REPRO_ATTN_CHUNK_THRESHOLD": "2097152",
+                "REPRO_ATTN_BF16_WIRE": "1",
+                "REPRO_CAST_BARRIER": "1",
+                "REPRO_GRAD_SYNC_BF16": "1"},
+        "constrain_grads": True,
+    },
+    "moe_kitchen_sink": {
+        "rules_patch": {"experts": "model", "ff": "data", "embed": None},
+        "env": {"REPRO_ATTN_CHUNK_THRESHOLD": "2097152",
+                "REPRO_ATTN_BF16_WIRE": "1",
+                "REPRO_CAST_BARRIER": "1",
+                "REPRO_GRAD_SYNC_BF16": "1"},
+        "constrain_grads": True,
+    },
+    # H9: Megatron-SP transition — gather activations (not weights) at the
+    # SP x TP conflict points.  sp_gather alone vs the no-gather ablation.
+    "sp_gather_off": {"env": {"REPRO_SP_GATHER": "0"}},
+    # H10: gradient accumulation — 8 microbatches shrink activation
+    # transients ~8x (the fit-in-HBM lever for 110B-class trains)
+    "accum8": {"grad_accum": 8},
+    "chunked+accum8": {
+        "env": {"REPRO_ATTN_CHUNK_THRESHOLD": "2097152"},
+        "grad_accum": 8,
+    },
+    # Final "optimized" configurations (what the post-hillclimb sweep uses)
+    "optimized": {
+        "env": {"REPRO_ATTN_CHUNK_THRESHOLD": "2097152",
+                "REPRO_ATTN_BF16_WIRE": "1"},
+    },
+    "optimized_moe": {
+        "rules_patch": {"experts": "model", "ff": "data", "embed": None},
+        "env": {"REPRO_ATTN_CHUNK_THRESHOLD": "2097152",
+                "REPRO_ATTN_BF16_WIRE": "1"},
+    },
+}
+
+
+def run_experiment(arch: str, shape: str, exp_name: str, multi_pod=False):
+    knobs = EXPERIMENTS[exp_name]
+    env = knobs.get("env", {})
+    old_env = {}
+    for k, v in env.items():
+        old_env[k] = os.environ.get(k)
+        os.environ[k] = v
+    try:
+        cfg = get_config(arch)
+        cell = shp.SHAPES[shape]
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        strategy = knobs.get(
+            "strategy", "serve_2d" if cell.kind == "decode" else "fsdp_tp"
+        )
+        rules = shd.STRATEGIES[strategy]()
+        rules.update(knobs.get("rules_patch", {}))
+        remat = knobs.get("remat", "nothing")
+        builder_kw = dict(
+            strategy=strategy, remat_policy=remat, rules_override=rules,
+        )
+        t0 = time.time()
+        step = steps.build_step(
+            cfg, cell, mesh,
+            constrain_grads=knobs.get("constrain_grads", False),
+            grad_accum=knobs.get("grad_accum", 1),
+            **builder_kw,
+        )
+        compiled = step.compile()
+        costs = _cell_costs(cfg, cell, mesh, 256, strategy, remat, rules,
+                            grad_accum=knobs.get("grad_accum", 1))
+        rep = roofline.analyze_from_costs(
+            arch, cfg, shape, cell.kind,
+            "2x16x16" if multi_pod else "16x16",
+            mesh.devices.size, costs, compiled,
+            cell.global_batch, cell.seq_len,
+        )
+        mem = compiled.memory_analysis()
+        return {
+            "experiment": exp_name,
+            "arch": arch, "shape": shape,
+            "wall_s": round(time.time() - t0, 1),
+            "compute_ms": 1e3 * rep.compute_s,
+            "memory_ms": 1e3 * rep.memory_s,
+            "collective_ms": 1e3 * rep.collective_s,
+            "bottleneck": rep.bottleneck,
+            "useful_ratio": rep.useful_ratio,
+            "roofline_frac": rep.roofline_fraction,
+            "temp_gb": getattr(mem, "temp_size_in_bytes", 0) / 2**30,
+            "ici_gb": rep.ici_bytes / 2**30,
+            "dcn_gb": rep.dcn_bytes / 2**30,
+        }
+    finally:
+        for k, v in old_env.items():
+            if v is None:
+                os.environ.pop(k, None)
+            else:
+                os.environ[k] = v
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", required=True, help="arch:shape")
+    ap.add_argument("--exp", nargs="+", default=["baseline"])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    arch, shape = args.cell.split(":")
+
+    results = []
+    for exp in args.exp:
+        try:
+            r = run_experiment(arch, shape, exp, args.multi_pod)
+        except Exception as e:
+            import traceback
+            traceback.print_exc()
+            r = {"experiment": exp, "arch": arch, "shape": shape,
+                 "error": f"{type(e).__name__}: {e}"}
+        results.append(r)
+        if "error" not in r:
+            print(f"[{exp:<28}] compute={r['compute_ms']:8.1f}ms "
+                  f"memory={r['memory_ms']:8.1f}ms "
+                  f"collective={r['collective_ms']:8.1f}ms "
+                  f"({r['bottleneck']}-bound) useful={r['useful_ratio']:.2f} "
+                  f"roofline={100 * r['roofline_frac']:.1f}% "
+                  f"temp={r['temp_gb']:.1f}G", flush=True)
+        if args.out:
+            os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+            with open(args.out + ".jsonl", "a") as f:
+                f.write(json.dumps(r) + "\n")
+
+
+if __name__ == "__main__":
+    main()

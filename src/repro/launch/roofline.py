@@ -1,0 +1,198 @@
+"""Roofline model for the dry-run: three terms per (arch x shape x mesh).
+
+Hardware constants (TPU v5e target):
+  peak compute   197 TFLOP/s bf16 per chip
+  HBM bandwidth  819 GB/s per chip
+  ICI links      ~50 GB/s per link (per chip, per direction)
+  DCN (inter-pod) ~25 GB/s per chip effective
+
+Terms (seconds, per step, per chip — SPMD modules are per-device):
+  compute    = HLO_FLOPs / 197e12
+  memory     = HLO_bytes  / 819e9
+  collective = ICI_bytes / 50e9  +  DCN_bytes / 25e9
+
+plus MODEL_FLOPS = 6 N D (dense) or 6 N_active D (MoE) per chip, and the
+usefulness ratio MODEL_FLOPS / HLO_FLOPs (catches remat/dispatch waste).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Dict, Optional
+
+from repro.configs.base import ModelConfig
+from repro.launch import hlo_analysis
+
+PEAK_FLOPS = 197e12       # bf16 per chip
+HBM_BW = 819e9            # bytes/s per chip
+ICI_BW = 50e9             # bytes/s per link
+DCN_BW = 25e9             # bytes/s per chip across pods (effective)
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    kind: str
+    n_chips: int
+    hlo_flops: float
+    hlo_bytes: float
+    ici_bytes: float
+    dcn_bytes: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops: float
+    useful_ratio: float
+    bottleneck: str
+    peak_memory_bytes: Optional[float] = None
+    by_kind: Optional[Dict[str, int]] = None
+
+    @property
+    def step_time_s(self) -> float:
+        """Optimistic no-overlap-needed estimate: max of the three terms."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful-compute / step-time vs peak: how close to roofline."""
+        if self.step_time_s <= 0:
+            return 0.0
+        return (self.model_flops / PEAK_FLOPS) / self.step_time_s
+
+    def row(self) -> Dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "kind": self.kind, "chips": self.n_chips,
+            "compute_ms": 1e3 * self.compute_s,
+            "memory_ms": 1e3 * self.memory_s,
+            "collective_ms": 1e3 * self.collective_s,
+            "bottleneck": self.bottleneck,
+            "useful_ratio": self.useful_ratio,
+            "roofline_frac": self.roofline_fraction,
+            "peak_mem_gb": (self.peak_memory_bytes or 0) / 2**30,
+        }
+
+
+def model_flops_per_step(cfg: ModelConfig, batch: int, seq: int, kind: str,
+                         n_chips: int) -> float:
+    """6*N*D (train) or 2*N*D (forward-only) per chip; MoE uses active N.
+
+    Encoder-decoder: the encoder processes the frame sequence while the
+    decoder processes only its (much shorter) token stream, so N*D splits
+    per stack — 6*(N_enc*D_frames + N_dec*D_dec) with D_dec bounded by the
+    decoder's native context.
+    """
+    mult = 6.0 if kind == "train" else 2.0
+    tokens = batch * (seq if kind in ("train", "prefill") else 1)
+    if cfg.is_encoder_decoder:
+        d, ff = cfg.d_model, cfg.d_ff
+        attn = d * cfg.q_dim + 2 * d * cfg.kv_dim + cfg.q_dim * d
+        gates = 3 if cfg.mlp_type in ("swiglu", "geglu") else 2
+        mlp = gates * d * ff
+        n_enc = cfg.n_encoder_layers * (attn + mlp)
+        n_dec = cfg.n_layers * (2 * attn + mlp) + cfg.vocab_size * d
+        if kind == "decode":
+            return mult * n_dec * batch / n_chips
+        dec_tokens = batch * min(seq, cfg.max_seq_len)
+        return mult * (n_enc * tokens + n_dec * dec_tokens) / n_chips
+    n = cfg.active_param_count() if cfg.is_moe else cfg.param_count()
+    return mult * n * tokens / n_chips
+
+
+def analyze(
+    arch: str,
+    cfg: ModelConfig,
+    shape_name: str,
+    kind: str,
+    mesh_name: str,
+    n_chips: int,
+    pod_size: int,
+    compiled,
+    hlo_text: str,
+    batch_global: int,
+    seq_len: int,
+) -> RooflineReport:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):  # older jax returns [dict]
+        cost = cost[0]
+    coll = hlo_analysis.collective_summary(hlo_text, pod_size=pod_size)
+    costs = {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "ici": float(coll["ici_bytes"]),
+        "dcn": float(coll["dcn_bytes"]),
+        "by_kind": coll["by_kind"],
+    }
+    return analyze_from_costs(
+        arch, cfg, shape_name, kind, mesh_name, n_chips, costs, compiled,
+        batch_global, seq_len,
+    )
+
+
+def analyze_from_costs(
+    arch: str,
+    cfg: ModelConfig,
+    shape_name: str,
+    kind: str,
+    mesh_name: str,
+    n_chips: int,
+    costs: Dict,
+    compiled,
+    batch_global: int,
+    seq_len: int,
+) -> RooflineReport:
+    flops = costs["flops"]
+    byts = costs["bytes"]
+    coll = {"ici_bytes": costs["ici"], "dcn_bytes": costs["dcn"],
+            "by_kind": costs.get("by_kind", {})}
+    ici_s = coll["ici_bytes"] / ICI_BW
+    dcn_s = coll["dcn_bytes"] / DCN_BW
+    compute_s = flops / PEAK_FLOPS
+    memory_s = byts / HBM_BW
+    collective_s = ici_s + dcn_s
+    mf = model_flops_per_step(cfg, batch_global, seq_len, kind, n_chips)
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    peak_mem = None
+    try:
+        ma = compiled.memory_analysis()
+        peak_mem = float(
+            getattr(ma, "temp_size_in_bytes", 0)
+            + getattr(ma, "argument_size_in_bytes", 0)
+            + getattr(ma, "output_size_in_bytes", 0)
+            - getattr(ma, "alias_size_in_bytes", 0)
+        )
+    except Exception:
+        pass
+    return RooflineReport(
+        arch=arch, shape=shape_name, mesh=mesh_name, kind=kind,
+        n_chips=n_chips, hlo_flops=flops, hlo_bytes=byts,
+        ici_bytes=float(coll["ici_bytes"]), dcn_bytes=float(coll["dcn_bytes"]),
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        model_flops=mf, useful_ratio=(mf / flops if flops else 0.0),
+        bottleneck=bottleneck, peak_memory_bytes=peak_mem,
+        by_kind=coll["by_kind"],
+    )
+
+
+def format_table(reports) -> str:
+    header = (
+        f"{'arch':<22} {'shape':<12} {'mesh':<10} {'chips':>5} "
+        f"{'compute':>9} {'memory':>9} {'collect':>9} {'bound':>10} "
+        f"{'useful':>7} {'roofl%':>7} {'mem/chip':>9}"
+    )
+    lines = [header, "-" * len(header)]
+    for r in reports:
+        row = r.row()
+        lines.append(
+            f"{row['arch']:<22} {row['shape']:<12} {row['mesh']:<10} "
+            f"{row['chips']:>5} {row['compute_ms']:>8.1f}ms "
+            f"{row['memory_ms']:>8.1f}ms {row['collective_ms']:>8.1f}ms "
+            f"{row['bottleneck']:>10} {row['useful_ratio']:>7.2f} "
+            f"{100 * row['roofline_frac']:>6.1f}% {row['peak_mem_gb']:>8.2f}G"
+        )
+    return "\n".join(lines)

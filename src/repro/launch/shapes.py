@@ -1,0 +1,124 @@
+"""Assigned input-shape cells and ShapeDtypeStruct input specs.
+
+Four LM shapes x ten architectures = 40 cells.  ``train_*``/``prefill_*``
+lower the training/prefill step; ``decode_*``/``long_*`` lower
+``serve_step`` (one token against a seq_len cache).  ``long_500k`` requires
+sub-quadratic sequence mixing and therefore only runs for the SSM/hybrid
+archs (skips are explicit, with reasons, so the cell table accounts for all
+40).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, get_config
+from repro.configs.base import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES: Dict[str, ShapeCell] = {
+    "train_4k": ShapeCell("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeCell("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeCell("long_500k", 524_288, 1, "decode"),
+}
+
+# Sub-quadratic sequence mixing is required at 500k; these families qualify.
+LONG_CONTEXT_ARCHS = ("rwkv6-7b", "recurrentgemma-9b")
+
+
+def cell_skip_reason(arch: str, shape: str) -> Optional[str]:
+    if shape == "long_500k" and arch not in LONG_CONTEXT_ARCHS:
+        return (
+            "pure full-attention backbone: 500k-token decode needs a "
+            "sub-quadratic mixer (see DESIGN.md §Arch-applicability)"
+        )
+    return None
+
+
+def all_cells() -> List[Tuple[str, str]]:
+    return [(a, s) for a in ARCHS for s in SHAPES]
+
+
+def runnable_cells() -> List[Tuple[str, str]]:
+    return [(a, s) for a, s in all_cells() if cell_skip_reason(a, s) is None]
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStruct stand-ins; no allocation)
+# ---------------------------------------------------------------------------
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(int(x) for x in shape), dtype)
+
+
+def train_input_specs(cfg: ModelConfig, cell: ShapeCell) -> Dict:
+    B, S = cell.global_batch, cell.seq_len
+    batch = {
+        "tokens": _sds((B, S), jnp.int32),
+        "labels": _sds((B, S), jnp.int32),
+    }
+    if cfg.is_encoder_decoder:
+        # audio backbone: the "sequence" is the encoder frame axis (stub
+        # frontend supplies embeddings); decoder sees the token stream.
+        dec_len = min(S, cfg.max_seq_len)
+        batch = {
+            "frames": _sds((B, S, cfg.d_model), jnp.bfloat16),
+            "tokens": _sds((B, dec_len), jnp.int32),
+            "labels": _sds((B, dec_len), jnp.int32),
+        }
+    elif cfg.frontend:
+        batch["prefix_embeds"] = _sds(
+            (B, cfg.frontend_seq_len, cfg.d_model), jnp.bfloat16
+        )
+    return batch
+
+
+def cache_specs(cfg: ModelConfig, batch: int, cache_len: int, dtype) -> Dict:
+    """eval_shape over init_cache — exact pytree of ShapeDtypeStructs."""
+    from repro.models.model_zoo import build_model
+
+    model = build_model(cfg)
+    return jax.eval_shape(
+        lambda: model.init_cache(batch, cache_len, dtype)
+    )
+
+
+def decode_input_specs(
+    cfg: ModelConfig, cell: ShapeCell, cache_dtype=jnp.bfloat16
+) -> Tuple[Dict, Dict]:
+    """-> (cache_specs, token_specs) for serve_step."""
+    B, S = cell.global_batch, cell.seq_len
+    cache = cache_specs(cfg, B, S, cache_dtype)
+    tokens = _sds((B, 1), jnp.int32)
+    return cache, tokens
+
+
+def memory_specs(cfg: ModelConfig, cell: ShapeCell) -> Optional[jax.ShapeDtypeStruct]:
+    """Encoder memory for enc-dec decode cells."""
+    if not cfg.is_encoder_decoder:
+        return None
+    return _sds((cell.global_batch, cfg.frontend_seq_len, cfg.d_model),
+                jnp.bfloat16)
+
+
+def param_specs_shapes(cfg: ModelConfig, dtype=jnp.float32):
+    """eval_shape over init — parameter ShapeDtypeStructs (no allocation)."""
+    from repro.models.model_zoo import build_model
+
+    model = build_model(cfg)
+    return jax.eval_shape(
+        lambda: model.init(jax.random.PRNGKey(0), dtype=dtype)
+    )

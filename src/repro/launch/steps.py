@@ -1,0 +1,244 @@
+"""Step-function builders: jit + shardings for train / prefill / serve.
+
+Everything here is shape-only-safe: callers pass ShapeDtypeStructs (dry-run)
+or real arrays (actual runs); lowering happens inside a ``use_sharding``
+context so the models' activation constraints bind against the mesh.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.launch import shapes as shp
+from repro.models.model_zoo import build_model
+from repro.parallel import sharding as shd
+from repro.train.optimizer import AdamWConfig, adamw, cosine_schedule
+from repro.train.train_loop import TrainRunConfig, make_train_step
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class LoweredStep:
+    kind: str
+    arch: str
+    shape: str
+    strategy: str
+    lowered: Any
+    in_specs: Tuple
+    mesh: Mesh
+
+    def compile(self):
+        return self.lowered.compile()
+
+
+def _batch_shardings(mesh, rules, batch_specs_tree):
+    specs = shd.batch_specs(mesh, rules, batch_specs_tree)
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def build_train_step(
+    cfg: ModelConfig,
+    cell: shp.ShapeCell,
+    mesh: Mesh,
+    strategy: str = "fsdp_tp",
+    remat_policy: str = "nothing",
+    rules_override: Optional[Dict] = None,
+    scan_unroll: int = 1,
+    constrain_grads: bool = False,
+    grad_accum: int = 1,
+) -> LoweredStep:
+    rules = rules_override or shd.STRATEGIES[strategy]()
+    model = build_model(cfg)
+    run = TrainRunConfig(
+        optimizer=AdamWConfig(lr=3e-4, weight_decay=0.1),
+        remat_policy=remat_policy,
+        compute_dtype=jnp.bfloat16,
+        kernel_backend="reference",  # dry-run lowers the XLA path
+        scan_unroll=scan_unroll,
+        grad_accum=grad_accum,
+    )
+    param_shapes = shp.param_specs_shapes(cfg, dtype=jnp.float32)
+    param_sh = shd.param_shardings(mesh, rules, param_shapes)
+    train_step, opt_init = make_train_step(
+        model, run, grad_shardings=param_sh if constrain_grads else None
+    )
+
+    opt_shapes = jax.eval_shape(opt_init, param_shapes)
+    batch_shapes = shp.train_input_specs(cfg, cell)
+
+    # ZeRO: moments mirror the parameter shardings; step counter replicated
+    opt_sh = _opt_state_shardings(opt_shapes, param_sh, mesh)
+    batch_sh = _batch_shardings(mesh, rules, batch_shapes)
+
+    with mesh, shd.use_sharding(mesh, rules):
+        jitted = jax.jit(
+            train_step,
+            in_shardings=(param_sh, opt_sh, batch_sh),
+            out_shardings=(param_sh, opt_sh, None),
+            donate_argnums=(0, 1),
+        )
+        lowered = jitted.lower(param_shapes, opt_shapes, batch_shapes)
+    return LoweredStep("train", cfg.name, cell.name, strategy, lowered,
+                       (param_shapes, opt_shapes, batch_shapes), mesh)
+
+
+def _opt_state_shardings(opt_shapes, param_sh, mesh):
+    """AdamWState(step, mu, nu): moments mirror the parameter shardings."""
+    replicated = NamedSharding(mesh, P())
+    return type(opt_shapes)(step=replicated, mu=param_sh, nu=param_sh)
+
+
+def build_prefill_step(
+    cfg: ModelConfig,
+    cell: shp.ShapeCell,
+    mesh: Mesh,
+    strategy: str = "fsdp_tp",
+    rules_override: Optional[Dict] = None,
+    scan_unroll: int = 1,
+) -> LoweredStep:
+    """Inference prefill: forward over the full prompt, emit cache + logits."""
+    rules = rules_override or shd.STRATEGIES[strategy]()
+    model = build_model(cfg)
+    param_shapes = shp.param_specs_shapes(cfg, dtype=jnp.bfloat16)
+    param_sh = shd.param_shardings(mesh, rules, param_shapes)
+
+    if cfg.is_encoder_decoder:
+        batch_shapes = {
+            "frames": shp._sds((cell.global_batch, cell.seq_len, cfg.d_model),
+                               jnp.bfloat16)
+        }
+        batch_sh = _batch_shardings(mesh, rules, batch_shapes)
+
+        def prefill(params, batch):
+            from repro.models import encdec
+            return encdec.encode(params, cfg, batch["frames"],
+                                 backend="reference", scan_unroll=scan_unroll)
+
+        with mesh, shd.use_sharding(mesh, rules):
+            jitted = jax.jit(prefill, in_shardings=(param_sh, batch_sh))
+            lowered = jitted.lower(param_shapes, batch_shapes)
+        return LoweredStep("prefill", cfg.name, cell.name, strategy, lowered,
+                           (param_shapes, batch_shapes), mesh)
+
+    cache_shapes = shp.cache_specs(cfg, cell.global_batch, cell.seq_len,
+                                   jnp.bfloat16)
+    cache_sh = shd.cache_shardings(mesh, rules, cache_shapes)
+    batch_shapes = {"tokens": shp._sds((cell.global_batch, cell.seq_len),
+                                       jnp.int32)}
+    if cfg.frontend:
+        batch_shapes["prefix_embeds"] = shp._sds(
+            (cell.global_batch, cfg.frontend_seq_len, cfg.d_model), jnp.bfloat16
+        )
+    batch_sh = _batch_shardings(mesh, rules, batch_shapes)
+
+    def prefill(params, batch, cache):
+        return model.prefill(params, batch, cache, backend="reference",
+                             scan_unroll=scan_unroll)
+
+    with mesh, shd.use_sharding(mesh, rules):
+        jitted = jax.jit(
+            prefill,
+            in_shardings=(param_sh, batch_sh, cache_sh),
+            out_shardings=(None, cache_sh),
+            donate_argnums=(2,),
+        )
+        lowered = jitted.lower(param_shapes, batch_shapes, cache_shapes)
+    return LoweredStep("prefill", cfg.name, cell.name, strategy, lowered,
+                       (param_shapes, batch_shapes, cache_shapes), mesh)
+
+
+def build_serve_step(
+    cfg: ModelConfig,
+    cell: shp.ShapeCell,
+    mesh: Mesh,
+    strategy: str = "fsdp_tp",
+    rules_override: Optional[Dict] = None,
+    scan_unroll: int = 1,
+) -> LoweredStep:
+    """One-token decode against a seq_len cache."""
+    rules = rules_override or shd.STRATEGIES[strategy]()
+    model = build_model(cfg)
+    param_shapes = shp.param_specs_shapes(cfg, dtype=jnp.bfloat16)
+    param_sh = shd.param_shardings(mesh, rules, param_shapes)
+
+    cache_len = cell.seq_len
+    cache_shapes = shp.cache_specs(cfg, cell.global_batch, cache_len,
+                                   jnp.bfloat16)
+    cache_sh = shd.cache_shardings(mesh, rules, cache_shapes)
+    tok_shapes = shp._sds((cell.global_batch, 1), jnp.int32)
+    tok_sh = NamedSharding(
+        mesh, shd.resolve_spec(mesh, rules, ("batch", None), tok_shapes.shape)
+    )
+
+    mem_shapes = shp.memory_specs(cfg, cell)
+
+    if cfg.is_encoder_decoder:
+        mem_sh = NamedSharding(
+            mesh, shd.resolve_spec(mesh, rules, ("batch", "seq", None),
+                                   mem_shapes.shape)
+        )
+
+        def serve_step(params, cache, tokens, memory):
+            return model.decode_step(params, cache, tokens, memory=memory,
+                                     backend="reference",
+                                     scan_unroll=scan_unroll)
+
+        with mesh, shd.use_sharding(mesh, rules):
+            jitted = jax.jit(
+                serve_step,
+                in_shardings=(param_sh, cache_sh, tok_sh, mem_sh),
+                out_shardings=(None, cache_sh),
+                donate_argnums=(1,),
+            )
+            lowered = jitted.lower(param_shapes, cache_shapes, tok_shapes,
+                                   mem_shapes)
+        return LoweredStep("decode", cfg.name, cell.name, strategy, lowered,
+                           (param_shapes, cache_shapes, tok_shapes, mem_shapes),
+                           mesh)
+
+    def serve_step(params, cache, tokens):
+        return model.decode_step(params, cache, tokens, backend="reference",
+                                 scan_unroll=scan_unroll)
+
+    with mesh, shd.use_sharding(mesh, rules):
+        jitted = jax.jit(
+            serve_step,
+            in_shardings=(param_sh, cache_sh, tok_sh),
+            out_shardings=(None, cache_sh),
+            donate_argnums=(1,),
+        )
+        lowered = jitted.lower(param_shapes, cache_shapes, tok_shapes)
+    return LoweredStep("decode", cfg.name, cell.name, strategy, lowered,
+                       (param_shapes, cache_shapes, tok_shapes), mesh)
+
+
+def build_step(
+    cfg: ModelConfig,
+    cell: shp.ShapeCell,
+    mesh: Mesh,
+    strategy: str = "fsdp_tp",
+    remat_policy: str = "nothing",
+    rules_override: Optional[Dict] = None,
+    scan_unroll: int = 1,
+    constrain_grads: bool = False,
+    grad_accum: int = 1,
+) -> LoweredStep:
+    if cell.kind == "train":
+        return build_train_step(cfg, cell, mesh, strategy, remat_policy,
+                                rules_override, scan_unroll, constrain_grads,
+                                grad_accum)
+    if cell.kind == "prefill":
+        return build_prefill_step(cfg, cell, mesh, strategy, rules_override,
+                                  scan_unroll)
+    return build_serve_step(cfg, cell, mesh, strategy, rules_override,
+                            scan_unroll)

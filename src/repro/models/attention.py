@@ -1,0 +1,150 @@
+"""Attention layer: GQA/MQA with RoPE, sliding window, softcap, QK-norm.
+
+Supports three execution modes driven by the same parameters:
+  * train/prefill: full-sequence self-attention (flash kernel on TPU),
+  * decode: single-token query against a KV cache (full or ring-buffer
+    sliding window; the ring exploits softmax permutation-invariance so no
+    unrotation is needed),
+  * cross-attention (encoder-decoder): keys/values from encoder memory.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels.flash_attention import ops as fa_ops
+from repro.models import common
+
+PyTree = Any
+
+
+def init_attention(keygen, cfg: ModelConfig, dtype, cross: bool = False) -> PyTree:
+    d, hq, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    if cross:
+        hkv = hq  # whisper cross-attention is full MHA
+    p = {
+        "wq": common.dense_init(keygen(), (d, hq, hd), dtype, in_axis=0),
+        "wk": common.dense_init(keygen(), (d, hkv, hd), dtype, in_axis=0),
+        "wv": common.dense_init(keygen(), (d, hkv, hd), dtype, in_axis=0),
+        "wo": common.dense_init(keygen(), (hq, hd, d), dtype, in_axis=0),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((hq, hd), dtype)
+        p["bk"] = jnp.zeros((hkv, hd), dtype)
+        p["bv"] = jnp.zeros((hkv, hd), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((hd,), dtype)
+        p["k_norm"] = jnp.zeros((hd,), dtype)
+    return p
+
+
+def _project_qkv(p: PyTree, cfg: ModelConfig, x, kv_x):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", kv_x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", kv_x, p["wv"])
+    if "bq" in p:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    if "q_norm" in p:
+        q = common.rms_norm(p["q_norm"], q)
+        k = common.rms_norm(p["k_norm"], k)
+    return q, k, v
+
+
+def attention_block(
+    p: PyTree,
+    cfg: ModelConfig,
+    x: jnp.ndarray,              # [B, S, d]
+    positions: jnp.ndarray,      # [S] or [B, S]
+    *,
+    local: bool = False,
+    causal: bool = True,
+    memory: Optional[jnp.ndarray] = None,  # cross-attn memory [B, S_m, d]
+    backend: str = "auto",
+) -> jnp.ndarray:
+    """Full-sequence attention (train / prefill)."""
+    kv_x = memory if memory is not None else x
+    q, k, v = _project_qkv(p, cfg, x, kv_x)
+    if memory is None:  # RoPE only for self-attention
+        if cfg.use_rope:
+            sin, cos = common.rope_angles(positions, cfg.head_dim, cfg.rope_theta)
+            q = common.apply_rope(q, sin, cos)
+            k = common.apply_rope(k, sin, cos)
+        window = cfg.window if local else None
+    else:
+        causal, window = False, None
+    out = fa_ops.attention(
+        q, k, v,
+        causal=causal,
+        window=window,
+        softcap=cfg.attn_softcap,
+        backend=backend,
+    )
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+
+# ---------------------------------------------------------------------------
+# Decode path (single token + cache)
+# ---------------------------------------------------------------------------
+
+def init_kv_cache(
+    cfg: ModelConfig, batch: int, max_len: int, dtype, local: bool = False
+) -> Dict[str, jnp.ndarray]:
+    length = min(cfg.window, max_len) if (local and cfg.window) else max_len
+    return {
+        "k": jnp.zeros((batch, length, cfg.n_kv_heads, cfg.head_dim), dtype),
+        "v": jnp.zeros((batch, length, cfg.n_kv_heads, cfg.head_dim), dtype),
+    }
+
+
+def decode_attention_block(
+    p: PyTree,
+    cfg: ModelConfig,
+    x: jnp.ndarray,          # [B, 1, d]
+    pos: jnp.ndarray,        # scalar int32 — current position
+    cache: Dict[str, jnp.ndarray],
+    *,
+    local: bool = False,
+    memory: Optional[jnp.ndarray] = None,
+    backend: str = "auto",
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """One decode step.  Returns (out [B,1,d], updated cache)."""
+    if memory is not None:
+        # cross-attention: no cache mutation (memory is fixed)
+        q, k, v = _project_qkv(p, cfg, x, memory)
+        out = fa_ops.attention(q, k, v, causal=False, backend="reference")
+        return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), cache
+
+    q, k_new, v_new = _project_qkv(p, cfg, x, x)
+    if cfg.use_rope:
+        sin, cos = common.rope_angles(pos[None].astype(jnp.int32), cfg.head_dim,
+                                      cfg.rope_theta)
+        q = common.apply_rope(q, sin, cos)
+        k_new = common.apply_rope(k_new, sin, cos)
+
+    length = cache["k"].shape[1]
+    slot = jnp.where(
+        jnp.logical_and(local, cfg.window is not None), pos % length, pos
+    ) if local else pos
+    slot = slot % length  # ring semantics also guard the full cache
+    k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new, slot, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new, slot, axis=1)
+
+    # number of valid cache entries
+    kv_len = jnp.minimum(pos + 1, length)
+    # ring buffers hold an unordered window; softmax is permutation-invariant
+    # so a validity mask is all we need (RoPE was applied before caching).
+    out = fa_ops.attention(
+        q, k_cache, v_cache,
+        causal=False,
+        kv_len=kv_len[None] if kv_len.ndim == 0 else kv_len,
+        softcap=cfg.attn_softcap,
+        backend="reference",
+    )
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return out, {"k": k_cache, "v": v_cache}

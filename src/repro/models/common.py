@@ -1,0 +1,153 @@
+"""Shared model building blocks: norms, RoPE, initializers, dtype policy.
+
+All models are functional: parameters are plain nested dicts of jnp arrays
+(stacked along a leading "group" axis for scan-over-layers), so the same
+pytree paths drive initialization, sharding rules, checkpointing and the
+optimizer.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class DTypePolicy:
+    param_dtype: jnp.dtype = jnp.float32   # master weights
+    compute_dtype: jnp.dtype = jnp.bfloat16
+
+    def cast(self, x):
+        return x.astype(self.compute_dtype)
+
+
+FP32 = DTypePolicy(jnp.float32, jnp.float32)
+MIXED = DTypePolicy(jnp.float32, jnp.bfloat16)
+SERVE_BF16 = DTypePolicy(jnp.bfloat16, jnp.bfloat16)
+
+
+# ---------------------------------------------------------------------------
+# Initializers (operate on PRNG key streams; shapes may be stacked)
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape: Tuple[int, ...], dtype, in_axis: int = -2) -> jnp.ndarray:
+    """Truncated-normal fan-in init (MaxText-style 1/sqrt(fan_in))."""
+    fan_in = shape[in_axis]
+    std = 1.0 / np.sqrt(fan_in)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape) * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype) -> jnp.ndarray:
+    return (jax.random.normal(key, shape) * 0.02).astype(dtype)
+
+
+def zeros_init(_key, shape, dtype) -> jnp.ndarray:
+    return jnp.zeros(shape, dtype)
+
+
+def ones_init(_key, shape, dtype) -> jnp.ndarray:
+    return jnp.ones(shape, dtype)
+
+
+class KeyGen:
+    """Sequential PRNG key dispenser for nested init code."""
+
+    def __init__(self, key):
+        self._key = key
+
+    def __call__(self):
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(scale: jnp.ndarray, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    # gemma-style (1 + scale) parameterization: zero-init'd scale is identity
+    return (x32 * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def layer_norm(p: Dict[str, jnp.ndarray], x: jnp.ndarray, eps: float = 1e-5):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["g"].astype(jnp.float32) + p["b"].astype(jnp.float32)).astype(dt)
+
+
+def norm_init(norm_type: str, d: int, dtype) -> PyTree:
+    if norm_type == "rmsnorm":
+        return jnp.zeros((d,), dtype)  # (1 + scale) parameterization
+    return {"g": jnp.ones((d,), dtype), "b": jnp.zeros((d,), dtype)}
+
+
+def apply_norm(norm_type: str, p: PyTree, x: jnp.ndarray) -> jnp.ndarray:
+    if norm_type == "rmsnorm":
+        return rms_norm(p, x)
+    return layer_norm(p, x)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_angles(positions: jnp.ndarray, head_dim: int, theta: float):
+    """positions [*, S] -> (sin, cos) [*, S, head_dim/2]."""
+    freq = 1.0 / (
+        theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+    )
+    ang = positions.astype(jnp.float32)[..., None] * freq
+    return jnp.sin(ang), jnp.cos(ang)
+
+
+def apply_rope(x: jnp.ndarray, sin: jnp.ndarray, cos: jnp.ndarray) -> jnp.ndarray:
+    """x [B, S, H, D]; sin/cos [B, S, D/2] or [S, D/2]."""
+    if sin.ndim == 2:
+        sin = sin[None]
+        cos = cos[None]
+    sin = sin[:, :, None, :]  # [B, S, 1, D/2]
+    cos = cos[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Losses
+# ---------------------------------------------------------------------------
+
+def softmax_xent(
+    logits: jnp.ndarray,       # [B, S, V]
+    labels: jnp.ndarray,       # [B, S] int32
+    mask: Optional[jnp.ndarray] = None,  # [B, S]
+) -> jnp.ndarray:
+    """Sharding-friendly cross-entropy.
+
+    The gold-logit gather is computed as a one-hot contraction rather than
+    take_along_axis: a gather over the (vocab-sharded) class dim forces
+    GSPMD to all-gather the full [B,S,V] logits (measured: ~16 GB of
+    collectives + ~80 GB of fp32 HBM traffic per step on 150k-vocab
+    models), whereas the one-hot einsum keeps every term vocab-local and
+    reduces a [B,S] partial across shards.  XLA fuses the one-hot (an iota
+    compare) into the contraction — nothing V-sized materializes.
+    """
+    logits32 = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits32, axis=-1)
+    onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=jnp.float32)
+    gold = jnp.einsum("bsv,bsv->bs", logits32, onehot)
+    nll = logz - gold
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

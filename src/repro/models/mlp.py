@@ -1,0 +1,37 @@
+"""Feed-forward blocks: SwiGLU / GeGLU / vanilla GELU."""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import common
+
+PyTree = Any
+
+
+def init_mlp(keygen, cfg: ModelConfig, dtype) -> PyTree:
+    d, ff = cfg.d_model, cfg.d_ff
+    if cfg.mlp_type in ("swiglu", "geglu"):
+        return {
+            "w_gate": common.dense_init(keygen(), (d, ff), dtype),
+            "w_up": common.dense_init(keygen(), (d, ff), dtype),
+            "w_down": common.dense_init(keygen(), (ff, d), dtype),
+        }
+    return {
+        "w_up": common.dense_init(keygen(), (d, ff), dtype),
+        "w_down": common.dense_init(keygen(), (ff, d), dtype),
+    }
+
+
+def mlp_block(p: PyTree, cfg: ModelConfig, x: jnp.ndarray) -> jnp.ndarray:
+    if cfg.mlp_type == "swiglu":
+        h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    elif cfg.mlp_type == "geglu":
+        h = jax.nn.gelu(x @ p["w_gate"], approximate=True) * (x @ p["w_up"])
+    else:
+        h = jax.nn.gelu(x @ p["w_up"], approximate=True)
+    return h @ p["w_down"]

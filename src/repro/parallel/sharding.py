@@ -1,0 +1,365 @@
+"""Logical-axis sharding rules -> NamedSharding / PartitionSpec.
+
+MaxText-style indirection: every parameter leaf and activation carries
+*logical* axis names; a rule table maps logical names to mesh axes; a
+divisibility-aware resolver turns them into PartitionSpecs against the
+active mesh (axes that do not divide evenly fall back to replication, which
+is what keeps one rule table valid across all 10 architectures — e.g. MQA's
+single KV head simply cannot shard 16-way and silently replicates).
+
+The default strategy is FSDP("data") x TP("model") with the multi-pod
+"pod" axis doing data parallelism; the rule table is a plain dict so the
+perf-iteration loop can swap strategies without touching model code.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Any, Dict, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+PyTree = Any
+MeshAxes = Union[None, str, Tuple[str, ...]]
+
+
+# ---------------------------------------------------------------------------
+# Rule tables (logical axis -> mesh axes).  These are *strategies*: the
+# dry-run/perf loop selects one by name; custom dicts may override entries.
+# ---------------------------------------------------------------------------
+
+def _rules_fsdp_tp() -> Dict[str, MeshAxes]:
+    """Default: FSDP(data) x TP(model), pod = DP, Megatron-style sequence
+    sharding of the residual stream (saved activations live seq-sharded on
+    the model axis — the memory lever that makes 80-layer train shapes fit
+    v5e HBM)."""
+    return {
+        # activations
+        "batch": ("pod", "data"),
+        "seq": "model",           # residual-stream sequence sharding (SP)
+        "act_embed": None,
+        "act_heads": "model",
+        "act_ff": "model",
+        "act_vocab": "model",
+        # decode caches
+        "seq_cache": "model",
+        # weights
+        "embed": "data",          # FSDP axis for the d_model dim of weights
+        "vocab": "model",
+        "heads": "model",
+        "kv_heads": "model",
+        "head_dim": None,
+        "ff": "model",
+        "experts": "model",
+        "rnn": "model",
+        "conv": None,
+        "blocks": None,           # per-head block-diagonal gates (rglru)
+        "lora": None,
+        "layers": None,           # stacked scan axis
+    }
+
+
+def _rules_fsdp_tp_noseq() -> Dict[str, MeshAxes]:
+    # ablation: no sequence sharding of the residual stream
+    r = _rules_fsdp_tp()
+    r["seq"] = None
+    return r
+
+
+def _rules_tp_only() -> Dict[str, MeshAxes]:
+    r = _rules_fsdp_tp()
+    r["embed"] = None
+    return r
+
+
+def _rules_fsdp_tp_pod_fsdp() -> Dict[str, MeshAxes]:
+    # beyond-paper variant: extend the FSDP axis across pods (DCN) too
+    r = _rules_fsdp_tp()
+    r["embed"] = ("pod", "data")
+    return r
+
+
+def _rules_serve_2d() -> Dict[str, MeshAxes]:
+    """Decode-optimized: weight-stationary 2D TP.
+
+    FSDP is an anti-pattern for single-token decode — the per-step weight
+    all-gather moves the entire (bf16) model over ICI for one token.  Here
+    weights stay sharded over BOTH axes (embed dim on "data", heads/ff/vocab
+    on "model") and never move; the per-layer collectives become tiny
+    activation all-reduces.  The batch is kept OFF the "data" axis so it
+    cannot conflict with the weights' embed dim (the conflict is what forced
+    GSPMD into weight gathering); the KV cache spreads its sequence axis
+    over ("data","model") = 256-way so 32k-token caches fit per chip.
+    """
+    return {
+        "batch": "pod",
+        "seq": None,
+        "act_embed": None,
+        "act_heads": "model",
+        "act_ff": "model",
+        "act_vocab": "model",
+        "seq_cache": ("data", "model"),
+        "embed": "data",
+        "vocab": "model",
+        "heads": "model",
+        "kv_heads": "model",
+        "head_dim": None,
+        "ff": "model",
+        "experts": "model",
+        "rnn": ("data", "model"),
+        "conv": None,
+        "blocks": None,
+        "lora": None,
+        "layers": None,
+    }
+
+
+STRATEGIES = {
+    "fsdp_tp": _rules_fsdp_tp,
+    "fsdp_tp_noseq": _rules_fsdp_tp_noseq,
+    "tp_only": _rules_tp_only,
+    "fsdp_tp_pod_fsdp": _rules_fsdp_tp_pod_fsdp,
+    "serve_2d": _rules_serve_2d,
+}
+
+
+# ---------------------------------------------------------------------------
+# Active sharding context (mesh + rules), used by model code for activation
+# constraints without threading mesh handles through every function.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ShardingContext:
+    mesh: Mesh
+    rules: Dict[str, MeshAxes]
+
+
+_CTX = threading.local()
+
+
+def set_context(ctx: Optional[ShardingContext]) -> None:
+    _CTX.value = ctx
+
+
+def get_context() -> Optional[ShardingContext]:
+    return getattr(_CTX, "value", None)
+
+
+class use_sharding:
+    """``with use_sharding(mesh, rules): ...`` — enables activation
+    constraints inside model code."""
+
+    def __init__(self, mesh: Mesh, rules: Optional[Dict[str, MeshAxes]] = None,
+                 strategy: str = "fsdp_tp"):
+        if rules is None:
+            rules = STRATEGIES[strategy]()
+        self.ctx = ShardingContext(mesh, rules)
+
+    def __enter__(self):
+        set_context(self.ctx)
+        return self.ctx
+
+    def __exit__(self, *exc):
+        set_context(None)
+        return False
+
+
+# ---------------------------------------------------------------------------
+# Spec resolution with divisibility fallback
+# ---------------------------------------------------------------------------
+
+def _axis_size(mesh: Mesh, axes: MeshAxes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a]
+    return size
+
+
+def resolve_spec(
+    mesh: Mesh,
+    rules: Dict[str, MeshAxes],
+    logical: Sequence[Optional[str]],
+    shape: Sequence[int],
+) -> P:
+    """logical axis names + concrete shape -> PartitionSpec.
+
+    Drops mesh axes that don't exist in the mesh or don't divide the dim.
+    """
+    spec = []
+    used: set = set()
+    for name, dim in zip(logical, shape):
+        axes = rules.get(name) if name else None
+        if axes is None:
+            spec.append(None)
+            continue
+        if isinstance(axes, str):
+            axes = (axes,)
+        # keep only axes present in the mesh and not already used
+        axes = tuple(a for a in axes if a in mesh.shape and a not in used)
+        while axes and dim % _axis_size(mesh, axes) != 0:
+            axes = axes[:-1]  # drop trailing axes until it divides
+        if not axes:
+            spec.append(None)
+        else:
+            used.update(axes)
+            spec.append(axes if len(axes) > 1 else axes[0])
+    return P(*spec)
+
+
+def shard_activation(x: jnp.ndarray, *logical: Optional[str]) -> jnp.ndarray:
+    """Annotate an activation with its logical axes (no-op without context)."""
+    ctx = get_context()
+    if ctx is None:
+        return x
+    spec = resolve_spec(ctx.mesh, ctx.rules, logical, x.shape)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx.mesh, spec)
+    )
+
+
+# ---------------------------------------------------------------------------
+# Parameter sharding: leaf-name -> logical axes
+# ---------------------------------------------------------------------------
+
+# Maps the *leaf key name* in the params pytree to logical axes of its
+# non-stacked shape.  Stacked variants (scan-over-layers) are detected by
+# ndim and get a leading "layers" axis.
+PARAM_LOGICAL: Dict[str, Tuple[Optional[str], ...]] = {
+    # embeddings
+    "embed": ("vocab", "embed"),
+    "unembed": ("embed", "vocab"),
+    "pos_embed": ("seq", "embed"),
+    # attention
+    "wq": ("embed", "heads", "head_dim"),
+    "wk": ("embed", "kv_heads", "head_dim"),
+    "wv": ("embed", "kv_heads", "head_dim"),
+    "wo": ("heads", "head_dim", "embed"),
+    "bq": ("heads", "head_dim"),
+    "bk": ("kv_heads", "head_dim"),
+    "bv": ("kv_heads", "head_dim"),
+    "q_norm": (None,),
+    "k_norm": (None,),
+    # dense mlp
+    "w_gate": ("embed", "ff"),
+    "w_up": ("embed", "ff"),
+    "w_down": ("ff", "embed"),
+    # moe (expert-stacked, detected by ndim)
+    "router": ("embed", None),
+    # rglru
+    "w_in_rec": ("embed", "rnn"),
+    "w_in_gate": ("embed", "rnn"),
+    "w_out": ("rnn", "embed"),
+    "conv_w": ("conv", "rnn"),
+    "conv_b": ("rnn",),
+    "gate_a": ("blocks", None, None),
+    "gate_a_b": ("blocks", None),
+    "gate_x": ("blocks", None, None),
+    "gate_x_b": ("blocks", None),
+    "lam": ("rnn",),
+    # rwkv
+    "mu_r": (None,), "mu_k": (None,), "mu_v": (None,), "mu_w": (None,),
+    "mu_g": (None,),
+    "w_r": ("embed", "ff"),
+    "w_k": ("embed", "ff"),
+    "w_v": ("ff", "embed"),
+    "w_g": ("embed", "ff"),
+    "decay_base": (None,),
+    "decay_a": ("embed", "lora"),
+    "decay_b": ("lora", "embed"),
+    "bonus": (None, None),
+    "out_norm": (None,),
+}
+
+# MoE expert weights share leaf names with dense MLP; their base logical
+# shapes get an "experts" prefix when a leading expert dim is present.
+_MOE_LEAVES = {"w_gate": ("experts", "embed", "ff"),
+               "w_up": ("experts", "embed", "ff"),
+               "w_down": ("experts", "ff", "embed")}
+
+
+def logical_for_leaf(name: str, ndim: int) -> Tuple[Optional[str], ...]:
+    base = PARAM_LOGICAL.get(name)
+    if base is None:
+        return (None,) * ndim  # norms, scalars: replicate
+    if name in _MOE_LEAVES and ndim >= 3:
+        base = _MOE_LEAVES[name]
+    if ndim == len(base) + 1:
+        return ("layers",) + base
+    if ndim == len(base) + 2:  # stacked MoE inside scanned blocks
+        return ("layers",) + _MOE_LEAVES.get(name, base)
+    if ndim != len(base):
+        return (None,) * ndim
+    return base
+
+
+def _leaf_name(path) -> str:
+    for entry in reversed(path):
+        if isinstance(entry, jax.tree_util.DictKey):
+            return str(entry.key)
+        if isinstance(entry, jax.tree_util.GetAttrKey):
+            return str(entry.name)
+    return ""
+
+
+def param_specs(mesh: Mesh, rules: Dict[str, MeshAxes], params: PyTree) -> PyTree:
+    """PartitionSpec pytree for a params (or shapes) pytree."""
+
+    def spec_for(path, leaf):
+        name = _leaf_name(path)
+        logical = logical_for_leaf(name, len(leaf.shape))
+        return resolve_spec(mesh, rules, logical, leaf.shape)
+
+    return jax.tree_util.tree_map_with_path(spec_for, params)
+
+
+def param_shardings(mesh: Mesh, rules: Dict[str, MeshAxes], params: PyTree):
+    return jax.tree_util.tree_map(
+        lambda spec: NamedSharding(mesh, spec),
+        param_specs(mesh, rules, params),
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+# Decode-cache leaves (see repro/models/*: init_kv_cache / init_*_state).
+CACHE_LOGICAL: Dict[str, Tuple[Optional[str], ...]] = {
+    "k": ("batch", "seq_cache", "kv_heads", "head_dim"),
+    "v": ("batch", "seq_cache", "kv_heads", "head_dim"),
+    "h": ("batch", "rnn"),
+    "conv": ("batch", None, "rnn"),
+    "tm_shift": ("batch", "rnn"),
+    "wkv": ("batch", "heads", None, None),
+    "cm_shift": ("batch", "rnn"),
+    "pos": (),
+}
+
+
+def cache_shardings(mesh: Mesh, rules: Dict[str, MeshAxes], cache: PyTree):
+    """NamedShardings for a decode-cache pytree (stacked leading layer dim
+    auto-detected)."""
+
+    def spec_for(path, leaf):
+        name = _leaf_name(path)
+        base = CACHE_LOGICAL.get(name, (None,) * len(leaf.shape))
+        if len(leaf.shape) == len(base) + 1:
+            base = ("layers",) + base
+        spec = resolve_spec(mesh, rules, base[: len(leaf.shape)], leaf.shape)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(spec_for, cache)
+
+
+def batch_specs(mesh: Mesh, rules: Dict[str, MeshAxes], batch: PyTree) -> PyTree:
+    """Input batch: [B, S] / [B, S, d] arrays shard batch (+seq if SP)."""
+
+    def spec_for(leaf):
+        logical = ("batch", "seq") + (None,) * (len(leaf.shape) - 2)
+        return resolve_spec(mesh, rules, logical[: len(leaf.shape)], leaf.shape)
+
+    return jax.tree_util.tree_map(spec_for, batch)

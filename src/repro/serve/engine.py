@@ -1,0 +1,77 @@
+"""Batched serving engine: prefill + greedy/temperature decode.
+
+Minimal-but-real continuous-batching-lite: requests are grouped into fixed
+batch slots, prompts are left-padded to a common prefill length, and decode
+proceeds lock-step with per-slot stop tracking.  Serves any zoo model
+(decoder-only or enc-dec).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model_zoo import Model
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_len: int = 512
+    max_new_tokens: int = 64
+    cache_dtype: jnp.dtype = jnp.float32
+    temperature: float = 0.0  # 0 = greedy
+    eos_id: Optional[int] = None
+
+
+class ServeEngine:
+    def __init__(self, model: Model, params, cfg: ServeConfig):
+        self.model = model
+        self.params = params
+        self.cfg = cfg
+        self._decode = jax.jit(
+            lambda p, cache, toks: model.decode_step(p, cache, toks)
+        )
+
+    def generate(
+        self, prompts: Sequence[Sequence[int]], rng_seed: int = 0
+    ) -> List[List[int]]:
+        """prompts: batch of token-id lists -> generated continuations."""
+        cfg = self.cfg
+        B = len(prompts)
+        plen = max(len(p) for p in prompts)
+        toks = np.zeros((B, plen), np.int32)
+        for i, p in enumerate(prompts):
+            toks[i, plen - len(p):] = p  # left-pad
+        cache = self.model.init_cache(B, cfg.max_len, cfg.cache_dtype)
+        logits, cache = self.model.prefill(
+            self.params, {"tokens": jnp.asarray(toks)}, cache
+        )
+        rng = np.random.default_rng(rng_seed)
+        out: List[List[int]] = [[] for _ in range(B)]
+        done = np.zeros(B, bool)
+        cur = self._sample(logits, rng)
+        for _ in range(cfg.max_new_tokens):
+            for i in range(B):
+                if not done[i]:
+                    t = int(cur[i, 0])
+                    out[i].append(t)
+                    if cfg.eos_id is not None and t == cfg.eos_id:
+                        done[i] = True
+            if done.all():
+                break
+            logits, cache = self._decode(self.params, cache, jnp.asarray(cur))
+            cur = self._sample(logits, rng)
+        return out
+
+    def _sample(self, logits, rng) -> np.ndarray:
+        lg = np.asarray(logits[:, -1, :], np.float32)
+        if self.cfg.temperature <= 0:
+            return lg.argmax(-1)[:, None].astype(np.int32)
+        p = jax.nn.softmax(jnp.asarray(lg / self.cfg.temperature), -1)
+        p = np.asarray(p)
+        choice = [rng.choice(p.shape[-1], p=row / row.sum()) for row in p]
+        return np.asarray(choice, np.int32)[:, None]

@@ -1,0 +1,122 @@
+"""Optimizers in pure JAX (no optax dependency).
+
+Provides AdamW (+ SGD-momentum) as ``(init_fn, update_fn)`` pairs operating
+on arbitrary pytrees, global-norm gradient clipping, and LR schedules.
+Used both by the BandPilot surrogate trainer (tiny model, CPU) and by the
+large-model training loop (where the optimizer state is FSDP-sharded via the
+same pytree structure as the parameters — see repro/parallel/sharding.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray   # scalar int32
+    mu: PyTree          # first moment (same structure as params)
+    nu: PyTree          # second moment
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 1e-3
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    grad_clip_norm: Optional[float] = 1.0
+    # dtype for the moments; fp32 master-style by default.
+    state_dtype: jnp.dtype = jnp.float32
+
+
+def global_norm(tree: PyTree) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    if not leaves:
+        return jnp.zeros(())
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def clip_by_global_norm(tree: PyTree, max_norm: float) -> Tuple[PyTree, jnp.ndarray]:
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-12))
+    return jax.tree_util.tree_map(lambda x: x * scale.astype(x.dtype), tree), norm
+
+
+def adamw(
+    config: AdamWConfig,
+    schedule: Optional[Callable[[jnp.ndarray], jnp.ndarray]] = None,
+):
+    """Returns (init_fn, update_fn).
+
+    update_fn(grads, state, params) -> (new_params, new_state, metrics)
+    """
+
+    def init_fn(params: PyTree) -> AdamWState:
+        zeros = lambda p: jnp.zeros(p.shape, dtype=config.state_dtype)
+        return AdamWState(
+            step=jnp.zeros((), jnp.int32),
+            mu=jax.tree_util.tree_map(zeros, params),
+            nu=jax.tree_util.tree_map(zeros, params),
+        )
+
+    def update_fn(grads: PyTree, state: AdamWState, params: PyTree):
+        step = state.step + 1
+        lr = config.lr * (schedule(step) if schedule is not None else 1.0)
+        metrics = {}
+        if config.grad_clip_norm is not None:
+            grads, gnorm = clip_by_global_norm(grads, config.grad_clip_norm)
+            metrics["grad_norm"] = gnorm
+        b1, b2 = config.b1, config.b2
+        bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g32 = g.astype(config.state_dtype)
+            m = b1 * m + (1 - b1) * g32
+            v = b2 * v + (1 - b2) * jnp.square(g32)
+            mhat = m / bc1
+            vhat = v / bc2
+            delta = mhat / (jnp.sqrt(vhat) + config.eps)
+            if config.weight_decay:
+                delta = delta + config.weight_decay * p.astype(config.state_dtype)
+            new_p = p.astype(config.state_dtype) - lr * delta
+            return new_p.astype(p.dtype), m, v
+
+        flat_p, treedef = jax.tree_util.tree_flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_m = treedef.flatten_up_to(state.mu)
+        flat_v = treedef.flatten_up_to(state.nu)
+        out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+        new_params = treedef.unflatten([o[0] for o in out])
+        new_mu = treedef.unflatten([o[1] for o in out])
+        new_nu = treedef.unflatten([o[2] for o in out])
+        metrics["lr"] = lr
+        return new_params, AdamWState(step, new_mu, new_nu), metrics
+
+    return init_fn, update_fn
+
+
+# -- LR schedules -------------------------------------------------------------
+
+def cosine_schedule(total_steps: int, warmup_steps: int = 0, final_frac: float = 0.0):
+    def fn(step):
+        step = step.astype(jnp.float32)
+        warm = jnp.clip(step / max(warmup_steps, 1), 0.0, 1.0)
+        prog = jnp.clip(
+            (step - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0
+        )
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+        return warm * (final_frac + (1.0 - final_frac) * cos)
+
+    return fn
+
+
+def constant_schedule():
+    return lambda step: jnp.ones_like(step, dtype=jnp.float32)

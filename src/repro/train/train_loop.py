@@ -1,0 +1,141 @@
+"""Training step factory + loop.
+
+``make_train_step`` builds the jit-able (params, opt_state, batch) -> ...
+function: mixed-precision forward (bf16 compute over fp32 master weights),
+remat-able scan groups, AdamW with global-norm clipping.  Under pjit the
+optimizer state inherits the parameters' FSDP sharding (ZeRO-style: moments
+live sharded; XLA turns the gradient sync into reduce-scatter + all-gather
+around the update).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model_zoo import Model
+from repro.train.optimizer import AdamWConfig, adamw, cosine_schedule
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainRunConfig:
+    optimizer: AdamWConfig = AdamWConfig(lr=3e-4, weight_decay=0.1)
+    total_steps: int = 1000
+    warmup_steps: int = 100
+    remat_policy: str = "nothing"
+    compute_dtype: Any = jnp.bfloat16
+    grad_accum: int = 1
+    kernel_backend: str = "auto"
+    scan_unroll: int = 1  # >1: unroll scan-over-layers (exact HLO cost counts)
+
+
+def make_train_step(
+    model: Model, run: TrainRunConfig, grad_shardings: Optional[PyTree] = None
+) -> Tuple[Callable, Callable]:
+    """Returns (train_step, opt_init).
+
+    ``grad_shardings``: optional NamedSharding pytree (mirroring params);
+    when given, gradients are constrained to it before the optimizer update,
+    which steers GSPMD toward reduce-scatter (grads arrive pre-sharded for
+    the ZeRO update) instead of all-reduce + slice.
+    """
+    opt_init, opt_update = adamw(
+        run.optimizer, cosine_schedule(run.total_steps, run.warmup_steps)
+    )
+
+    def loss_fn(params, batch):
+        return model.loss(
+            params, batch,
+            remat_policy=run.remat_policy,
+            compute_dtype=run.compute_dtype,
+            backend=run.kernel_backend,
+            scan_unroll=run.scan_unroll,
+        )
+
+    def train_step(params, opt_state, batch):
+        if run.grad_accum > 1:
+            # microbatch over the leading batch dim.  Statically unrolled:
+            # the microbatch count is a config constant, unrolling lets XLA
+            # overlap microbatches AND keeps HLO cost analysis exact (loop
+            # bodies are tallied once by cost_analysis).
+            n = run.grad_accum
+
+            def micro(i):
+                mb = jax.tree_util.tree_map(
+                    lambda x: jax.lax.dynamic_slice_in_dim(
+                        x, i * (x.shape[0] // n), x.shape[0] // n, 0,
+                    ),
+                    batch,
+                )
+                (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, mb
+                )
+                return l, g
+
+            loss, grads = micro(0)
+            for i in range(1, n):
+                l_i, g_i = micro(i)
+                loss = loss + l_i
+                grads = jax.tree_util.tree_map(jnp.add, grads, g_i)
+            grads = jax.tree_util.tree_map(lambda g: g / n, grads)
+            loss = loss / n
+            metrics = {"xent": loss}
+        else:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True
+            )(params, batch)
+        import os
+
+        if os.environ.get("REPRO_GRAD_SYNC_BF16", "0") == "1":
+            # round-trip grads through bf16 so the cross-shard reduction
+            # rides the wire at 2 bytes/element (standard large-scale
+            # practice; fp32 master accumulation happens in the optimizer)
+            grads = jax.tree_util.tree_map(
+                lambda g: g.astype(jnp.bfloat16).astype(jnp.float32), grads
+            )
+        if grad_shardings is not None:
+            grads = jax.tree_util.tree_map(
+                jax.lax.with_sharding_constraint, grads, grad_shardings
+            )
+        params, opt_state, om = opt_update(grads, opt_state, params)
+        return params, opt_state, {"loss": loss, **metrics, **om}
+
+    return train_step, opt_init
+
+
+def train_loop(
+    model: Model,
+    params: PyTree,
+    batches,                      # iterable of batches
+    run: TrainRunConfig,
+    *,
+    log_every: int = 10,
+    checkpointer=None,
+    checkpoint_every: int = 0,
+    start_step: int = 0,
+    opt_state: Optional[PyTree] = None,
+) -> Tuple[PyTree, PyTree, list]:
+    """Single-process training loop (examples / integration tests)."""
+    train_step, opt_init = make_train_step(model, run)
+    step_fn = jax.jit(train_step, donate_argnums=(0, 1))
+    if opt_state is None:
+        opt_state = opt_init(params)
+    history = []
+    t0 = time.time()
+    for step, batch in enumerate(batches, start=start_step):
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        if log_every and (step + 1) % log_every == 0:
+            loss = float(metrics["loss"])
+            dt = (time.time() - t0) / log_every
+            history.append({"step": step + 1, "loss": loss, "s_per_step": dt})
+            print(f"step {step + 1}: loss={loss:.4f} ({dt:.2f}s/step)")
+            t0 = time.time()
+        if checkpointer and checkpoint_every and (step + 1) % checkpoint_every == 0:
+            checkpointer.save(step + 1, {"params": params, "opt": opt_state})
+    return params, opt_state, history

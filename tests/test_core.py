@@ -1,0 +1,193 @@
+"""BandPilot core tests: simulator, tables, oracle, search, dispatchers."""
+
+import itertools
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import repro.core as core
+from repro.core import baselines, search
+from repro.core.bandwidth_sim import BandwidthSimulator, intra_aggregate_bw
+from repro.core.cluster import HOST_TYPES, Cluster, availability_scenario
+
+
+@pytest.fixture(scope="module")
+def h100():
+    cl = core.h100_cluster()
+    sim = BandwidthSimulator(cl)
+    tables = core.IntraHostTables(cl, sim)
+    return cl, sim, tables
+
+
+@pytest.fixture(scope="module")
+def mix():
+    cl = core.het_4mix_cluster()
+    sim = BandwidthSimulator(cl)
+    tables = core.IntraHostTables(cl, sim)
+    return cl, sim, tables
+
+
+# ---------------------------------------------------------------------------
+# Simulator
+# ---------------------------------------------------------------------------
+
+def test_fig1_reproduction(h100):
+    """The paper's headline measurements: balance beats compactness."""
+    _, sim, _ = h100
+    b44 = sim.true_bandwidth(list(range(0, 4)) + list(range(8, 12)))
+    b62 = sim.true_bandwidth(list(range(0, 6)) + list(range(8, 10)))
+    b55 = sim.true_bandwidth(list(range(0, 5)) + list(range(8, 13)))
+    b82 = sim.true_bandwidth(list(range(0, 8)) + list(range(8, 10)))
+    # orderings from Fig. 1
+    assert b44 > 2.2 * b62 * 0.8  # 337 vs 153 => ~2.2x (within jitter)
+    assert b55 > 2.0 * b82
+    # absolute calibration within ~10% of the paper's numbers
+    for got, paper in [(b44, 337.17), (b62, 153.44), (b55, 412.49),
+                       (b82, 157.30)]:
+        assert abs(got - paper) / paper < 0.10, (got, paper)
+
+
+def test_anti_locality_4090():
+    """Fig. 2: on 4090 hosts remote (SYS) pairs beat proximal (PXB) pairs."""
+    ht = HOST_TYPES["RTX4090"]
+    assert intra_aggregate_bw(ht, (0, 7)) > intra_aggregate_bw(ht, (0, 1))
+
+
+def test_bandwidth_deterministic(h100):
+    _, sim, _ = h100
+    s = [0, 1, 8, 9, 16]
+    assert sim.true_bandwidth(s) == sim.true_bandwidth(list(reversed(s)))
+
+
+def test_measurement_noise(h100):
+    _, sim, _ = h100
+    rng = np.random.default_rng(0)
+    vals = {sim.measure([0, 1, 8, 9], rng) for _ in range(5)}
+    assert len(vals) > 1  # noisy
+    base = sim.true_bandwidth([0, 1, 8, 9])
+    assert all(abs(v - base) / base < 0.1 for v in vals)
+
+
+def test_single_host_beats_cross_host_on_h100(h100):
+    _, sim, _ = h100
+    single = sim.true_bandwidth(list(range(8)))
+    cross = sim.true_bandwidth(list(range(4)) + list(range(8, 12)))
+    assert single > cross
+
+
+# ---------------------------------------------------------------------------
+# Stage-1 tables + oracle
+# ---------------------------------------------------------------------------
+
+def test_tables_cover_all_combos(h100):
+    cl, _, tables = h100
+    assert all(len(t) == 255 for t in tables.tables)
+    assert tables.storage_bytes() < 100 * 1024  # ~12KB/host claim
+
+
+def test_oracle_matches_brute_force(mix):
+    """Exact count-vector oracle == literal brute force on small pools."""
+    cl, sim, tables = mix
+    rng = np.random.default_rng(3)
+    for trial in range(4):
+        avail = sorted(rng.choice(cl.n_gpus, size=12, replace=False).tolist())
+        for k in (3, 5):
+            s1, bw1 = baselines.oracle_dispatch(cl, sim, tables, avail, k)
+            s2, bw2 = baselines.brute_force_oracle(cl, sim, avail, k)
+            assert abs(bw1 - bw2) < 1e-9, (trial, k, bw1, bw2)
+
+
+def test_dispatchers_return_valid_allocations(h100):
+    cl, sim, tables = h100
+    rng = np.random.default_rng(1)
+    avail = availability_scenario(cl, rng, frac_busy=0.3)
+    k = min(6, len(avail))
+    for fn in [
+        lambda: baselines.random_dispatch(cl, avail, k, rng),
+        lambda: baselines.default_dispatch(cl, avail, k),
+        lambda: baselines.topo_dispatch(cl, avail, k),
+    ]:
+        sub = fn()
+        assert len(sub) == k and len(set(sub)) == k
+        assert set(sub) <= set(avail)
+
+
+def test_topo_prefers_compact_unbalanced(h100):
+    """The paper's criticism: Topo picks 6+2 over 4+4 (Fig. 1 scenario)."""
+    cl, sim, tables = h100
+    avail = list(range(0, 6)) + list(range(8, 14))  # two hosts, 6 idle each
+    sub = baselines.topo_dispatch(cl, avail, 8)
+    by_host = cl.partition_by_host(sub)
+    counts = sorted(len(v) for v in by_host.values())
+    assert counts == [2, 6]  # compact-but-unbalanced
+
+
+def test_eha_finds_balanced_allocation(h100):
+    """BandPilot's EHA picks 4+4 in the same scenario and wins on bandwidth."""
+    cl, sim, tables = h100
+    gt = core.GroundTruthPredictor(sim)
+    avail = list(range(0, 6)) + list(range(8, 14))
+    res = search.eha_search(cl, tables, gt, avail, 8)
+    counts = sorted(
+        len(v) for v in cl.partition_by_host(res.subset).values()
+    )
+    assert counts == [4, 4]
+    topo = baselines.topo_dispatch(cl, avail, 8)
+    assert sim.true_bandwidth(res.subset) > 1.5 * sim.true_bandwidth(topo)
+
+
+def test_pts_single_host_pruning(h100):
+    cl, sim, tables = h100
+    gt = core.GroundTruthPredictor(sim)
+    res = search.pts_search(cl, tables, gt, cl.all_gpus(), 4)
+    # k<=8 with full hosts available: must land inside one host
+    assert len(cl.partition_by_host(res.subset)) == 1
+
+
+def test_hybrid_beats_or_ties_components(mix):
+    cl, sim, tables = mix
+    gt = core.GroundTruthPredictor(sim)
+    rng = np.random.default_rng(7)
+    for _ in range(3):
+        avail = availability_scenario(cl, rng, frac_busy=0.25)
+        k = min(10, len(avail))
+        hyb = search.hybrid_search(cl, tables, gt, avail, k)
+        assert hyb.predicted_bw >= max(
+            hyb.eha.predicted_bw, hyb.pts.predicted_bw
+        ) - 1e-9
+
+
+@settings(max_examples=15, deadline=None)
+@given(k=st.integers(1, 12), seed=st.integers(0, 100))
+def test_search_validity_property(k, seed):
+    """Property: every search result is a valid k-subset of the pool."""
+    cl = core.h100_cluster()
+    sim = BandwidthSimulator(cl)
+    tables = core.IntraHostTables(cl, sim)
+    gt = core.GroundTruthPredictor(sim)
+    rng = np.random.default_rng(seed)
+    avail = availability_scenario(cl, rng, frac_busy=0.3)
+    if len(avail) < k:
+        avail = cl.all_gpus()
+    res = search.hybrid_search(cl, tables, gt, avail, k)
+    assert len(res.subset) == k
+    assert len(set(res.subset)) == k
+    assert set(res.subset) <= set(avail)
+
+
+# ---------------------------------------------------------------------------
+# End-to-end GBE sanity (Ideal-BP; surrogate-driven numbers live in benches)
+# ---------------------------------------------------------------------------
+
+def test_ideal_bp_near_oracle_h100(h100):
+    cl, sim, tables = h100
+    gt = core.GroundTruthPredictor(sim)
+    bp = core.BandPilotDispatcher(cl, tables, gt, name="Ideal-BP")
+    ds = [bp, core.BaselineDispatcher(cl, "topo")]
+    recs = core.evaluate_dispatchers(
+        cl, sim, tables, ds, request_sizes=[6, 10, 14], n_scenarios=6, seed=5
+    )
+    summ = core.summarize(recs)
+    assert summ["Ideal-BP"]["mean_gbe"] > 0.97
+    assert summ["Ideal-BP"]["mean_gbe"] > summ["Topo"]["mean_gbe"]

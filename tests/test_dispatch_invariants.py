@@ -1,0 +1,83 @@
+"""System-level dispatching invariants (property-based)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import repro.core as core
+from repro.core import baselines, search
+from repro.core.cluster import availability_scenario
+from repro.core.search import balanced_count_assignments
+
+
+@pytest.fixture(scope="module")
+def ctx():
+    cl = core.het_va_cluster()
+    sim = core.BandwidthSimulator(cl)
+    tables = core.IntraHostTables(cl, sim)
+    return cl, sim, tables
+
+
+def test_oracle_dominates_every_dispatcher(ctx):
+    """B(oracle) >= B(any dispatcher) on every scenario — by definition,
+    but this exercises the whole stack end to end."""
+    cl, sim, tables = ctx
+    gt = core.GroundTruthPredictor(sim)
+    bp = core.BandPilotDispatcher(cl, tables, gt)
+    rng = np.random.default_rng(0)
+    for seed in range(5):
+        avail = availability_scenario(cl, rng, frac_busy=0.25)
+        k = min(9, len(avail))
+        _, opt_bw = baselines.oracle_dispatch(cl, sim, tables, avail, k)
+        for sub in [
+            bp.dispatch(avail, k),
+            baselines.topo_dispatch(cl, avail, k),
+            baselines.default_dispatch(cl, avail, k),
+        ]:
+            assert sim.true_bandwidth(sub) <= opt_bw + 1e-9
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    caps=st.lists(st.integers(1, 8), min_size=2, max_size=5),
+    k=st.integers(2, 16),
+)
+def test_balanced_assignments_properties(caps, k):
+    """Every generated assignment sums to k, respects capacities, and is
+    near-even (max-min <= 1 unless capacity forces otherwise)."""
+    if sum(caps) < k:
+        return
+    assignments = balanced_count_assignments(caps, k)
+    assert assignments, (caps, k)
+    for counts in assignments:
+        assert sum(counts) == k
+        assert all(0 <= c <= cap for c, cap in zip(counts, caps))
+        uncapped = [c for c, cap in zip(counts, caps) if c < cap]
+        if len(uncapped) == len(counts):  # no host saturated
+            assert max(counts) - min(counts) <= 1
+
+
+def test_ideal_bp_gbe_exceeds_random_everywhere(ctx):
+    cl, sim, tables = ctx
+    gt = core.GroundTruthPredictor(sim)
+    ds = [
+        core.BandPilotDispatcher(cl, tables, gt, name="Ideal-BP"),
+        core.BaselineDispatcher(cl, "random"),
+    ]
+    recs = core.evaluate_dispatchers(
+        cl, sim, tables, ds, request_sizes=[6, 12, 18], n_scenarios=5, seed=3
+    )
+    by_k = core.gbe_by_k(recs)
+    for k in by_k["Ideal-BP"]:
+        assert by_k["Ideal-BP"][k] >= by_k["Random"][k] - 1e-9
+        assert by_k["Ideal-BP"][k] <= 1.0 + 1e-9
+
+
+def test_gbe_is_bounded(ctx):
+    cl, sim, tables = ctx
+    gt = core.GroundTruthPredictor(sim)
+    ds = [core.BandPilotDispatcher(cl, tables, gt)]
+    recs = core.evaluate_dispatchers(
+        cl, sim, tables, ds, request_sizes=[8], n_scenarios=4, seed=9
+    )
+    assert all(0 < r.gbe <= 1.0 + 1e-9 for r in recs)

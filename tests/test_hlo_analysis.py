@@ -1,0 +1,117 @@
+"""HLO collective-parser tests + roofline calibration.
+
+The calibration test runs a real (tiny) SPMD compile in a subprocess with 8
+forced host devices — never in this process, so the rest of the suite keeps
+the default single-device backend — and pins the semantics the roofline
+relies on: post-SPMD modules report *per-device* shapes/FLOPs, and a known
+matmul's collective traffic is what the parser says it is.
+"""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.launch import hlo_analysis as ha
+
+SAMPLE_HLO = """
+HloModule test
+ENTRY main {
+  p0 = f32[128,256]{1,0} parameter(0)
+  ag = f32[128,1024]{1,0} all-gather(p0), dimensions={1}, replica_groups={{0,1,2,3}}
+  ar = bf16[64,64]{1,0} all-reduce(something), replica_groups={{0,1},{2,3}}
+  rs = f32[32,256]{1,0} reduce-scatter(x), replica_groups={{0,4},{1,5}}
+  cp = f32[16]{0} collective-permute(y), source_target_pairs={{0,1}}
+  notacoll = f32[8,8]{1,0} add(a, b)
+}
+"""
+
+
+def test_parse_collectives_kinds_and_bytes():
+    ops = ha.parse_collectives(SAMPLE_HLO)
+    kinds = sorted(o.kind for o in ops)
+    assert kinds == ["all-gather", "all-reduce", "collective-permute",
+                     "reduce-scatter"]
+    by_kind = {o.kind: o.bytes for o in ops}
+    assert by_kind["all-gather"] == 128 * 1024 * 4
+    assert by_kind["all-reduce"] == 64 * 64 * 2
+    assert by_kind["reduce-scatter"] == 32 * 256 * 4
+    assert by_kind["collective-permute"] == 16 * 4
+
+
+def test_fabric_split_by_pod():
+    ops = ha.parse_collectives(SAMPLE_HLO)
+    ici, dcn, _ = ha.split_by_fabric(ops, pod_size=4)
+    # reduce-scatter groups {0,4} cross pods of size 4 -> DCN
+    assert dcn == 32 * 256 * 4
+    assert ici == 128 * 1024 * 4 + 64 * 64 * 2 + 16 * 4
+
+
+def test_shape_bytes_dtypes():
+    assert ha._shape_bytes("bf16[2,3]") == 12
+    assert ha._shape_bytes("s8[100]") == 100
+    assert ha._shape_bytes("f32[]") == 4
+    assert ha._shape_bytes("pred[7]") == 7
+
+
+CALIBRATION_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import jax, jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.launch import hlo_analysis as ha
+
+    mesh = jax.make_mesh((8,), ("model",))
+    M, K, N = 256, 512, 1024
+
+    def f(a, b):
+        return a @ b
+
+    a_sh = NamedSharding(mesh, P(None, None))
+    b_sh = NamedSharding(mesh, P(None, "model"))
+    out_sh = NamedSharding(mesh, P())  # replicated output forces all-gather
+    with mesh:
+        lowered = jax.jit(
+            f, in_shardings=(a_sh, b_sh), out_shardings=out_sh
+        ).lower(
+            jax.ShapeDtypeStruct((M, K), jnp.float32),
+            jax.ShapeDtypeStruct((K, N), jnp.float32),
+        )
+        compiled = lowered.compile()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    coll = ha.collective_summary(compiled.as_text(), pod_size=8)
+    print(json.dumps({
+        "flops": cost.get("flops", 0.0),
+        "colls": coll["by_kind"],
+        "total": coll["total_bytes"],
+    }))
+""")
+
+
+def test_spmd_cost_analysis_is_per_device():
+    """Pin: compiled cost_analysis reports the per-partition module."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run(
+        [sys.executable, "-c", CALIBRATION_SCRIPT],
+        capture_output=True, text=True, env=env, timeout=300,
+    )
+    assert out.returncode == 0, out.stderr[-2000:]
+    data = json.loads(out.stdout.strip().splitlines()[-1])
+    M, K, N = 256, 512, 1024
+    full_flops = 2 * M * K * N          # whole matmul
+    per_dev = full_flops / 8            # N sharded 8 ways
+    assert abs(data["flops"] - per_dev) / per_dev < 0.2, data
+    # replicated output => all-gather of the [M, N/8] partials
+    assert data["total"] > 0
+    ag = data["colls"].get("all-gather", 0)
+    assert ag >= M * N * 4 * 0.9, data  # gathered output ~ M*N fp32

@@ -1,0 +1,232 @@
+"""Per-kernel validation: Pallas (interpret mode) vs pure-jnp oracle.
+
+Sweeps shapes and dtypes per kernel and asserts allclose against ref.py;
+hypothesis drives randomized shape/value property tests.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_attention import ops as fa_ops, ref as fa_ref
+from repro.kernels.rglru import ops as lru_ops, ref as lru_ref
+from repro.kernels.rwkv6 import ops as wkv_ops, ref as wkv_ref
+
+RNG = np.random.default_rng(0)
+
+
+def _tol(dtype):
+    return 6e-2 if dtype == jnp.bfloat16 else 3e-5
+
+
+# ---------------------------------------------------------------------------
+# Flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "B,Sq,Sk,Hq,Hkv,D,causal,window,softcap",
+    [
+        (2, 256, 256, 4, 2, 64, True, None, None),    # GQA causal
+        (1, 256, 256, 8, 1, 128, True, None, None),   # MQA, wide head
+        (2, 128, 256, 4, 4, 64, False, None, None),   # bidirectional (encoder)
+        (1, 256, 256, 4, 2, 64, True, 128, None),     # sliding window
+        (1, 256, 256, 4, 2, 64, True, None, 30.0),    # logit softcap (gemma2)
+        (1, 384, 384, 2, 2, 256, True, 256, 50.0),    # window+cap, head_dim 256
+    ],
+)
+def test_flash_attention_matches_reference(
+    B, Sq, Sk, Hq, Hkv, D, causal, window, softcap, dtype
+):
+    q = jnp.asarray(RNG.standard_normal((B, Sq, Hq, D)), dtype)
+    k = jnp.asarray(RNG.standard_normal((B, Sk, Hkv, D)), dtype)
+    v = jnp.asarray(RNG.standard_normal((B, Sk, Hkv, D)), dtype)
+    out_k = fa_ops.attention(
+        q, k, v, causal=causal, window=window, softcap=softcap,
+        backend="interpret",
+    )
+    out_r = fa_ref.mha_reference(
+        q, k, v, causal=causal, window=window, softcap=softcap
+    )
+    np.testing.assert_allclose(
+        np.asarray(out_k, np.float32),
+        np.asarray(out_r, np.float32),
+        atol=_tol(dtype), rtol=_tol(dtype),
+    )
+
+
+def test_flash_attention_q_offset_decode_tile():
+    """Decode-style: a 128-query tile positioned at the end of a long cache."""
+    B, S_k, H, D = 1, 512, 4, 64
+    q = jnp.asarray(RNG.standard_normal((B, 128, H, D)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((B, S_k, H, D)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((B, S_k, H, D)), jnp.float32)
+    off = S_k - 128
+    out_k = fa_ops.attention(q, k, v, causal=True, q_offset=off,
+                             backend="interpret")
+    out_r = fa_ref.mha_reference(q, k, v, causal=True, q_offset=off)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r), atol=3e-5)
+
+
+def test_flash_attention_grad_matches_reference():
+    B, S, H, D = 1, 256, 2, 64
+    q = jnp.asarray(RNG.standard_normal((B, S, H, D)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((B, S, H, D)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((B, S, H, D)), jnp.float32)
+
+    def loss_k(q, k, v):
+        return fa_ops.attention(q, k, v, backend="interpret").sum()
+
+    def loss_r(q, k, v):
+        return fa_ref.mha_reference(q, k, v).sum()
+
+    gk = jax.grad(loss_k, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(loss_r, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(gk, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    s_mult=st.integers(1, 3),
+    hq_log=st.integers(0, 3),
+    group_log=st.integers(0, 2),
+    causal=st.booleans(),
+)
+def test_flash_attention_property_random_shapes(s_mult, hq_log, group_log, causal):
+    """Property: kernel == oracle for random (seq, heads, group) combos."""
+    S = 128 * s_mult
+    Hkv = 2**hq_log
+    Hq = Hkv * 2**group_log
+    D = 64
+    rng = np.random.default_rng(s_mult * 100 + hq_log * 10 + group_log)
+    q = jnp.asarray(rng.standard_normal((1, S, Hq, D)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, S, Hkv, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, S, Hkv, D)), jnp.float32)
+    out_k = fa_ops.attention(q, k, v, causal=causal, backend="interpret")
+    out_r = fa_ref.mha_reference(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r), atol=3e-5)
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU linear scan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,T,C", [(2, 256, 256), (1, 128, 512), (3, 384, 128)])
+def test_rglru_scan_matches_reference(B, T, C, dtype):
+    a = jnp.asarray(RNG.uniform(0.7, 0.999, (B, T, C)), dtype)
+    b = jnp.asarray(RNG.standard_normal((B, T, C)) * 0.1, dtype)
+    h0 = jnp.asarray(RNG.standard_normal((B, C)) * 0.1, dtype)
+    hk, hnk = lru_ops.linear_scan(a, b, h0, backend="interpret")
+    hr, hnr = lru_ref.linear_scan_reference(a, b, h0)
+    np.testing.assert_allclose(
+        np.asarray(hk, np.float32), np.asarray(hr, np.float32),
+        atol=_tol(dtype), rtol=_tol(dtype),
+    )
+    np.testing.assert_allclose(
+        np.asarray(hnk, np.float32), np.asarray(hnr, np.float32),
+        atol=_tol(dtype), rtol=_tol(dtype),
+    )
+
+
+def test_rglru_associative_equals_sequential():
+    a = jnp.asarray(RNG.uniform(0.5, 1.0, (2, 200, 64)), jnp.float32)
+    b = jnp.asarray(RNG.standard_normal((2, 200, 64)), jnp.float32)
+    h0 = jnp.asarray(RNG.standard_normal((2, 64)), jnp.float32)
+    hs, _ = lru_ref.linear_scan_reference(a, b, h0)
+    ha, _ = lru_ref.linear_scan_associative(a, b, h0)
+    np.testing.assert_allclose(np.asarray(hs), np.asarray(ha), atol=1e-5)
+
+
+def test_rglru_custom_vjp_matches_autodiff():
+    B, T, C = 1, 128, 128
+    a = jnp.asarray(RNG.uniform(0.7, 0.999, (B, T, C)), jnp.float32)
+    b = jnp.asarray(RNG.standard_normal((B, T, C)) * 0.1, jnp.float32)
+    h0 = jnp.asarray(RNG.standard_normal((B, C)) * 0.1, jnp.float32)
+
+    def f_kernel(a, b, h0):
+        h, hn = lru_ops.linear_scan(a, b, h0, backend="interpret")
+        return (h * jnp.arange(1, T + 1)[None, :, None]).sum() + 2.0 * hn.sum()
+
+    def f_ref(a, b, h0):
+        h, hn = lru_ref.linear_scan_reference(a, b, h0)
+        return (h * jnp.arange(1, T + 1)[None, :, None]).sum() + 2.0 * hn.sum()
+
+    gk = jax.grad(f_kernel, argnums=(0, 1, 2))(a, b, h0)
+    gr = jax.grad(f_ref, argnums=(0, 1, 2))(a, b, h0)
+    for x, y in zip(gk, gr):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=1e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    t_mult=st.integers(1, 4),
+    c_mult=st.integers(1, 4),
+    decay_lo=st.floats(0.1, 0.9),
+)
+def test_rglru_property_stability(t_mult, c_mult, decay_lo):
+    """Property: with |a|<1 and bounded b, the state stays bounded by
+    max|b| / (1 - max a) + |h0| — the scan never diverges."""
+    B, T, C = 1, 64 * t_mult, 64 * c_mult
+    rng = np.random.default_rng(t_mult * 10 + c_mult)
+    a_hi = 0.99
+    a = jnp.asarray(rng.uniform(decay_lo, a_hi, (B, T, C)), jnp.float32)
+    b = jnp.asarray(rng.uniform(-1.0, 1.0, (B, T, C)), jnp.float32)
+    h, hn = lru_ops.linear_scan(a, b, backend="interpret")
+    bound = 1.0 / (1.0 - a_hi) + 1e-3
+    assert float(jnp.max(jnp.abs(h))) <= bound
+    assert np.isfinite(np.asarray(hn)).all()
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 WKV
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,T,H,K", [(2, 128, 2, 64), (1, 64, 4, 64), (1, 128, 1, 128)])
+def test_wkv6_matches_reference(B, T, H, K, dtype):
+    r = jnp.asarray(RNG.standard_normal((B, T, H, K)) * 0.5, dtype)
+    k = jnp.asarray(RNG.standard_normal((B, T, H, K)) * 0.5, dtype)
+    v = jnp.asarray(RNG.standard_normal((B, T, H, K)) * 0.5, dtype)
+    w = jnp.asarray(RNG.uniform(0.8, 0.999, (B, T, H, K)), dtype)
+    u = jnp.asarray(RNG.standard_normal((H, K)) * 0.5, dtype)
+    s0 = jnp.asarray(RNG.standard_normal((B, H, K, K)) * 0.1, jnp.float32)
+    yk, snk = wkv_ops.wkv(r, k, v, w, u, s0, backend="interpret")
+    yr, snr = wkv_ref.wkv6_reference(r, k, v, w, u, s0)
+    np.testing.assert_allclose(
+        np.asarray(yk, np.float32), np.asarray(yr, np.float32),
+        atol=10 * _tol(dtype), rtol=10 * _tol(dtype),
+    )
+    np.testing.assert_allclose(
+        np.asarray(snk), np.asarray(snr), atol=10 * _tol(dtype),
+        rtol=10 * _tol(dtype),
+    )
+
+
+def test_wkv6_state_chaining():
+    """Splitting a sequence in two and chaining the state must equal the
+    full-sequence result (the invariant KV-cache-free decode relies on)."""
+    B, T, H, K = 1, 128, 2, 64
+    r = jnp.asarray(RNG.standard_normal((B, T, H, K)) * 0.5, jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((B, T, H, K)) * 0.5, jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((B, T, H, K)) * 0.5, jnp.float32)
+    w = jnp.asarray(RNG.uniform(0.8, 0.999, (B, T, H, K)), jnp.float32)
+    u = jnp.asarray(RNG.standard_normal((H, K)) * 0.5, jnp.float32)
+    y_full, s_full = wkv_ops.wkv(r, k, v, w, u, backend="interpret")
+    half = T // 2
+    y1, s1 = wkv_ops.wkv(
+        r[:, :half], k[:, :half], v[:, :half], w[:, :half], u,
+        backend="interpret",
+    )
+    y2, s2 = wkv_ops.wkv(
+        r[:, half:], k[:, half:], v[:, half:], w[:, half:], u, s1,
+        backend="interpret",
+    )
+    np.testing.assert_allclose(
+        np.asarray(jnp.concatenate([y1, y2], axis=1)), np.asarray(y_full),
+        atol=1e-4,
+    )
+    np.testing.assert_allclose(np.asarray(s2), np.asarray(s_full), atol=1e-4)

@@ -1,0 +1,105 @@
+"""MoE layer invariants: routing, capacity, load-balance loss."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import ARCHS
+from repro.models import moe
+from repro.models.common import KeyGen
+
+
+def _cfg(E=8, k=2, cap=8.0, d=32, ff=64):
+    base = ARCHS["phi3.5-moe-42b-a6.6b"].reduced()
+    return dataclasses.replace(
+        base, d_model=d, d_ff=ff, n_experts=E, experts_per_token=k,
+        moe_capacity_factor=cap,
+    )
+
+
+def _params(cfg, seed=0):
+    return moe.init_moe(KeyGen(jax.random.PRNGKey(seed)), cfg, jnp.float32)
+
+
+def test_moe_output_shape_and_finite():
+    cfg = _cfg()
+    p = _params(cfg)
+    x = jnp.asarray(np.random.default_rng(0).standard_normal((2, 16, 32)),
+                    jnp.float32)
+    out, aux = moe.moe_block(p, cfg, x, group_size=16)
+    assert out.shape == x.shape
+    assert np.isfinite(np.asarray(out)).all()
+    assert float(aux) > 0
+
+
+def test_moe_nodrop_equals_manual_topk():
+    """With no-drop capacity, output == manual weighted expert mixture."""
+    cfg = _cfg(E=4, k=2, cap=4.0 / 2.0)  # C = g*k/E * E/k = g -> no drops
+    p = _params(cfg)
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal((1, 8, 32)), jnp.float32)
+    out, _ = moe.moe_block(p, cfg, x, group_size=8)
+
+    # manual dense computation
+    logits = (x @ p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, -1)
+    top_vals, top_idx = jax.lax.top_k(probs, 2)
+    top_vals = top_vals / top_vals.sum(-1, keepdims=True)
+
+    def expert(e, t):  # t: [d]
+        h = jax.nn.silu(t @ p["w_gate"][e]) * (t @ p["w_up"][e])
+        return h @ p["w_down"][e]
+
+    expect = np.zeros_like(np.asarray(out))
+    for b in range(1):
+        for s in range(8):
+            for j in range(2):
+                e = int(top_idx[b, s, j])
+                expect[b, s] += float(top_vals[b, s, j]) * np.asarray(
+                    expert(e, x[b, s])
+                )
+    np.testing.assert_allclose(np.asarray(out), expect, atol=2e-2, rtol=2e-2)
+
+
+def test_moe_capacity_drops_tokens():
+    """With capacity factor << 1, most tokens are dropped (output ~ 0)."""
+    cfg_full = _cfg(E=4, k=1, cap=4.0)
+    cfg_tight = dataclasses.replace(cfg_full, moe_capacity_factor=0.1)
+    p = _params(cfg_full)
+    x = jnp.asarray(np.random.default_rng(2).standard_normal((1, 32, 32)),
+                    jnp.float32)
+    out_full, _ = moe.moe_block(p, cfg_full, x, group_size=32)
+    out_tight, _ = moe.moe_block(p, cfg_tight, x, group_size=32)
+    # tight capacity zeroes most rows
+    zero_rows = np.mean(
+        np.all(np.abs(np.asarray(out_tight)) < 1e-9, axis=-1)
+    )
+    assert zero_rows > 0.5
+    assert not np.allclose(np.asarray(out_full), np.asarray(out_tight))
+
+
+def test_moe_priority_keeps_primary_expert():
+    """k-major queueing: primary (slot-0) routes win capacity over slot-1."""
+    cfg = _cfg(E=2, k=2, cap=0.5)  # tiny capacity forces contention
+    p = _params(cfg)
+    x = jnp.asarray(np.random.default_rng(3).standard_normal((1, 16, 32)),
+                    jnp.float32)
+    out, _ = moe.moe_block(p, cfg, x, group_size=16)
+    assert np.isfinite(np.asarray(out)).all()
+
+
+@settings(max_examples=8, deadline=None)
+@given(g=st.sampled_from([8, 16, 32]), E=st.sampled_from([2, 4, 8]),
+       seed=st.integers(0, 5))
+def test_moe_aux_loss_bounds(g, E, seed):
+    """Switch aux loss: >= 1 (perfect balance) and <= E (total collapse)."""
+    cfg = _cfg(E=E, k=1)
+    p = _params(cfg, seed)
+    x = jnp.asarray(np.random.default_rng(seed).standard_normal((1, g, 32)),
+                    jnp.float32)
+    _, aux = moe.moe_block(p, cfg, x, group_size=g)
+    assert 0.5 <= float(aux) <= E + 1e-3

@@ -1,0 +1,73 @@
+"""Pipeline-parallelism tests: GPipe schedule == sequential oracle.
+
+The multi-device run executes in a subprocess with 4 forced host devices
+(the main pytest process keeps its single-device backend).
+"""
+
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.parallel.pipeline import bubble_fraction, pipeline_reference
+
+
+def test_pipeline_reference_matches_manual_fold():
+    rng = np.random.default_rng(0)
+    params = {"w": jnp.asarray(rng.standard_normal((3, 8, 8)), jnp.float32)}
+    x = jnp.asarray(rng.standard_normal((5, 2, 8)), jnp.float32)
+
+    def stage(p, h):
+        return jnp.tanh(h @ p["w"])
+
+    out = pipeline_reference(stage, params, x)
+    h = x[0]
+    for s in range(3):
+        h = jnp.tanh(h @ params["w"][s])
+    np.testing.assert_allclose(np.asarray(out[0]), np.asarray(h), atol=1e-6)
+
+
+def test_bubble_fraction():
+    assert bubble_fraction(8, 4) == 3 / 11
+    assert bubble_fraction(1, 1) == 0.0
+
+
+_PIPE_SCRIPT = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import jax, jax.numpy as jnp, numpy as np
+from repro.parallel.pipeline import pipeline_apply, pipeline_reference
+
+mesh = jax.make_mesh((4,), ("pod",))
+rng = np.random.default_rng(0)
+N_STAGES, N_MICRO, MB, D = 4, 6, 2, 16
+params = {
+    "w": jnp.asarray(rng.standard_normal((N_STAGES, D, D)) * 0.5, jnp.float32),
+    "b": jnp.asarray(rng.standard_normal((N_STAGES, D)) * 0.1, jnp.float32),
+}
+x = jnp.asarray(rng.standard_normal((N_MICRO, MB, D)), jnp.float32)
+
+def stage(p, h):
+    return jnp.tanh(h @ p["w"] + p["b"])
+
+got = jax.jit(
+    lambda pp, xx: pipeline_apply(stage, pp, xx, mesh, axis="pod")
+)(params, x)
+want = pipeline_reference(stage, params, x)
+np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+print("PIPE_OK")
+"""
+
+
+def test_pipeline_apply_matches_reference_4stages():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run(
+        [sys.executable, "-c", _PIPE_SCRIPT], capture_output=True, text=True,
+        env=env, timeout=300,
+    )
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "PIPE_OK" in out.stdout
