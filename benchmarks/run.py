@@ -22,6 +22,7 @@ from benchmarks import (
     bench_search_ablation,
     bench_offline_cost,
     bench_llama70b_delta,
+    bench_contention,
 )
 
 BENCHES = [
@@ -33,6 +34,7 @@ BENCHES = [
     ("fig10_search_ablation", bench_search_ablation.run),
     ("table3_offline_cost", bench_offline_cost.run),
     ("appendixA_llama70b_delta", bench_llama70b_delta.run),
+    ("sec44_contention", bench_contention.run),
 ]
 
 

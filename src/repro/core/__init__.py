@@ -11,9 +11,19 @@ Public surface:
   Dispatchers + evaluation (Sec. 5):
     dispatcher.BandPilotDispatcher / BaselineDispatcher / evaluate_dispatchers,
     baselines.oracle_dispatch
+  Multi-tenant contention (Sec. 4.4):
+    tenancy.JobLedger / Allocation, contention.ContentionAwarePredictor /
+    virtual_merge, dispatcher.replay_trace / poisson_trace /
+    compare_contention_awareness (admit/release service lifecycle)
 """
 
 from repro.core.bandwidth_sim import BW_SCALE, BandwidthSimulator
+from repro.core.contention import (
+    ContentionAwarePredictor,
+    MergeView,
+    contended_inter_cap,
+    virtual_merge,
+)
 from repro.core.cluster import (
     Cluster,
     PAPER_CLUSTERS,
@@ -26,13 +36,21 @@ from repro.core.cluster import (
 from repro.core.dispatcher import (
     BandPilotDispatcher,
     BaselineDispatcher,
+    DispatcherService,
     GroundTruthPredictor,
+    TenantRecord,
+    TraceJob,
     bw_loss_by_k,
+    compare_contention_awareness,
     evaluate_dispatchers,
     gbe_by_k,
+    poisson_trace,
+    replay_trace,
     summarize,
+    summarize_trace,
 )
 from repro.core.intra_host import IntraHostTables
+from repro.core.tenancy import Allocation, JobLedger
 from repro.core.search import eha_search, hybrid_search, pts_search
 from repro.core.surrogate import SurrogatePredictor
 from repro.core.training import (
@@ -55,11 +73,24 @@ __all__ = [
     "tpu_pod_cluster",
     "BandPilotDispatcher",
     "BaselineDispatcher",
+    "DispatcherService",
     "GroundTruthPredictor",
     "bw_loss_by_k",
     "evaluate_dispatchers",
     "gbe_by_k",
     "summarize",
+    "Allocation",
+    "JobLedger",
+    "ContentionAwarePredictor",
+    "MergeView",
+    "contended_inter_cap",
+    "virtual_merge",
+    "TenantRecord",
+    "TraceJob",
+    "compare_contention_awareness",
+    "poisson_trace",
+    "replay_trace",
+    "summarize_trace",
     "IntraHostTables",
     "eha_search",
     "hybrid_search",

@@ -35,6 +35,20 @@ aggregate.  A deterministic +-2% per-(host,subset) jitter makes the
 landscape non-degenerate (distinct optima) while remaining reproducible; an
 optional Gaussian noise models nccl-tests measurement error for training
 data only.
+
+**Multi-tenant contention** (Sec. 4.4): when a :class:`~repro.core.tenancy.
+JobLedger` of live jobs is supplied, each host's NIC rails are fair-shared
+among the collectives crossing them.  With ``c_h`` concurrent cross-host
+collectives on host h (the candidate plus every GPU-disjoint live cross-host
+job occupying h), the effective per-rail bandwidth on h drops to
+``rail_bw(h) / c_h`` and the inter-host term becomes
+
+  ``C_inter = min_h(rail_bw(h) / c_h) * min_h(n_h) * 2(k-1)/k * eta``.
+
+Intra-host terms are unaffected (NVSwitch/ring traffic stays private to the
+job's own GPUs).  With an empty ledger every ``c_h`` is 1 and the expression
+— including the deterministic jitter — reduces *exactly* to the isolated
+``B(S)``, so releasing all co-tenants provably restores isolated bandwidth.
 """
 
 from __future__ import annotations
@@ -112,6 +126,29 @@ def inter_constraint_bw(
     return rail_bw * min(counts) * (2.0 * (k - 1) / k) * eta
 
 
+def contended_inter_term(
+    cluster, by_host: Dict[int, List[int]], rail_contenders, eta: float = INTER_EFF
+) -> float:
+    """THE jittered, fair-shared inter-host term — the single definition the
+    contended ground truth and the virtual-merge estimator both evaluate, so
+    the two can never drift apart.
+
+    ``rail_contenders(host_id) -> c_h`` supplies the number of collectives
+    (candidate included) competing for that host's NIC rails.
+    """
+    counts: List[int] = []
+    rail = float("inf")
+    for hid, gpus in by_host.items():
+        counts.append(len(gpus))
+        host = cluster.hosts[hid]
+        rail = min(rail, host.host_type.nic_rail_bw / rail_contenders(hid))
+    k = sum(counts)
+    inter = inter_constraint_bw(counts, rail, k, eta=eta)
+    return inter * _jitter(
+        cluster.name, "inter", tuple(sorted(zip(by_host.keys(), counts)))
+    )
+
+
 class BandwidthSimulator:
     """Ground-truth B(S) for a :class:`Cluster` (the paper's black box).
 
@@ -140,8 +177,15 @@ class BandwidthSimulator:
 
     # -- end-to-end ---------------------------------------------------------
 
-    def true_bandwidth(self, subset: Sequence[int]) -> float:
-        """Noiseless ground-truth B(S) for a global-id subset."""
+    def true_bandwidth(self, subset: Sequence[int], ledger=None) -> float:
+        """Noiseless ground-truth B(S) for a global-id subset.
+
+        When ``ledger`` (a :class:`repro.core.tenancy.JobLedger`) is given,
+        the inter-host rail capacity is fair-shared with every live
+        cross-host job that occupies one of S's hosts and is GPU-disjoint
+        from S (see module docstring).  An empty ledger — or one whose only
+        overlapping entry is S itself — yields exactly the isolated B(S).
+        """
         if len(subset) == 0:
             raise ValueError("empty allocation")
         if len(set(subset)) != len(subset):
@@ -152,19 +196,17 @@ class BandwidthSimulator:
             (hid, gpus), = by_host.items()
             return self.intra_bandwidth(hid, self.cluster.local_tuple(hid, gpus))
         constraints: List[float] = []
-        counts: List[int] = []
-        rail = float("inf")
         for hid, gpus in by_host.items():
-            host = self.cluster.hosts[hid]
             n_h = len(gpus)
-            counts.append(n_h)
-            rail = min(rail, host.host_type.nic_rail_bw)
             intra = self.intra_bandwidth(hid, self.cluster.local_tuple(hid, gpus))
             constraints.append(k * intra / n_h)
-        inter = inter_constraint_bw(counts, rail, k)
-        inter *= _jitter(
-            self.cluster.name, "inter", tuple(sorted(zip(by_host.keys(), counts)))
-        )
+
+        def contenders(hid: int) -> int:
+            if ledger is None:
+                return 1
+            return 1 + ledger.rail_contenders(hid, against=subset)
+
+        inter = contended_inter_term(self.cluster, by_host, contenders)
         return min(min(constraints), inter)
 
     def measure(

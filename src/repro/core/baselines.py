@@ -132,11 +132,30 @@ def oracle_dispatch(
     avail: Sequence[int],
     k: int,
     max_vectors: int = 200_000,
+    ledger=None,
 ) -> Tuple[Subset, float]:
-    """Exact arg max_S B(S).  Returns (subset, true_bandwidth)."""
+    """Exact arg max_S B(S).  Returns (subset, true_bandwidth).
+
+    With a ``ledger`` of live jobs the argmax is taken over the
+    *contention-degraded* B(S | ledger).  The per-host decomposition stays
+    exact: rail contention depends only on which hosts S occupies (live
+    allocations are disjoint from ``avail``), so for a fixed count vector the
+    best subset still maximizes each host's intra-host bandwidth
+    independently.
+    """
     by_host = cluster.partition_by_host(avail)
     host_ids = sorted(by_host)
     caps = [len(by_host[h]) for h in host_ids]
+    if ledger is not None:
+        if not ledger.busy().isdisjoint(avail):
+            raise ValueError(
+                "oracle_dispatch: avail overlaps live allocations in the "
+                "ledger; release (or exclude) those jobs first"
+            )
+        # candidates come from avail, hence GPU-disjoint from every live
+        # job: freeze the per-host contender counts once instead of
+        # recomputing them for each of up to max_vectors count vectors
+        ledger = ledger.snapshot()
     best_bw, best_sub = -1.0, None
     n_vec = 0
     for counts in _count_vectors(caps, k):
@@ -153,19 +172,28 @@ def oracle_dispatch(
             locals_ = [cluster.gpu_local[g] for g in by_host[hid]]
             _, sub = tables.best_subset(hid, n_h, locals_)
             subset.extend(tables.to_globals(hid, sub))
-        bw = sim.true_bandwidth(subset)
+        bw = sim.true_bandwidth(subset, ledger=ledger)
         if bw > best_bw:
             best_bw, best_sub = bw, sorted(subset)
     return best_sub, best_bw
 
 
 def brute_force_oracle(
-    cluster: Cluster, sim: BandwidthSimulator, avail: Sequence[int], k: int
+    cluster: Cluster,
+    sim: BandwidthSimulator,
+    avail: Sequence[int],
+    k: int,
+    ledger=None,
 ) -> Tuple[Subset, float]:
     """Reference oracle: literally enumerate C(|avail|, k).  Test-only."""
+    if ledger is not None and not ledger.busy().isdisjoint(avail):
+        raise ValueError(
+            "brute_force_oracle: avail overlaps live allocations in the "
+            "ledger; release (or exclude) those jobs first"
+        )
     best_bw, best_sub = -1.0, None
     for sub in itertools.combinations(sorted(avail), k):
-        bw = sim.true_bandwidth(sub)
+        bw = sim.true_bandwidth(sub, ledger=ledger)
         if bw > best_bw:
             best_bw, best_sub = bw, list(sub)
     return best_sub, best_bw

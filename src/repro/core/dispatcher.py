@@ -1,15 +1,29 @@
-"""BandPilot dispatcher service + evaluation harness (Secs. 4.1, 5.3).
+"""BandPilot dispatching service + evaluation harnesses (Secs. 4.1, 4.4, 5.3).
 
-The ``Dispatcher`` interface is what the rest of the framework consumes
-(``repro.launch`` builds meshes from dispatched device sets).  The harness
-reproduces the paper's protocol: randomized availability scenarios, request
-sizes 1..N, GBE = B(S_sol) / B(S*) against the exact Oracle.
+Two layers:
+
+* **Service** — every dispatcher is stateful: it owns a
+  :class:`~repro.core.tenancy.JobLedger` and exposes an
+  ``admit(job_id, k)`` / ``release(job_id)`` lifecycle.  Availability is
+  derived from the ledger, and BandPilot's search runs against a
+  contention-aware predictor (the virtual-merge wrapper of
+  :mod:`repro.core.contention`) so placements route around live cross-host
+  tenants.  The legacy pure ``dispatch(avail, k)`` remains for single-shot
+  use — with an empty ledger the two are identical.
+
+* **Harnesses** — ``evaluate_dispatchers`` reproduces the paper's
+  single-request GBE protocol (Sec. 5.3); ``replay_trace`` is the
+  multi-tenant protocol: seeded Poisson arrivals with sampled durations
+  stream through a dispatcher, and every admission is graded with
+  contention-degraded GBE against the ledger-aware exact Oracle.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import heapq
 import time
+from collections import deque
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -17,8 +31,10 @@ import numpy as np
 from repro.core import baselines, search
 from repro.core.bandwidth_sim import BandwidthSimulator
 from repro.core.cluster import Cluster, availability_scenario
+from repro.core.contention import ContentionAwarePredictor
 from repro.core.intra_host import IntraHostTables
 from repro.core.surrogate import SurrogatePredictor
+from repro.core.tenancy import Allocation, JobLedger
 
 Subset = List[int]
 
@@ -40,8 +56,52 @@ class GroundTruthPredictor:
         return out
 
 
-class BandPilotDispatcher:
-    """The full system: hierarchical surrogate + hybrid EHA/PTS search."""
+class DispatcherService:
+    """Stateful lifecycle shared by every dispatcher.
+
+    Subclasses implement the placement policy as ``dispatch(avail, k)``;
+    this base turns it into a long-lived service over a job ledger.
+    """
+
+    name = "Dispatcher"
+    needs_rng = False  # True when dispatch() requires an rng (Random baseline)
+
+    def __init__(self, cluster: Cluster):
+        self.cluster = cluster
+        self.ledger = JobLedger(cluster)
+
+    def dispatch(self, avail: Sequence[int], k: int, rng=None) -> Subset:
+        raise NotImplementedError
+
+    def admit(self, job_id: str, k: int, rng=None) -> Allocation:
+        """Place a k-GPU job on currently-free GPUs and record it live."""
+        avail = self.ledger.available()
+        if k > len(avail):
+            raise ValueError(
+                f"admit({job_id!r}, k={k}): only {len(avail)} GPUs free"
+            )
+        subset = self.dispatch(avail, k, rng=rng)
+        if len(subset) != k or not set(subset) <= set(avail):
+            raise ValueError(
+                f"{self.name} returned an invalid allocation for k={k}: "
+                f"{subset}"
+            )
+        return self.ledger.admit(job_id, subset)
+
+    def release(self, job_id: str) -> Allocation:
+        """Free a live job's GPUs."""
+        return self.ledger.release(job_id)
+
+
+class BandPilotDispatcher(DispatcherService):
+    """The full system: hierarchical surrogate + hybrid EHA/PTS search.
+
+    ``contention_aware=True`` (default) wraps the predictor with the
+    virtual-merge estimator, so ``admit`` degrades candidate scores by the
+    fair-share rail capacity left next to live cross-host tenants.  With an
+    empty ledger the wrapper is an exact no-op, so single-shot ``dispatch``
+    behaviour (and the Sec. 5.3 harness) is unchanged.
+    """
 
     def __init__(
         self,
@@ -49,10 +109,18 @@ class BandPilotDispatcher:
         tables: IntraHostTables,
         predictor,
         name: str = "BandPilot",
+        contention_aware: bool = True,
     ):
-        self.cluster = cluster
+        super().__init__(cluster)
         self.tables = tables
-        self.predictor = predictor
+        self.base_predictor = predictor
+        self.contention_aware = contention_aware
+        if contention_aware:
+            self.predictor = ContentionAwarePredictor(
+                cluster, predictor, self.ledger
+            )
+        else:
+            self.predictor = predictor
         self.name = name
         self.last_result: Optional[search.HybridResult] = None
 
@@ -64,15 +132,17 @@ class BandPilotDispatcher:
         return res.subset
 
 
-class BaselineDispatcher:
+class BaselineDispatcher(DispatcherService):
     def __init__(self, cluster: Cluster, kind: str):
-        self.cluster = cluster
+        super().__init__(cluster)
         self.name = {"random": "Random", "default": "Default", "topo": "Topo"}[kind]
         self.kind = kind
+        self.needs_rng = kind == "random"
 
     def dispatch(self, avail: Sequence[int], k: int, rng=None) -> Subset:
         if self.kind == "random":
-            assert rng is not None
+            if rng is None:
+                raise ValueError("Random dispatcher needs an rng")
             return baselines.random_dispatch(self.cluster, avail, k, rng)
         if self.kind == "default":
             return baselines.default_dispatch(self.cluster, avail, k)
@@ -166,3 +236,213 @@ def bw_loss_by_k(records: Sequence[EvalRecord]) -> Dict[str, Dict[int, float]]:
         name: {k: float(np.mean(v)) for k, v in sorted(ks.items())}
         for name, ks in out.items()
     }
+
+
+# ---------------------------------------------------------------------------
+# Multi-tenant trace harness (Sec. 4.4 protocol)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TraceJob:
+    """One job of a tenancy trace: arrives, holds k GPUs, departs."""
+
+    job_id: str
+    arrival: float
+    duration: float
+    k: int
+
+
+@dataclasses.dataclass
+class TenantRecord:
+    """Grading of one admission under the live ledger at admit time."""
+
+    dispatcher: str
+    job_id: str
+    k: int
+    t_admit: float
+    wait: float            # t_admit - arrival (head-of-line FIFO queueing)
+    gbe: float             # contention-degraded B(S) / B(S*_ledger)
+    bw: float              # contention-degraded B(S | ledger)
+    isolated_bw: float     # B(S) with co-tenants ignored
+    optimal_bw: float      # ledger-aware exact-Oracle bandwidth
+    n_live: int            # live jobs at admit time (excl. this one)
+    n_contended_hosts: int  # hosts where S's rails are shared (0 unless S is
+    #                         cross-host: single-host jobs never touch a NIC)
+
+
+def poisson_trace(
+    cluster: Cluster,
+    n_jobs: int,
+    rng: np.random.Generator,
+    mean_interarrival: float = 1.0,
+    mean_duration: float = 4.0,
+    k_choices: Optional[Sequence[int]] = None,
+) -> List[TraceJob]:
+    """Seeded Poisson arrival process with exponential durations.
+
+    ``k_choices`` defaults to 2..max(n_gpus/2, 3), clamped to the cluster
+    size: large enough that placements regularly span hosts (the
+    contention-relevant regime) while — on the paper-scale clusters —
+    several jobs fit concurrently.  Pass explicit ``k_choices`` on clusters
+    below ~6 GPUs, where the default load serializes.
+    """
+    if k_choices is None:
+        hi = min(max(cluster.n_gpus // 2, 3), cluster.n_gpus)
+        k_choices = range(min(2, hi), hi + 1)
+    k_choices = list(k_choices)
+    if max(k_choices) > cluster.n_gpus:
+        raise ValueError("k_choices exceed cluster size")
+    jobs: List[TraceJob] = []
+    t = 0.0
+    for i in range(n_jobs):
+        t += float(rng.exponential(mean_interarrival))
+        dur = max(float(rng.exponential(mean_duration)), 1e-3)
+        k = int(k_choices[rng.integers(len(k_choices))])
+        jobs.append(TraceJob(f"job-{i:04d}", t, dur, k))
+    return jobs
+
+
+def replay_trace(
+    cluster: Cluster,
+    sim: BandwidthSimulator,
+    tables: IntraHostTables,
+    dispatcher: DispatcherService,
+    trace: Sequence[TraceJob],
+    rng: Optional[np.random.Generator] = None,
+) -> List[TenantRecord]:
+    """Stream a trace through one dispatcher service, grading each admission.
+
+    Event-driven: arrivals in time order; departures release GPUs; jobs that
+    do not fit wait in a FIFO queue (head-of-line) and are admitted at the
+    release that frees enough capacity.  B and B* both see exactly the
+    co-tenants the decision was made against: the oracle runs pre-admit, and
+    grading the job post-admit is equivalent because ``JobLedger.contends``
+    excludes GPU-overlapping entries — a job is never its own contender.
+    The ledger is fully drained at the end, so a replay leaves the service
+    empty.
+    """
+    ledger = dispatcher.ledger
+    if len(ledger) != 0:
+        raise ValueError("replay_trace needs a fresh (empty) dispatcher")
+    if rng is None and dispatcher.needs_rng:
+        raise ValueError(f"{dispatcher.name} needs an rng to replay a trace")
+    for j in trace:
+        if j.k > cluster.n_gpus:
+            raise ValueError(
+                f"{j.job_id}: k={j.k} can never fit the "
+                f"{cluster.n_gpus}-GPU cluster"
+            )
+    records: List[TenantRecord] = []
+    departures: List[Tuple[float, int, str]] = []  # (end, seq, job_id)
+    waiting: deque = deque()
+    seq = 0
+
+    def admit(job: TraceJob, t: float) -> None:
+        nonlocal seq
+        avail = ledger.available()
+        _, opt_bw = baselines.oracle_dispatch(
+            cluster, sim, tables, avail, job.k, ledger=ledger
+        )
+        n_live = len(ledger)
+        alloc = dispatcher.admit(job.job_id, job.k, rng=rng)
+        # post-admit grading sees the pre-admit contention: contends()
+        # self-excludes the job's own (GPU-overlapping) ledger entry
+        bw = sim.true_bandwidth(alloc.gpus, ledger=ledger)
+        iso = sim.true_bandwidth(alloc.gpus)
+        shared = sum(
+            1 for hid in alloc.host_ids
+            if ledger.rail_contenders(hid, against=alloc.gpus) > 0
+        ) if alloc.cross_host else 0
+        records.append(TenantRecord(
+            dispatcher.name, job.job_id, job.k, t, t - job.arrival,
+            bw / opt_bw, bw, iso, opt_bw, n_live, shared,
+        ))
+        heapq.heappush(departures, (t + job.duration, seq, job.job_id))
+        seq += 1
+
+    def drain_waiting(t: float) -> None:
+        while waiting and waiting[0].k <= len(ledger.available()):
+            admit(waiting.popleft(), t)
+
+    def release_until(horizon: float) -> None:
+        while departures and departures[0][0] <= horizon:
+            t_end, _, job_id = heapq.heappop(departures)
+            dispatcher.release(job_id)
+            drain_waiting(t_end)
+
+    for job in sorted(trace, key=lambda j: j.arrival):
+        release_until(job.arrival)
+        if waiting or job.k > len(ledger.available()):
+            waiting.append(job)  # FIFO: no overtaking
+        else:
+            admit(job, job.arrival)
+    release_until(float("inf"))
+    if waiting or len(ledger) != 0:
+        raise RuntimeError(
+            f"replay did not drain: {len(waiting)} jobs still waiting, "
+            f"{len(ledger)} still live"
+        )
+    return records
+
+
+def summarize_trace(
+    records: Sequence[TenantRecord],
+) -> Dict[str, Dict[str, float]]:
+    """-> {dispatcher: mean contention-degraded GBE / bw / wait / contention}."""
+    out: Dict[str, Dict[str, float]] = {}
+    for name in sorted({r.dispatcher for r in records}):
+        rs = [r for r in records if r.dispatcher == name]
+        contended = [r for r in rs if r.n_contended_hosts > 0]
+        out[name] = {
+            "mean_gbe": float(np.mean([r.gbe for r in rs])),
+            "mean_bw": float(np.mean([r.bw for r in rs])),
+            "mean_degradation": float(
+                np.mean([1.0 - r.bw / r.isolated_bw for r in rs])
+            ),
+            "mean_wait": float(np.mean([r.wait for r in rs])),
+            "frac_contended": len(contended) / max(len(rs), 1),
+            # NaN, not 1.0: "no contended admissions" must stay visibly
+            # different from "perfect GBE under contention"
+            "mean_gbe_contended": float(
+                np.mean([r.gbe for r in contended]) if contended
+                else float("nan")
+            ),
+            "n": len(rs),
+        }
+    return out
+
+
+def compare_contention_awareness(
+    cluster: Cluster,
+    sim: BandwidthSimulator,
+    tables: IntraHostTables,
+    predictor_factory: Callable[[], object],
+    trace: Sequence[TraceJob],
+    seed: int = 0,
+    name: str = "BandPilot",
+    include_baselines: bool = True,
+) -> Dict[str, List[TenantRecord]]:
+    """Replay one trace through contention-aware vs -oblivious BandPilot plus
+    (optionally) the three baselines (fresh rng per replay: identical
+    arrivals, identical randomness).  -> {variant name: records}."""
+    out: Dict[str, List[TenantRecord]] = {}
+    variants: List[DispatcherService] = [
+        BandPilotDispatcher(
+            cluster, tables, predictor_factory(), name=name,
+            contention_aware=True,
+        ),
+        BandPilotDispatcher(
+            cluster, tables, predictor_factory(), name=f"{name}-oblivious",
+            contention_aware=False,
+        ),
+    ]
+    if include_baselines:
+        variants += [
+            BaselineDispatcher(cluster, "topo"),
+            BaselineDispatcher(cluster, "default"),
+            BaselineDispatcher(cluster, "random"),
+        ]
+    for disp in variants:
+        rng = np.random.default_rng(seed)
+        out[disp.name] = replay_trace(cluster, sim, tables, disp, trace, rng=rng)
+    return out

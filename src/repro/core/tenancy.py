@@ -1,0 +1,201 @@
+"""Multi-tenant occupancy: live jobs, their allocations, derived availability.
+
+The seed reproduction treated dispatching as a pure function over an ad-hoc
+``avail`` list.  A real dispatcher is a *service*: jobs arrive, hold GPUs for
+a while, and depart, and the set of live jobs — not a caller-supplied list —
+is the source of truth for both availability and cross-job contention.  The
+:class:`JobLedger` is that source of truth; everything contention-related
+(:mod:`repro.core.contention`, the contended ground truth in
+:mod:`repro.core.bandwidth_sim`) derives its view of the cluster from it.
+
+Terminology used throughout the contention stack:
+
+* an allocation is **cross-host** when it spans >1 host — only those jobs
+  drive NIC-rail traffic and therefore contend with other collectives;
+* a live job **contends with** a candidate subset S on host h when it is
+  cross-host, occupies >=1 GPU of h, and is GPU-disjoint from S (a job is
+  never its own contender, which makes re-grading an admitted job safe
+  without bookkeeping about which ledger entry "is" S).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, List, Optional, Sequence, Set, Tuple
+
+from repro.core.cluster import Cluster
+
+
+@dataclasses.dataclass(frozen=True)
+class Allocation:
+    """One live job's placement: the unit the ledger admits and releases."""
+
+    job_id: str
+    gpus: Tuple[int, ...]
+    host_ids: Tuple[int, ...]
+
+    @property
+    def k(self) -> int:
+        return len(self.gpus)
+
+    @property
+    def cross_host(self) -> bool:
+        return len(self.host_ids) > 1
+
+
+@dataclasses.dataclass(frozen=True)
+class ContentionSnapshot:
+    """Frozen per-host rail-contender counts, duck-typing the one method of
+    :class:`JobLedger` the bandwidth simulator consumes.
+
+    Valid ONLY for candidate subsets GPU-disjoint from every live allocation
+    (anything drawn from ``available()``): the disjointness check is
+    pre-resolved, which is what makes hot loops — the exact Oracle's count-
+    vector enumeration — skip the per-candidate set work.
+    """
+
+    counts: Dict[int, int]
+
+    def rail_contenders(self, host_id: int, against: Sequence[int] = ()) -> int:
+        return self.counts.get(host_id, 0)
+
+
+class JobLedger:
+    """Tracks live jobs and per-host occupancy for one :class:`Cluster`.
+
+    Invariants (enforced on every mutation):
+      * live allocations are pairwise GPU-disjoint;
+      * ``available() == all_gpus - union(live allocations)``;
+      * ``release(admit(j, S).job_id)`` restores the exact prior state.
+    """
+
+    def __init__(self, cluster: Cluster):
+        self.cluster = cluster
+        self._jobs: Dict[str, Allocation] = {}
+        self._owner: Dict[int, str] = {}  # gpu id -> job id
+        # host id -> job ids with >=1 GPU on that host (cross- or single-host)
+        self._host_jobs: Dict[int, Set[str]] = {
+            h.host_id: set() for h in cluster.hosts
+        }
+
+    # -- lifecycle ----------------------------------------------------------
+
+    def admit(self, job_id: str, gpus: Sequence[int]) -> Allocation:
+        """Record ``job_id`` as live on ``gpus``.  Returns the allocation."""
+        if job_id in self._jobs:
+            raise ValueError(f"job {job_id!r} is already live")
+        subset = tuple(sorted(gpus))
+        if len(subset) == 0:
+            raise ValueError("empty allocation")
+        if len(set(subset)) != len(subset):
+            raise ValueError(f"duplicate GPU ids in allocation: {gpus}")
+        for g in subset:
+            if g < 0 or g >= self.cluster.n_gpus:
+                raise ValueError(f"GPU id {g} outside cluster")
+            if g in self._owner:
+                raise ValueError(
+                    f"GPU {g} is busy (held by job {self._owner[g]!r})"
+                )
+        host_ids = tuple(sorted(self.cluster.partition_by_host(subset)))
+        alloc = Allocation(job_id, subset, host_ids)
+        self._jobs[job_id] = alloc
+        for g in subset:
+            self._owner[g] = job_id
+        for hid in host_ids:
+            self._host_jobs[hid].add(job_id)
+        return alloc
+
+    def release(self, job_id: str) -> Allocation:
+        """Remove a live job, returning its (now freed) allocation."""
+        alloc = self._jobs.pop(job_id, None)
+        if alloc is None:
+            raise KeyError(f"job {job_id!r} is not live")
+        for g in alloc.gpus:
+            del self._owner[g]
+        for hid in alloc.host_ids:
+            self._host_jobs[hid].discard(job_id)
+        return alloc
+
+    # -- queries ------------------------------------------------------------
+
+    def __len__(self) -> int:
+        return len(self._jobs)
+
+    def __contains__(self, job_id: str) -> bool:
+        return job_id in self._jobs
+
+    def jobs(self) -> Iterator[Allocation]:
+        return iter(self._jobs.values())
+
+    def allocation(self, job_id: str) -> Allocation:
+        return self._jobs[job_id]
+
+    def busy(self) -> Set[int]:
+        return set(self._owner)
+
+    def available(self) -> List[int]:
+        """Sorted global ids of all GPUs not held by any live job."""
+        return [g for g in range(self.cluster.n_gpus) if g not in self._owner]
+
+    def occupancy(self, host_id: int) -> int:
+        """Number of busy GPUs on one host."""
+        host = self.cluster.hosts[host_id]
+        return sum(1 for g in host.gpu_ids if g in self._owner)
+
+    @staticmethod
+    def contends(alloc: Allocation, against: Set[int]) -> bool:
+        """THE rail-contention predicate (see module docstring): a live job
+        contends with a candidate iff it is cross-host and GPU-disjoint from
+        it.  Shared by the contended ground truth and the virtual-merge
+        estimator so the two can never drift apart."""
+        return alloc.cross_host and against.isdisjoint(alloc.gpus)
+
+    def cross_host_jobs_on(
+        self, host_id: int, against: Sequence[int] = ()
+    ) -> List[Allocation]:
+        """Live cross-host jobs with >=1 GPU on ``host_id``, excluding any
+        job that shares a GPU with ``against`` (i.e. ``against`` itself)."""
+        excluded = set(against)
+        return [
+            self._jobs[job_id]
+            for job_id in sorted(self._host_jobs[host_id])
+            if self.contends(self._jobs[job_id], excluded)
+        ]
+
+    def cross_jobs_by_host(self) -> Dict[int, List[Allocation]]:
+        """Snapshot: host id -> live *cross-host* allocations touching it.
+
+        The contention estimator consumes this once per predict batch; hosts
+        with no cross-host tenants are omitted.
+        """
+        out: Dict[int, List[Allocation]] = {}
+        for hid, job_ids in self._host_jobs.items():
+            cross = [
+                self._jobs[j] for j in sorted(job_ids)
+                if self._jobs[j].cross_host
+            ]
+            if cross:
+                out[hid] = cross
+        return out
+
+    def rail_contenders(self, host_id: int, against: Sequence[int] = ()) -> int:
+        """Number of live collectives competing for ``host_id``'s NIC rails
+        against a candidate subset (see module docstring for the predicate)."""
+        return len(self.cross_host_jobs_on(host_id, against=against))
+
+    def snapshot(self) -> ContentionSnapshot:
+        """Pre-resolved contender counts for candidates drawn from
+        ``available()`` (always GPU-disjoint from live jobs)."""
+        return ContentionSnapshot({
+            hid: len(jobs) for hid, jobs in self.cross_jobs_by_host().items()
+        })
+
+    def describe(self) -> str:
+        live = ", ".join(
+            f"{a.job_id}:k={a.k}@{list(a.host_ids)}" for a in self.jobs()
+        )
+        return (
+            f"ledger[{self.cluster.name}]: {len(self)} live jobs, "
+            f"{len(self._owner)}/{self.cluster.n_gpus} GPUs busy"
+            + (f" ({live})" if live else "")
+        )

@@ -1,0 +1,293 @@
+"""Multi-tenant contention subsystem: ledger, virtual merge, trace harness.
+
+Invariants under test (ISSUE 1 acceptance):
+  * contention-degraded bandwidth <= isolated bandwidth, monotone in the
+    number of co-located cross-host tenants;
+  * an empty ledger is a no-op: B(S | ledger) == B(S) exactly;
+  * releasing every job restores availability and *exact* isolated
+    bandwidth;
+  * the trace harness runs end-to-end and contention-aware BandPilot
+    strictly beats the contention-oblivious variant on the same seed.
+"""
+
+import numpy as np
+import pytest
+
+import repro.core as core
+from repro.core import baselines
+from repro.core.bandwidth_sim import BandwidthSimulator
+from repro.core.contention import contended_inter_cap, virtual_merge
+from repro.core.tenancy import JobLedger
+
+
+@pytest.fixture(scope="module")
+def h100():
+    cl = core.h100_cluster()
+    sim = BandwidthSimulator(cl)
+    tables = core.IntraHostTables(cl, sim)
+    return cl, sim, tables
+
+
+@pytest.fixture(scope="module")
+def mix():
+    cl = core.het_4mix_cluster()
+    sim = BandwidthSimulator(cl)
+    tables = core.IntraHostTables(cl, sim)
+    return cl, sim, tables
+
+
+CAND = list(range(0, 4)) + list(range(8, 12))        # 4+4 on hosts 0,1
+TENANT_A = list(range(4, 8)) + list(range(12, 16))   # 4+4 on hosts 0,1
+TENANT_B = list(range(16, 20)) + list(range(24, 28))  # 4+4 on hosts 2,3
+
+
+# ---------------------------------------------------------------------------
+# Ledger bookkeeping
+# ---------------------------------------------------------------------------
+
+def test_ledger_availability_roundtrip(h100):
+    cl, _, _ = h100
+    led = JobLedger(cl)
+    assert led.available() == cl.all_gpus()
+    alloc = led.admit("j", TENANT_A)
+    assert alloc.k == 8 and alloc.host_ids == (0, 1) and alloc.cross_host
+    assert set(led.available()) == set(cl.all_gpus()) - set(TENANT_A)
+    assert led.occupancy(0) == 4 and led.occupancy(2) == 0
+    led.release("j")
+    assert led.available() == cl.all_gpus()
+    assert len(led) == 0
+
+
+def test_ledger_rejects_conflicts(h100):
+    cl, _, _ = h100
+    led = JobLedger(cl)
+    led.admit("j", TENANT_A)
+    with pytest.raises(ValueError):
+        led.admit("j", TENANT_B)  # duplicate job id
+    with pytest.raises(ValueError):
+        led.admit("j2", [TENANT_A[0]])  # busy GPU
+    with pytest.raises(ValueError):
+        led.admit("j3", [0, 0])  # duplicate ids
+    with pytest.raises(ValueError):
+        led.admit("j4", [])  # empty
+    with pytest.raises(KeyError):
+        led.release("nope")  # unknown job
+
+
+def test_single_host_jobs_never_contend(h100):
+    cl, sim, _ = h100
+    led = JobLedger(cl)
+    led.admit("intra", list(range(4, 8)))  # single-host job on host 0
+    assert led.rail_contenders(0, against=CAND) == 0
+    assert sim.true_bandwidth(CAND, ledger=led) == sim.true_bandwidth(CAND)
+
+
+# ---------------------------------------------------------------------------
+# Contended ground truth
+# ---------------------------------------------------------------------------
+
+def test_empty_ledger_is_noop(h100):
+    cl, sim, _ = h100
+    led = JobLedger(cl)
+    rng = np.random.default_rng(0)
+    for s in sim.sample_allocations(20, rng):
+        assert sim.true_bandwidth(s, ledger=led) == sim.true_bandwidth(s)
+
+
+def test_degraded_leq_isolated(h100):
+    cl, sim, _ = h100
+    led = JobLedger(cl)
+    iso = sim.true_bandwidth(CAND)
+    led.admit("b", TENANT_B)  # different hosts: no effect
+    assert sim.true_bandwidth(CAND, ledger=led) == iso
+    led.admit("a", TENANT_A)  # shares hosts 0,1
+    one = sim.true_bandwidth(CAND, ledger=led)
+    assert one < iso
+    led.admit("c", [20, 21, 28, 29])  # hosts 2,3: still no effect on CAND
+    assert sim.true_bandwidth(CAND, ledger=led) == one
+
+
+def test_more_contenders_degrade_more(h100):
+    cl, sim, _ = h100
+    led = JobLedger(cl)
+    cand = [0, 1, 8, 9]  # 2+2 on hosts 0,1: rail-bound on H100
+    iso = sim.true_bandwidth(cand)
+    led.admit("a", [2, 3, 10, 11])
+    one = sim.true_bandwidth(cand, ledger=led)
+    led.admit("b", [4, 5, 12, 13])
+    two = sim.true_bandwidth(cand, ledger=led)
+    assert two < one < iso
+
+
+def test_contention_never_increases_bandwidth(mix):
+    """On intra-bound candidates extra contenders may be a no-op, but the
+    degraded value must never exceed isolated."""
+    cl, sim, _ = mix
+    led = JobLedger(cl)
+    cand = [0, 1, 8, 9]
+    iso = sim.true_bandwidth(cand)
+    led.admit("a", [2, 3, 10, 11])
+    one = sim.true_bandwidth(cand, ledger=led)
+    led.admit("b", [4, 5, 12, 13])
+    two = sim.true_bandwidth(cand, ledger=led)
+    assert two <= one <= iso
+
+
+def test_release_restores_exact_isolated(h100):
+    cl, sim, _ = h100
+    led = JobLedger(cl)
+    iso = sim.true_bandwidth(CAND)
+    led.admit("a", TENANT_A)
+    led.admit("b", TENANT_B)
+    assert sim.true_bandwidth(CAND, ledger=led) < iso
+    led.release("a")
+    led.release("b")
+    assert sim.true_bandwidth(CAND, ledger=led) == iso
+    assert led.available() == cl.all_gpus()
+
+
+def test_self_is_never_a_contender(h100):
+    """Grading an *admitted* job must see the same contention as grading the
+    candidate pre-admit: the job's own ledger entry is GPU-overlapping and
+    therefore excluded."""
+    cl, sim, _ = h100
+    led = JobLedger(cl)
+    led.admit("a", TENANT_A)
+    pre = sim.true_bandwidth(CAND, ledger=led)
+    led.admit("cand", CAND)
+    post = sim.true_bandwidth(CAND, ledger=led)
+    assert post == pre
+
+
+# ---------------------------------------------------------------------------
+# Virtual merge + predictor wrapper
+# ---------------------------------------------------------------------------
+
+def test_virtual_merge_structure(h100):
+    cl, sim, _ = h100
+    led = JobLedger(cl)
+    led.admit("a", TENANT_A)
+    led.admit("b", TENANT_B)
+    view = virtual_merge(cl, led, CAND)
+    assert view.contended
+    assert [a.job_id for a in view.contenders] == ["a"]  # b shares no host
+    assert set(view.merged_gpus) == set(CAND) | set(TENANT_A)
+    assert view.rail_shares == {0: 2, 1: 2}
+    # single-host subsets merge with nothing
+    assert not virtual_merge(cl, led, [16, 17, 18]).contended
+
+
+def test_wrapper_caps_multi_host_only(h100):
+    cl, sim, tables = h100
+    led = JobLedger(cl)
+    gt = core.GroundTruthPredictor(sim)
+    wrapped = core.ContentionAwarePredictor(cl, gt, led)
+    single = [16, 17, 18, 19]
+    subs = [CAND, single]
+    np.testing.assert_allclose(wrapped.predict(subs), gt.predict(subs))
+    led.admit("a", TENANT_A)
+    iso_c, iso_s = gt.predict(subs)
+    deg_c, deg_s = wrapped.predict(subs)
+    assert deg_c < iso_c
+    assert deg_s == iso_s  # single-host candidates never degraded
+    assert np.isinf(contended_inter_cap(cl, led, single))
+    # wrapper tracks the live ledger: release -> no-op again
+    led.release("a")
+    np.testing.assert_allclose(wrapped.predict(subs), gt.predict(subs))
+
+
+def test_wrapped_ground_truth_matches_contended_truth(h100):
+    """min(isolated GT, jittered fair-share cap) == contended ground truth
+    whenever the intra terms don't dominate — and never exceeds it."""
+    cl, sim, tables = h100
+    led = JobLedger(cl)
+    led.admit("a", TENANT_A)
+    gt = core.GroundTruthPredictor(sim)
+    wrapped = core.ContentionAwarePredictor(cl, gt, led)
+    rng = np.random.default_rng(1)
+    subs = [s for s in sim.sample_allocations(30, rng)
+            if set(s).isdisjoint(TENANT_A)]
+    est = wrapped.predict(subs)
+    truth = np.asarray([sim.true_bandwidth(s, ledger=led) for s in subs])
+    np.testing.assert_allclose(est, truth, rtol=1e-9)
+
+
+def test_oracle_with_ledger_dominates(h100):
+    cl, sim, tables = h100
+    led = JobLedger(cl)
+    led.admit("a", TENANT_A)
+    avail = led.available()
+    sub, opt = baselines.oracle_dispatch(cl, sim, tables, avail, 8, ledger=led)
+    assert sim.true_bandwidth(sub, ledger=led) == opt
+    # dominates the compactness baseline under the same contended metric
+    topo = baselines.topo_dispatch(cl, avail, 8)
+    assert opt >= sim.true_bandwidth(topo, ledger=led) - 1e-9
+    # and matches brute force on a small pool
+    pool = avail[:10]
+    bsub, bopt = baselines.brute_force_oracle(cl, sim, pool, 4, ledger=led)
+    osub, oopt = baselines.oracle_dispatch(cl, sim, tables, pool, 4, ledger=led)
+    assert abs(oopt - bopt) < 1e-9
+
+
+# ---------------------------------------------------------------------------
+# Trace harness
+# ---------------------------------------------------------------------------
+
+def test_trace_replay_end_to_end(h100):
+    cl, sim, tables = h100
+    rng = np.random.default_rng(5)
+    trace = core.poisson_trace(cl, 25, rng, mean_duration=6.0)
+    disp = core.BandPilotDispatcher(
+        cl, tables, core.GroundTruthPredictor(sim)
+    )
+    recs = core.replay_trace(cl, sim, tables, disp, trace)
+    assert len(recs) == len(trace)  # every job eventually admitted
+    assert len(disp.ledger) == 0    # ledger drained
+    for r in recs:
+        assert 0.0 < r.gbe <= 1.0 + 1e-9
+        assert r.bw <= r.isolated_bw + 1e-9
+        assert r.wait >= 0.0
+    # FIFO: admissions never reorder arrivals
+    order = {j.job_id: i for i, j in enumerate(trace)}
+    admitted = sorted(recs, key=lambda r: (r.t_admit, order[r.job_id]))
+    assert [order[r.job_id] for r in admitted] == sorted(order.values())
+
+
+def test_contention_aware_beats_oblivious(h100):
+    """The headline acceptance criterion, on the exact benchmark protocol:
+    same seed, >=2 concurrent cross-host jobs sharing hosts, strictly higher
+    mean contention-degraded GBE for the aware variant."""
+    cl, sim, tables = h100
+    seed = 0
+    trace = core.poisson_trace(
+        cl, 40, np.random.default_rng(seed),
+        mean_interarrival=1.0, mean_duration=8.0,
+        k_choices=range(4, cl.n_gpus // 2 + 1),
+    )
+    results = core.compare_contention_awareness(
+        cl, sim, tables, lambda: core.GroundTruthPredictor(sim), trace,
+        seed=seed, include_baselines=False,
+    )
+    summ = {n: core.summarize_trace(r)[n] for n, r in results.items()}
+    # the trace actually exercises contention
+    assert summ["BandPilot"]["frac_contended"] > 0.2
+    assert max(r.n_live for r in results["BandPilot"]) >= 2
+    assert (summ["BandPilot"]["mean_gbe"]
+            > summ["BandPilot-oblivious"]["mean_gbe"])
+
+
+def test_trace_with_het_cluster(mix):
+    cl, sim, tables = mix
+    seed = 1
+    trace = core.poisson_trace(
+        cl, 30, np.random.default_rng(seed),
+        mean_interarrival=1.0, mean_duration=8.0,
+        k_choices=range(4, 13),
+    )
+    results = core.compare_contention_awareness(
+        cl, sim, tables, lambda: core.GroundTruthPredictor(sim), trace,
+        seed=seed, include_baselines=False,
+    )
+    summ = {n: core.summarize_trace(r)[n] for n, r in results.items()}
+    assert (summ["BandPilot"]["mean_gbe"]
+            > summ["BandPilot-oblivious"]["mean_gbe"])

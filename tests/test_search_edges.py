@@ -1,0 +1,122 @@
+"""Edge cases of the hybrid search machinery (ISSUE 1 satellite).
+
+Covers the paths the seed tests never exercised: capacity-overflow
+re-waterfilling and infeasibility in ``balanced_count_assignments``, EHA's
+degenerate greedy fallback, and PTS at the k extremes.
+"""
+
+import numpy as np
+import pytest
+
+import repro.core as core
+from repro.core import search
+from repro.core.bandwidth_sim import BandwidthSimulator
+from repro.core.search import balanced_count_assignments
+
+
+@pytest.fixture(scope="module")
+def h100():
+    cl = core.h100_cluster()
+    sim = BandwidthSimulator(cl)
+    tables = core.IntraHostTables(cl, sim)
+    gt = core.GroundTruthPredictor(sim)
+    return cl, sim, tables, gt
+
+
+# ---------------------------------------------------------------------------
+# balanced_count_assignments
+# ---------------------------------------------------------------------------
+
+def test_balanced_counts_even_split():
+    out = balanced_count_assignments([8, 8], 8)
+    assert (4, 4) in out
+    assert all(sum(c) == 8 for c in out)
+
+
+def test_balanced_counts_overflow_rewaterfill():
+    """A host's near-even share can exceed its availability; the overflow
+    must be re-waterfilled onto hosts with headroom."""
+    out = balanced_count_assignments([8, 1], 8)
+    assert out, "feasible split must be found"
+    for counts in out:
+        assert sum(counts) == 8
+        assert counts[0] <= 8 and counts[1] <= 1
+    assert (7, 1) in out
+
+
+def test_balanced_counts_overflow_three_hosts():
+    out = balanced_count_assignments([8, 2, 2], 10)
+    assert out
+    for counts in out:
+        assert sum(counts) == 10
+        assert all(c <= cap for c, cap in zip(counts, [8, 2, 2]))
+
+
+def test_balanced_counts_infeasible_returns_empty():
+    assert balanced_count_assignments([2, 2], 5) == []
+
+
+def test_balanced_counts_k_below_host_count():
+    # k < m: some hosts legitimately get zero
+    out = balanced_count_assignments([8, 8, 8], 2)
+    assert out
+    for counts in out:
+        assert sum(counts) == 2
+
+
+# ---------------------------------------------------------------------------
+# EHA degenerate fallback
+# ---------------------------------------------------------------------------
+
+def test_eha_greedy_fallback(h100):
+    """With the host-combination budget zeroed out, EHA must still return a
+    valid allocation via its greedy fill."""
+    cl, sim, tables, gt = h100
+    avail = list(range(4)) + list(range(8, 12)) + list(range(16, 20))
+    res = search.eha_search(cl, tables, gt, avail, 9, max_host_combos=0)
+    assert len(res.subset) == 9
+    assert set(res.subset) <= set(avail)
+    assert res.predicted_bw > 0
+
+
+def test_eha_k_exceeds_pool_raises(h100):
+    cl, sim, tables, gt = h100
+    with pytest.raises(ValueError):
+        search.eha_search(cl, tables, gt, list(range(4)), 5)
+
+
+# ---------------------------------------------------------------------------
+# PTS extremes
+# ---------------------------------------------------------------------------
+
+def test_pts_k_equals_pool(h100):
+    """k == len(avail): nothing to eliminate; the answer is the pool."""
+    cl, sim, tables, gt = h100
+    avail = sorted([0, 1, 2, 9, 10, 17, 18, 19, 25, 26])
+    res = search.pts_search(cl, tables, gt, avail, len(avail))
+    assert res.subset == avail
+    assert res.predicted_bw == pytest.approx(sim.true_bandwidth(avail))
+
+
+def test_pts_k_one(h100):
+    cl, sim, tables, gt = h100
+    avail = [3, 11, 19, 27]
+    res = search.pts_search(cl, tables, gt, avail, 1)
+    assert len(res.subset) == 1
+    assert set(res.subset) <= set(avail)
+
+
+def test_pts_single_gpu_full_cluster(h100):
+    cl, sim, tables, gt = h100
+    res = search.pts_search(cl, tables, gt, cl.all_gpus(), 1)
+    assert len(res.subset) == 1
+
+
+def test_hybrid_at_extremes(h100):
+    cl, sim, tables, gt = h100
+    rng = np.random.default_rng(0)
+    avail = sorted(rng.choice(cl.n_gpus, size=12, replace=False).tolist())
+    for k in (1, len(avail)):
+        hyb = search.hybrid_search(cl, tables, gt, avail, k)
+        assert len(hyb.subset) == k
+        assert set(hyb.subset) <= set(avail)
