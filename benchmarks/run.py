@@ -23,6 +23,7 @@ from benchmarks import (
     bench_offline_cost,
     bench_llama70b_delta,
     bench_contention,
+    bench_scheduler,
 )
 
 BENCHES = [
@@ -35,6 +36,7 @@ BENCHES = [
     ("table3_offline_cost", bench_offline_cost.run),
     ("appendixA_llama70b_delta", bench_llama70b_delta.run),
     ("sec44_contention", bench_contention.run),
+    ("issue2_scheduler_policies", bench_scheduler.run),
 ]
 
 

@@ -15,6 +15,9 @@ Public surface:
     tenancy.JobLedger / Allocation, contention.ContentionAwarePredictor /
     virtual_merge, dispatcher.replay_trace / poisson_trace /
     compare_contention_awareness (admit/release service lifecycle)
+  Admission scheduling (queue policies, joint batching, re-dispatch):
+    scheduler.AdmissionScheduler / SchedulerConfig / compare_policies /
+    migration_cost, search.joint_hybrid_search
 """
 
 from repro.core.bandwidth_sim import BW_SCALE, BandwidthSimulator
@@ -38,20 +41,32 @@ from repro.core.dispatcher import (
     BaselineDispatcher,
     DispatcherService,
     GroundTruthPredictor,
-    TenantRecord,
-    TraceJob,
     bw_loss_by_k,
     compare_contention_awareness,
     evaluate_dispatchers,
     gbe_by_k,
-    poisson_trace,
     replay_trace,
     summarize,
-    summarize_trace,
 )
 from repro.core.intra_host import IntraHostTables
+from repro.core.scheduler import (
+    AdmissionScheduler,
+    MigrationEvent,
+    SchedulerConfig,
+    TenantRecord,
+    TraceJob,
+    compare_policies,
+    migration_cost,
+    poisson_trace,
+    summarize_trace,
+)
 from repro.core.tenancy import Allocation, JobLedger
-from repro.core.search import eha_search, hybrid_search, pts_search
+from repro.core.search import (
+    eha_search,
+    hybrid_search,
+    joint_hybrid_search,
+    pts_search,
+)
 from repro.core.surrogate import SurrogatePredictor
 from repro.core.training import (
     TrainConfig,
@@ -91,9 +106,15 @@ __all__ = [
     "poisson_trace",
     "replay_trace",
     "summarize_trace",
+    "AdmissionScheduler",
+    "MigrationEvent",
+    "SchedulerConfig",
+    "compare_policies",
+    "migration_cost",
     "IntraHostTables",
     "eha_search",
     "hybrid_search",
+    "joint_hybrid_search",
     "pts_search",
     "SurrogatePredictor",
     "TrainConfig",

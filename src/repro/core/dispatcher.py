@@ -15,16 +15,17 @@ Two layers:
   single-request GBE protocol (Sec. 5.3); ``replay_trace`` is the
   multi-tenant protocol: seeded Poisson arrivals with sampled durations
   stream through a dispatcher, and every admission is graded with
-  contention-degraded GBE against the ledger-aware exact Oracle.
+  contention-degraded GBE against the ledger-aware exact Oracle.  The
+  queue/clock now live in :mod:`repro.core.scheduler` (pluggable admission
+  policies); ``replay_trace`` is a thin wrapper over it with the ``fifo``
+  policy, which reproduces the legacy records bit-for-bit.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import heapq
 import time
-from collections import deque
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence
 
 import numpy as np
 
@@ -33,10 +34,26 @@ from repro.core.bandwidth_sim import BandwidthSimulator
 from repro.core.cluster import Cluster, availability_scenario
 from repro.core.contention import ContentionAwarePredictor
 from repro.core.intra_host import IntraHostTables
+from repro.core.scheduler import (  # re-exported: the public trace surface
+    AdmissionScheduler,
+    SchedulerConfig,
+    TenantRecord,
+    TraceJob,
+    poisson_trace,
+    summarize_trace,
+)
 from repro.core.surrogate import SurrogatePredictor
 from repro.core.tenancy import Allocation, JobLedger
 
 Subset = List[int]
+
+__all__ = [  # keeps `from repro.core.dispatcher import TraceJob, ...` valid
+    "AdmissionScheduler", "SchedulerConfig", "TenantRecord", "TraceJob",
+    "poisson_trace", "summarize_trace", "replay_trace",
+    "BandPilotDispatcher", "BaselineDispatcher", "DispatcherService",
+    "GroundTruthPredictor", "EvalRecord", "evaluate_dispatchers",
+    "summarize", "gbe_by_k", "bw_loss_by_k", "compare_contention_awareness",
+]
 
 
 class GroundTruthPredictor:
@@ -241,66 +258,9 @@ def bw_loss_by_k(records: Sequence[EvalRecord]) -> Dict[str, Dict[int, float]]:
 # ---------------------------------------------------------------------------
 # Multi-tenant trace harness (Sec. 4.4 protocol)
 # ---------------------------------------------------------------------------
-
-@dataclasses.dataclass(frozen=True)
-class TraceJob:
-    """One job of a tenancy trace: arrives, holds k GPUs, departs."""
-
-    job_id: str
-    arrival: float
-    duration: float
-    k: int
-
-
-@dataclasses.dataclass
-class TenantRecord:
-    """Grading of one admission under the live ledger at admit time."""
-
-    dispatcher: str
-    job_id: str
-    k: int
-    t_admit: float
-    wait: float            # t_admit - arrival (head-of-line FIFO queueing)
-    gbe: float             # contention-degraded B(S) / B(S*_ledger)
-    bw: float              # contention-degraded B(S | ledger)
-    isolated_bw: float     # B(S) with co-tenants ignored
-    optimal_bw: float      # ledger-aware exact-Oracle bandwidth
-    n_live: int            # live jobs at admit time (excl. this one)
-    n_contended_hosts: int  # hosts where S's rails are shared (0 unless S is
-    #                         cross-host: single-host jobs never touch a NIC)
-
-
-def poisson_trace(
-    cluster: Cluster,
-    n_jobs: int,
-    rng: np.random.Generator,
-    mean_interarrival: float = 1.0,
-    mean_duration: float = 4.0,
-    k_choices: Optional[Sequence[int]] = None,
-) -> List[TraceJob]:
-    """Seeded Poisson arrival process with exponential durations.
-
-    ``k_choices`` defaults to 2..max(n_gpus/2, 3), clamped to the cluster
-    size: large enough that placements regularly span hosts (the
-    contention-relevant regime) while — on the paper-scale clusters —
-    several jobs fit concurrently.  Pass explicit ``k_choices`` on clusters
-    below ~6 GPUs, where the default load serializes.
-    """
-    if k_choices is None:
-        hi = min(max(cluster.n_gpus // 2, 3), cluster.n_gpus)
-        k_choices = range(min(2, hi), hi + 1)
-    k_choices = list(k_choices)
-    if max(k_choices) > cluster.n_gpus:
-        raise ValueError("k_choices exceed cluster size")
-    jobs: List[TraceJob] = []
-    t = 0.0
-    for i in range(n_jobs):
-        t += float(rng.exponential(mean_interarrival))
-        dur = max(float(rng.exponential(mean_duration)), 1e-3)
-        k = int(k_choices[rng.integers(len(k_choices))])
-        jobs.append(TraceJob(f"job-{i:04d}", t, dur, k))
-    return jobs
-
+# TraceJob / TenantRecord / poisson_trace / summarize_trace live in
+# repro.core.scheduler (imported above); replay_trace remains here as the
+# legacy entry point.
 
 def replay_trace(
     cluster: Cluster,
@@ -309,107 +269,22 @@ def replay_trace(
     dispatcher: DispatcherService,
     trace: Sequence[TraceJob],
     rng: Optional[np.random.Generator] = None,
+    config: Optional[SchedulerConfig] = None,
 ) -> List[TenantRecord]:
     """Stream a trace through one dispatcher service, grading each admission.
 
-    Event-driven: arrivals in time order; departures release GPUs; jobs that
-    do not fit wait in a FIFO queue (head-of-line) and are admitted at the
-    release that frees enough capacity.  B and B* both see exactly the
-    co-tenants the decision was made against: the oracle runs pre-admit, and
-    grading the job post-admit is equivalent because ``JobLedger.contends``
-    excludes GPU-overlapping entries — a job is never its own contender.
-    The ledger is fully drained at the end, so a replay leaves the service
-    empty.
+    Thin wrapper over :class:`repro.core.scheduler.AdmissionScheduler`.  The
+    default ``fifo`` config reproduces the historical behaviour bit-for-bit
+    (regression-pinned in ``tests/test_scheduler.py``): arrivals in time
+    order, departures release GPUs, jobs that do not fit wait in a FIFO
+    queue (head-of-line) and are admitted at the release that frees enough
+    capacity.  Pass a :class:`SchedulerConfig` for backfill/batched queue
+    policies or release-time re-dispatch.
     """
-    ledger = dispatcher.ledger
-    if len(ledger) != 0:
-        raise ValueError("replay_trace needs a fresh (empty) dispatcher")
-    if rng is None and dispatcher.needs_rng:
-        raise ValueError(f"{dispatcher.name} needs an rng to replay a trace")
-    for j in trace:
-        if j.k > cluster.n_gpus:
-            raise ValueError(
-                f"{j.job_id}: k={j.k} can never fit the "
-                f"{cluster.n_gpus}-GPU cluster"
-            )
-    records: List[TenantRecord] = []
-    departures: List[Tuple[float, int, str]] = []  # (end, seq, job_id)
-    waiting: deque = deque()
-    seq = 0
-
-    def admit(job: TraceJob, t: float) -> None:
-        nonlocal seq
-        avail = ledger.available()
-        _, opt_bw = baselines.oracle_dispatch(
-            cluster, sim, tables, avail, job.k, ledger=ledger
-        )
-        n_live = len(ledger)
-        alloc = dispatcher.admit(job.job_id, job.k, rng=rng)
-        # post-admit grading sees the pre-admit contention: contends()
-        # self-excludes the job's own (GPU-overlapping) ledger entry
-        bw = sim.true_bandwidth(alloc.gpus, ledger=ledger)
-        iso = sim.true_bandwidth(alloc.gpus)
-        shared = sum(
-            1 for hid in alloc.host_ids
-            if ledger.rail_contenders(hid, against=alloc.gpus) > 0
-        ) if alloc.cross_host else 0
-        records.append(TenantRecord(
-            dispatcher.name, job.job_id, job.k, t, t - job.arrival,
-            bw / opt_bw, bw, iso, opt_bw, n_live, shared,
-        ))
-        heapq.heappush(departures, (t + job.duration, seq, job.job_id))
-        seq += 1
-
-    def drain_waiting(t: float) -> None:
-        while waiting and waiting[0].k <= len(ledger.available()):
-            admit(waiting.popleft(), t)
-
-    def release_until(horizon: float) -> None:
-        while departures and departures[0][0] <= horizon:
-            t_end, _, job_id = heapq.heappop(departures)
-            dispatcher.release(job_id)
-            drain_waiting(t_end)
-
-    for job in sorted(trace, key=lambda j: j.arrival):
-        release_until(job.arrival)
-        if waiting or job.k > len(ledger.available()):
-            waiting.append(job)  # FIFO: no overtaking
-        else:
-            admit(job, job.arrival)
-    release_until(float("inf"))
-    if waiting or len(ledger) != 0:
-        raise RuntimeError(
-            f"replay did not drain: {len(waiting)} jobs still waiting, "
-            f"{len(ledger)} still live"
-        )
-    return records
-
-
-def summarize_trace(
-    records: Sequence[TenantRecord],
-) -> Dict[str, Dict[str, float]]:
-    """-> {dispatcher: mean contention-degraded GBE / bw / wait / contention}."""
-    out: Dict[str, Dict[str, float]] = {}
-    for name in sorted({r.dispatcher for r in records}):
-        rs = [r for r in records if r.dispatcher == name]
-        contended = [r for r in rs if r.n_contended_hosts > 0]
-        out[name] = {
-            "mean_gbe": float(np.mean([r.gbe for r in rs])),
-            "mean_bw": float(np.mean([r.bw for r in rs])),
-            "mean_degradation": float(
-                np.mean([1.0 - r.bw / r.isolated_bw for r in rs])
-            ),
-            "mean_wait": float(np.mean([r.wait for r in rs])),
-            "frac_contended": len(contended) / max(len(rs), 1),
-            # NaN, not 1.0: "no contended admissions" must stay visibly
-            # different from "perfect GBE under contention"
-            "mean_gbe_contended": float(
-                np.mean([r.gbe for r in contended]) if contended
-                else float("nan")
-            ),
-            "n": len(rs),
-        }
-    return out
+    sched = AdmissionScheduler(
+        cluster, sim, tables, dispatcher, config=config, rng=rng
+    )
+    return sched.run(trace)
 
 
 def compare_contention_awareness(

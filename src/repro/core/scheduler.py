@@ -1,0 +1,649 @@
+"""Event-driven admission scheduler: queue policies over the dispatch service.
+
+PR 1 made dispatching stateful (``DispatcherService`` over a
+:class:`~repro.core.tenancy.JobLedger`), but the trace harness still admitted
+strictly FIFO: one job at a time against a stale ledger, with head-of-line
+blocking.  This module owns the queue and the clock — the event loop that
+used to be hard-coded inside ``replay_trace`` — and makes the admission
+*policy* pluggable:
+
+* ``fifo`` — bit-for-bit the legacy behaviour: arrivals admit in order, a
+  job that does not fit blocks everything behind it (regression-pinned in
+  ``tests/test_scheduler.py``).
+* ``backfill`` — smaller waiting jobs may overtake a blocked job, guarded
+  by an **aging bound**: every overtake increments the skipped jobs'
+  counters, and a job whose counter reaches ``aging_limit`` becomes a hard
+  fence that nothing behind it may pass, so nothing starves.
+* ``batched`` — arrivals within ``batch_window`` of each other form a
+  batch.  Batches drain strictly FIFO, but *within* the head batch jobs may
+  be selected and placed **jointly** (``search.joint_hybrid_search``): the
+  batch is ordered, a scratch ledger is threaded through per-job hybrid
+  searches so each placement sees its batch-mates as live co-tenants, and
+  the order with the best total contention-degraded estimate wins.  A job
+  arriving to spare capacity with an empty queue is never held back, so the
+  window costs no latency; with ``batch_window=0`` every batch is a
+  singleton placed in arrival order and the policy degenerates to ``fifo``
+  exactly.
+
+On every ``release`` the scheduler can additionally run an **elastic
+re-dispatch hook** (``redispatch=True``): among the live cross-host jobs it
+re-places the one whose contention-degraded bandwidth would improve the
+most, charged with a migration-cost term (``migration_cost``, shared with
+:mod:`repro.ft.elastic`), and only if no other live job's degraded
+bandwidth drops.  A declined move restores the exact prior placement.
+
+``repro.core.dispatcher.replay_trace`` is now a thin wrapper over this
+module with the ``fifo`` policy.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from collections import deque
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import baselines, search
+from repro.core.bandwidth_sim import BandwidthSimulator
+from repro.core.cluster import Cluster
+from repro.core.intra_host import IntraHostTables
+from repro.core.tenancy import Allocation, JobLedger
+
+Subset = List[int]
+
+POLICIES = ("fifo", "backfill", "batched")
+
+
+# ---------------------------------------------------------------------------
+# Trace model (moved here from dispatcher.py; re-exported there)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TraceJob:
+    """One job of a tenancy trace: arrives, holds k GPUs, departs."""
+
+    job_id: str
+    arrival: float
+    duration: float
+    k: int
+
+
+@dataclasses.dataclass
+class TenantRecord:
+    """Grading of one admission under the live ledger at admit time."""
+
+    dispatcher: str
+    job_id: str
+    k: int
+    t_admit: float
+    wait: float            # t_admit - arrival (queueing delay)
+    gbe: float             # contention-degraded B(S) / B(S*_ledger)
+    bw: float              # contention-degraded B(S | ledger)
+    isolated_bw: float     # B(S) with co-tenants ignored
+    optimal_bw: float      # ledger-aware exact-Oracle bandwidth
+    n_live: int            # live jobs at admit time (excl. this one)
+    n_contended_hosts: int  # hosts where S's rails are shared (0 unless S is
+    #                         cross-host: single-host jobs never touch a NIC)
+    # -- queue-policy fields (defaults keep legacy constructions valid) -----
+    policy: str = "fifo"   # admission policy that placed this job
+    overtakes: int = 0     # waiting jobs this admission jumped ahead of
+    batch_size: int = 1    # jobs co-admitted in the same joint flush
+    migrations: int = 0    # times this job was re-placed while live
+
+
+def poisson_trace(
+    cluster: Cluster,
+    n_jobs: int,
+    rng: np.random.Generator,
+    mean_interarrival: float = 1.0,
+    mean_duration: float = 4.0,
+    k_choices: Optional[Sequence[int]] = None,
+) -> List[TraceJob]:
+    """Seeded Poisson arrival process with exponential durations.
+
+    ``k_choices`` defaults to 2..max(n_gpus/2, 3), clamped to the cluster
+    size: large enough that placements regularly span hosts (the
+    contention-relevant regime) while — on the paper-scale clusters —
+    several jobs fit concurrently.  Pass explicit ``k_choices`` on clusters
+    below ~6 GPUs, where the default load serializes.
+    """
+    if k_choices is None:
+        hi = min(max(cluster.n_gpus // 2, 3), cluster.n_gpus)
+        k_choices = range(min(2, hi), hi + 1)
+    k_choices = list(k_choices)
+    if max(k_choices) > cluster.n_gpus:
+        raise ValueError("k_choices exceed cluster size")
+    jobs: List[TraceJob] = []
+    t = 0.0
+    for i in range(n_jobs):
+        t += float(rng.exponential(mean_interarrival))
+        dur = max(float(rng.exponential(mean_duration)), 1e-3)
+        k = int(k_choices[rng.integers(len(k_choices))])
+        jobs.append(TraceJob(f"job-{i:04d}", t, dur, k))
+    return jobs
+
+
+def summarize_trace(
+    records: Sequence[TenantRecord],
+) -> Dict[str, Dict[str, float]]:
+    """-> {dispatcher: mean contention-degraded GBE / bw / wait / contention
+    + the queue-policy fields (overtakes, batch size, migrations)}."""
+    out: Dict[str, Dict[str, float]] = {}
+    for name in sorted({r.dispatcher for r in records}):
+        rs = [r for r in records if r.dispatcher == name]
+        contended = [r for r in rs if r.n_contended_hosts > 0]
+        out[name] = {
+            "mean_gbe": float(np.mean([r.gbe for r in rs])),
+            "mean_bw": float(np.mean([r.bw for r in rs])),
+            "mean_degradation": float(
+                np.mean([1.0 - r.bw / r.isolated_bw for r in rs])
+            ),
+            "mean_wait": float(np.mean([r.wait for r in rs])),
+            "frac_contended": len(contended) / max(len(rs), 1),
+            # NaN, not 1.0: "no contended admissions" must stay visibly
+            # different from "perfect GBE under contention"
+            "mean_gbe_contended": float(
+                np.mean([r.gbe for r in contended]) if contended
+                else float("nan")
+            ),
+            "mean_batch_size": float(np.mean([r.batch_size for r in rs])),
+            "total_overtakes": int(sum(r.overtakes for r in rs)),
+            "total_migrations": int(sum(r.migrations for r in rs)),
+            "n": len(rs),
+        }
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Migration cost (shared with repro.ft.elastic)
+# ---------------------------------------------------------------------------
+
+def migration_cost(
+    old_gpus: Sequence[int], new_gpus: Sequence[int], cost_per_gpu: float
+) -> float:
+    """Bandwidth-equivalent charge for moving a live job.
+
+    Each GPU the job vacates means checkpoint/restore traffic and a stall
+    for the whole collective, so the charge is proportional to how much of
+    the placement actually moves: ``cost_per_gpu * |old \\ new|``.  A
+    re-placement equal to the current one is free (and a no-op).
+    """
+    return cost_per_gpu * len(set(old_gpus) - set(new_gpus))
+
+
+@dataclasses.dataclass
+class MigrationEvent:
+    """One committed elastic re-dispatch, for inspection/benchmarks."""
+
+    t: float
+    job_id: str
+    old_gpus: Tuple[int, ...]
+    new_gpus: Tuple[int, ...]
+    old_bw: float    # contention-degraded, before the move
+    new_bw: float    # contention-degraded, after the move
+    cost: float      # migration_cost charged against the gain
+
+
+# ---------------------------------------------------------------------------
+# Scheduler
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class SchedulerConfig:
+    policy: str = "fifo"
+    batch_window: float = 0.0        # batched: co-arrival coalescing window
+    aging_limit: int = 4             # backfill: overtakes before a job fences
+    redispatch: bool = False         # elastic re-dispatch on release
+    migration_cost_per_gpu: float = 2.0  # GB/s of degraded-bw gain per moved GPU
+
+    def __post_init__(self):
+        if self.policy not in POLICIES:
+            raise ValueError(
+                f"unknown policy {self.policy!r}; expected one of {POLICIES}"
+            )
+        if self.batch_window < 0:
+            raise ValueError("batch_window must be >= 0")
+        if self.aging_limit < 1:
+            raise ValueError("aging_limit must be >= 1")
+
+
+@dataclasses.dataclass
+class _QueueEntry:
+    job: TraceJob
+    overtaken: int = 0   # times a later arrival was admitted past this job
+    batch: int = 0       # batched policy: co-arrival batch id
+
+
+class AdmissionScheduler:
+    """Owns the event loop (arrivals, departures, queue) for one dispatcher.
+
+    One scheduler drives one ``DispatcherService`` (duck-typed: ``ledger``,
+    ``admit``, ``release``, ``dispatch``, ``name``, ``needs_rng``) through a
+    trace, grading every admission with contention-degraded GBE against the
+    ledger-aware exact Oracle exactly like the legacy ``replay_trace``:
+    the oracle runs pre-admit, and grading the job post-admit is equivalent
+    because ``JobLedger.contends`` excludes GPU-overlapping entries.
+    """
+
+    def __init__(
+        self,
+        cluster: Cluster,
+        sim: BandwidthSimulator,
+        tables: IntraHostTables,
+        dispatcher,
+        config: Optional[SchedulerConfig] = None,
+        rng: Optional[np.random.Generator] = None,
+    ):
+        self.cluster = cluster
+        self.sim = sim
+        self.tables = tables
+        self.dispatcher = dispatcher
+        self.config = config or SchedulerConfig()
+        self.rng = rng
+        self.records: List[TenantRecord] = []
+        self.migrations: List[MigrationEvent] = []
+        self._rec_by_job: Dict[str, TenantRecord] = {}
+        self._departures: List[Tuple[float, int, str]] = []  # (end, seq, id)
+        self._waiting: deque = deque()  # _QueueEntry, arrival order
+        self._durations: Dict[str, float] = {}
+        self._seq = 0
+        self._batch_id = -1
+        self._batch_close = float("-inf")
+
+    # -- public -------------------------------------------------------------
+
+    def run(self, trace: Sequence[TraceJob]) -> List[TenantRecord]:
+        """Stream a trace through the dispatcher under the configured policy.
+
+        Event-driven: arrivals in time order; departures at or before an
+        arrival release first; the ledger is fully drained at the end, so a
+        run leaves the service empty.
+        """
+        ledger = self.dispatcher.ledger
+        if len(ledger) != 0:
+            raise ValueError("scheduler needs a fresh (empty) dispatcher")
+        if self.records:
+            raise ValueError(
+                "scheduler already ran a trace; build a fresh one per replay"
+            )
+        if self.rng is None and self.dispatcher.needs_rng:
+            raise ValueError(
+                f"{self.dispatcher.name} needs an rng to replay a trace"
+            )
+        for j in trace:
+            if j.k > self.cluster.n_gpus:
+                raise ValueError(
+                    f"{j.job_id}: k={j.k} can never fit the "
+                    f"{self.cluster.n_gpus}-GPU cluster"
+                )
+        self._durations = {j.job_id: j.duration for j in trace}
+        for job in sorted(trace, key=lambda j: j.arrival):
+            self._release_until(job.arrival)
+            self._on_arrival(job)
+        self._release_until(float("inf"))
+        if self._waiting or len(ledger) != 0:
+            raise RuntimeError(
+                f"replay did not drain: {len(self._waiting)} jobs still "
+                f"waiting, {len(ledger)} still live"
+            )
+        return self.records
+
+    # -- event handling -----------------------------------------------------
+
+    def _release_until(self, horizon: float) -> None:
+        while self._departures and self._departures[0][0] <= horizon:
+            t_end, _, job_id = heapq.heappop(self._departures)
+            self.dispatcher.release(job_id)
+            self._drain(t_end)
+            if self.config.redispatch:
+                self._maybe_redispatch(t_end)
+
+    def _on_arrival(self, job: TraceJob) -> None:
+        ledger = self.dispatcher.ledger
+        fits = job.k <= ledger.n_free()
+        if not self._waiting and fits:
+            # spare capacity, empty queue: no policy holds the job back
+            self._admit_via_dispatcher(job, job.arrival)
+            return
+        self._enqueue(job)
+        if self.config.policy != "fifo":
+            # backfill/batched may admit at arrival time (fifo never does:
+            # a non-empty queue means capacity has not changed since the
+            # last release, and the head still blocks)
+            self._drain(job.arrival)
+
+    def _enqueue(self, job: TraceJob) -> None:
+        batch = 0
+        if self.config.policy == "batched":
+            # window 0 never coalesces — not even identical arrival stamps —
+            # so the documented fifo degeneration holds exactly
+            if (self._waiting and self.config.batch_window > 0
+                    and job.arrival <= self._batch_close):
+                batch = self._batch_id
+            else:
+                self._batch_id += 1
+                self._batch_close = job.arrival + self.config.batch_window
+                batch = self._batch_id
+        self._waiting.append(_QueueEntry(job, batch=batch))
+
+    def _drain(self, t: float) -> None:
+        if self.config.policy == "fifo":
+            self._drain_fifo(t)
+        elif self.config.policy == "backfill":
+            self._drain_backfill(t)
+        else:
+            self._drain_batched(t)
+
+    # -- policies -----------------------------------------------------------
+
+    def _drain_fifo(self, t: float) -> None:
+        ledger = self.dispatcher.ledger
+        while (self._waiting
+               and self._waiting[0].job.k <= ledger.n_free()):
+            self._admit_via_dispatcher(self._waiting.popleft().job, t)
+
+    def _shadow(self, head_k: int, t: float) -> Tuple[float, int]:
+        """EASY-backfill reservation for a blocked head: the earliest time
+        the head could start if no further jobs were admitted (walk the
+        departure heap accumulating freed GPUs), and the spare capacity at
+        that moment beyond the head's need."""
+        ledger = self.dispatcher.ledger
+        free = ledger.n_free()
+        if head_k <= free:
+            return t, free - head_k
+        for t_end, _, job_id in sorted(self._departures):
+            free += ledger.allocation(job_id).k
+            if free >= head_k:
+                return t_end, free - head_k
+        return float("inf"), 0  # unreachable: k <= n_gpus is pre-checked
+
+    def _drain_backfill(self, t: float) -> None:
+        """Admit the head while it fits; otherwise backfill EASY-style.
+
+        The blocked head holds a *reservation* at its shadow time (earliest
+        possible start given current departures): a later job may overtake
+        only if it fits now AND either finishes before the shadow time or
+        uses capacity the head will not need then — so a backfill never
+        delays the head.  Belt-and-braces on top of the reservation, every
+        overtake increments the skipped jobs' aging counters and a job
+        whose counter reaches ``aging_limit`` becomes a hard fence that
+        nothing behind it may pass."""
+        ledger = self.dispatcher.ledger
+        limit = self.config.aging_limit
+        while self._waiting:
+            free = ledger.n_free()
+            head = self._waiting[0]
+            if head.job.k <= free:
+                self._waiting.popleft()
+                self._admit_via_dispatcher(head.job, t)
+                continue
+            if head.overtaken >= limit:
+                return  # head aged out: queue is frozen until it admits
+            shadow_t, extra = self._shadow(head.job.k, t)
+            pick = None
+            for i, entry in enumerate(self._waiting):
+                if i == 0:
+                    continue
+                if entry.overtaken >= limit:
+                    break  # fence: nothing behind an aged-out job may pass
+                fits_now = entry.job.k <= free
+                respects_reservation = (
+                    t + entry.job.duration <= shadow_t + 1e-9
+                    or entry.job.k <= extra
+                )
+                if fits_now and respects_reservation:
+                    pick = i
+                    break
+            if pick is None:
+                return
+            entry = self._waiting[pick]
+            for j in range(pick):  # every skipped job was overtaken once
+                self._waiting[j].overtaken += 1
+            del self._waiting[pick]
+            self._admit_via_dispatcher(entry.job, t, overtakes=pick)
+
+    def _drain_batched(self, t: float) -> None:
+        """Drain whole co-arrival batches FIFO; place the head batch jointly.
+
+        Within the head batch, members are *selected* in arrival order,
+        first-fit (a non-fitting member is skipped, never admitted later
+        than it would be under fifo), then the selected jobs are committed
+        through one joint plan — ``joint_hybrid_search`` picks the
+        *placement* order.  A batch with leftover members blocks later
+        batches, so unfairness is bounded by the co-arrival window."""
+        ledger = self.dispatcher.ledger
+        while self._waiting:
+            head_batch = self._waiting[0].batch
+            members = [
+                (i, e) for i, e in enumerate(self._waiting)
+                if e.batch == head_batch
+            ]
+            free = ledger.n_free()
+            selected: List[Tuple[int, _QueueEntry]] = []
+            for i, e in members:  # arrival order, first-fit
+                if e.job.k <= free:
+                    selected.append((i, e))
+                    free -= e.job.k
+            if not selected:
+                return
+            sel_idx = {i for i, _ in selected}
+            # overtakes: unselected earlier entries (head-batch mates — the
+            # head batch is always a prefix of the arrival-ordered queue)
+            overtakes = {
+                i: sum(1 for j in range(i) if j not in sel_idx)
+                for i, _ in selected
+            }
+            jobs = [e.job for _, e in selected]
+            self._admit_batch(
+                jobs, t,
+                overtakes=[overtakes[i] for i, _ in selected],
+            )
+            for i in sorted(sel_idx, reverse=True):
+                del self._waiting[i]
+            if any(e.batch == head_batch for e in self._waiting):
+                return  # leftover members block later batches (batch FIFO)
+
+    # -- admission + grading ------------------------------------------------
+
+    def _admit_batch(
+        self, jobs: List[TraceJob], t: float, overtakes: List[int]
+    ) -> None:
+        """Place ``jobs`` as one joint batch (falls back to sequential
+        admission for dispatchers without the hybrid-search machinery)."""
+        n = len(jobs)
+        joint_capable = (
+            n > 1
+            and hasattr(self.dispatcher, "tables")
+            and hasattr(self.dispatcher, "base_predictor")
+        )
+        if not joint_capable:
+            order = range(n)
+            if self.config.batch_window > 0:
+                order = sorted(order, key=lambda i: (-jobs[i].k, i))
+            for i in order:
+                self._admit_via_dispatcher(
+                    jobs[i], t, overtakes=overtakes[i], batch_size=n
+                )
+            return
+        orders = (
+            search.JOINT_ORDERS if self.config.batch_window > 0
+            else ("arrival",)
+        )
+        plan = search.joint_hybrid_search(
+            self.cluster, self.dispatcher.tables,
+            self.dispatcher.base_predictor, self.dispatcher.ledger,
+            [(j.job_id, j.k) for j in jobs],
+            orders=orders,
+            contention_aware=getattr(self.dispatcher, "contention_aware", True),
+        )
+        by_id = {j.job_id: (j, ov) for j, ov in zip(jobs, overtakes)}
+        for p in plan.placements:
+            job, ov = by_id[p.job_id]
+            self._admit_planned(job, t, p.subset, overtakes=ov, batch_size=n)
+
+    def _admit_via_dispatcher(
+        self, job: TraceJob, t: float, overtakes: int = 0, batch_size: int = 1
+    ) -> None:
+        ledger = self.dispatcher.ledger
+        _, opt_bw = baselines.oracle_dispatch(
+            self.cluster, self.sim, self.tables, ledger.available(), job.k,
+            ledger=ledger,
+        )
+        n_live = len(ledger)
+        alloc = self.dispatcher.admit(job.job_id, job.k, rng=self.rng)
+        self._grade(job, t, alloc, opt_bw, n_live, overtakes, batch_size)
+
+    def _admit_planned(
+        self, job: TraceJob, t: float, subset: Subset,
+        overtakes: int = 0, batch_size: int = 1,
+    ) -> None:
+        """Commit a jointly-planned placement, grading it like any other."""
+        ledger = self.dispatcher.ledger
+        avail = ledger.available()
+        if len(subset) != job.k or not set(subset) <= set(avail):
+            raise ValueError(
+                f"joint plan produced an invalid allocation for "
+                f"{job.job_id!r}: {subset}"
+            )
+        _, opt_bw = baselines.oracle_dispatch(
+            self.cluster, self.sim, self.tables, avail, job.k, ledger=ledger,
+        )
+        n_live = len(ledger)
+        alloc = ledger.admit(job.job_id, subset)
+        self._grade(job, t, alloc, opt_bw, n_live, overtakes, batch_size)
+
+    def _grade(
+        self, job: TraceJob, t: float, alloc: Allocation, opt_bw: float,
+        n_live: int, overtakes: int, batch_size: int,
+    ) -> None:
+        ledger = self.dispatcher.ledger
+        # post-admit grading sees the pre-admit contention: contends()
+        # self-excludes the job's own (GPU-overlapping) ledger entry
+        bw = self.sim.true_bandwidth(alloc.gpus, ledger=ledger)
+        iso = self.sim.true_bandwidth(alloc.gpus)
+        shared = sum(
+            1 for hid in alloc.host_ids
+            if ledger.rail_contenders(hid, against=alloc.gpus) > 0
+        ) if alloc.cross_host else 0
+        rec = TenantRecord(
+            self.dispatcher.name, job.job_id, job.k, t, t - job.arrival,
+            bw / opt_bw, bw, iso, opt_bw, n_live, shared,
+            policy=self.config.policy, overtakes=overtakes,
+            batch_size=batch_size,
+        )
+        self.records.append(rec)
+        self._rec_by_job[job.job_id] = rec
+        heapq.heappush(
+            self._departures, (t + job.duration, self._seq, job.job_id)
+        )
+        self._seq += 1
+
+    # -- elastic re-dispatch on release --------------------------------------
+
+    def _maybe_redispatch(self, t: float) -> None:
+        """Re-place the live cross-host job whose contention-degraded
+        bandwidth improves the most net of migration cost — and only if no
+        other live job's degraded bandwidth drops."""
+        ledger = self.dispatcher.ledger
+        candidates = [a for a in ledger.jobs() if a.cross_host]
+        best: Optional[Tuple[float, Allocation, Subset, float, float]] = None
+        for alloc in list(candidates):
+            trial = self._trial_move(alloc)
+            if trial is None:
+                continue
+            gain, subset, old_bw, new_bw = trial
+            if best is None or gain > best[0]:
+                best = (gain, alloc, subset, old_bw, new_bw)
+        if best is None:
+            return
+        gain, alloc, subset, old_bw, new_bw = best
+        ledger.release(alloc.job_id)
+        ledger.admit(alloc.job_id, subset)
+        cost = migration_cost(
+            alloc.gpus, subset, self.config.migration_cost_per_gpu
+        )
+        self.migrations.append(MigrationEvent(
+            t, alloc.job_id, alloc.gpus, tuple(sorted(subset)),
+            old_bw, new_bw, cost,
+        ))
+        rec = self._rec_by_job.get(alloc.job_id)
+        if rec is not None:
+            rec.migrations += 1
+
+    def _trial_move(
+        self, alloc: Allocation
+    ) -> Optional[Tuple[float, Subset, float, float]]:
+        """Evaluate re-placing one live job; restores the ledger exactly.
+
+        Returns (net gain, new subset, old degraded bw, new degraded bw) or
+        None when the move does not pay or would hurt a co-tenant."""
+        ledger = self.dispatcher.ledger
+        old_bw = self.sim.true_bandwidth(alloc.gpus, ledger=ledger)
+        others = {
+            a.job_id: self.sim.true_bandwidth(a.gpus, ledger=ledger)
+            for a in ledger.jobs() if a.job_id != alloc.job_id
+        }
+        ledger.release(alloc.job_id)
+        try:
+            subset = self.dispatcher.dispatch(
+                ledger.available(), alloc.k, rng=self.rng
+            )
+            if tuple(sorted(subset)) == alloc.gpus:
+                return None
+            new_bw = self.sim.true_bandwidth(subset, ledger=ledger)
+            gain = new_bw - old_bw - migration_cost(
+                alloc.gpus, subset, self.config.migration_cost_per_gpu
+            )
+            if gain <= 1e-9:
+                return None
+            # no-harm check: co-tenants' degraded bandwidth must not drop
+            ledger.admit(alloc.job_id, subset)
+            try:
+                for a in ledger.jobs():
+                    if a.job_id == alloc.job_id:
+                        continue
+                    after = self.sim.true_bandwidth(a.gpus, ledger=ledger)
+                    if after < others[a.job_id] - 1e-9:
+                        return None
+            finally:
+                ledger.release(alloc.job_id)
+            return gain, subset, old_bw, new_bw
+        finally:
+            if alloc.job_id not in ledger:
+                ledger.admit(alloc.job_id, alloc.gpus)
+
+
+# ---------------------------------------------------------------------------
+# Policy comparison harness
+# ---------------------------------------------------------------------------
+
+def compare_policies(
+    cluster: Cluster,
+    sim: BandwidthSimulator,
+    tables: IntraHostTables,
+    dispatcher_factory,
+    trace: Sequence[TraceJob],
+    configs: Optional[Dict[str, SchedulerConfig]] = None,
+    seed: int = 0,
+) -> Dict[str, AdmissionScheduler]:
+    """Replay one trace under several scheduler configs (fresh dispatcher and
+    rng per replay: identical randomness).  -> {config name: scheduler}."""
+    if configs is None:
+        configs = {
+            "fifo": SchedulerConfig(policy="fifo"),
+            "backfill": SchedulerConfig(policy="backfill"),
+            "batched": SchedulerConfig(policy="batched", batch_window=2.0),
+        }
+    out: Dict[str, AdmissionScheduler] = {}
+    for name, cfg in configs.items():
+        disp = dispatcher_factory()
+        disp.name = f"{disp.name}[{name}]"
+        sched = AdmissionScheduler(
+            cluster, sim, tables, disp, cfg,
+            rng=np.random.default_rng(seed),
+        )
+        sched.run(trace)
+        out[name] = sched
+    return out

@@ -17,6 +17,7 @@ import numpy as np
 
 from repro.core.cluster import Cluster
 from repro.core.intra_host import IntraHostTables
+from repro.core.tenancy import JobLedger
 
 Subset = List[int]
 
@@ -232,3 +233,119 @@ def hybrid_search(
     if eha.predicted_bw >= pts.predicted_bw:
         return HybridResult(eha.subset, eha.predicted_bw, eha, pts, "EHA")
     return HybridResult(pts.subset, pts.predicted_bw, eha, pts, "PTS")
+
+
+# ---------------------------------------------------------------------------
+# Joint batched placement (admission scheduler, `batched` policy)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class JointPlacement:
+    """One job's slot in a joint batch plan, in placement order."""
+
+    job_id: str
+    k: int
+    subset: Subset
+    predicted_bw: float  # contention-degraded, against ledger + ALL mates
+
+
+@dataclasses.dataclass
+class JointResult:
+    placements: List[JointPlacement]  # in placement (commit) order
+    order: str                        # winning candidate order
+    total_predicted_bw: float         # sum of final per-job degraded estimates
+    seconds: float
+
+
+JOINT_ORDERS = ("largest-first", "arrival")
+
+
+def _ordered_requests(
+    requests: Sequence[Tuple[str, int]], order: str
+) -> List[Tuple[str, int]]:
+    if order == "arrival":
+        return list(requests)
+    if order == "largest-first":
+        return sorted(requests, key=lambda r: -r[1])  # stable: arrival ties
+    raise ValueError(f"unknown joint order {order!r}")
+
+
+def joint_hybrid_search(
+    cluster: Cluster,
+    tables: IntraHostTables,
+    predictor,
+    ledger: JobLedger,
+    requests: Sequence[Tuple[str, int]],
+    orders: Sequence[str] = JOINT_ORDERS,
+    contention_aware: bool = True,
+) -> JointResult:
+    """Place a batch of ``(job_id, k)`` requests *jointly* against a ledger.
+
+    For each candidate placement order, the live ledger is copied into a
+    scratch ledger and each job runs the ordinary :func:`hybrid_search`
+    against it — admitting every placement into the scratch as it is chosen,
+    so later jobs see their earlier batch-mates as live co-tenants (and,
+    with ``contention_aware``, the predictor degrades candidates next to
+    them via the virtual-merge fair-share cap).  The plan is scored by the
+    sum of each job's contention-degraded estimate against the *final*
+    scratch ledger (a job placed early can be degraded by a mate placed
+    later; scoring at the end charges for that), and the best order wins.
+
+    The returned placements are valid to commit sequentially against the
+    real ledger: they are pairwise GPU-disjoint and drawn from its current
+    availability.  ``contention_aware=False`` keeps batch-mates as
+    availability constraints only (the contention-oblivious ablation).
+    """
+    from repro.core.contention import ContentionAwarePredictor
+
+    if not requests:
+        raise ValueError("joint_hybrid_search needs >=1 request")
+    if not orders:
+        raise ValueError("joint_hybrid_search needs >=1 candidate order")
+    ids = [r[0] for r in requests]
+    if len(set(ids)) != len(ids):
+        raise ValueError(f"duplicate job ids in batch: {ids}")
+    t0 = time.time()
+    if len(requests) == 1:
+        orders = orders[:1]
+    best: Optional[JointResult] = None
+    tried = set()
+    for order in orders:
+        seq = _ordered_requests(requests, order)
+        key = tuple(r[0] for r in seq)
+        if key in tried:
+            continue  # two orders coincide (e.g. batch already size-sorted)
+        tried.add(key)
+        scratch = JobLedger(cluster)
+        for a in ledger.jobs():
+            scratch.admit(a.job_id, a.gpus)
+        pred = (
+            ContentionAwarePredictor(cluster, predictor, scratch)
+            if contention_aware else predictor
+        )
+        placements: List[JointPlacement] = []
+        for job_id, k in seq:
+            avail = scratch.available()
+            if k > len(avail):
+                raise ValueError(
+                    f"joint batch does not fit: {job_id!r} needs k={k}, "
+                    f"{len(avail)} GPUs free"
+                )
+            res = hybrid_search(cluster, tables, pred, avail, k)
+            scratch.admit(job_id, res.subset)
+            placements.append(
+                JointPlacement(job_id, k, res.subset, res.predicted_bw)
+            )
+        # Final scoring: every subset re-estimated against the complete
+        # scratch (its own entry self-excludes via the contends predicate).
+        finals = np.asarray(
+            pred.predict([p.subset for p in placements]), dtype=np.float64
+        )
+        for p, bw in zip(placements, finals):
+            p.predicted_bw = float(bw)
+        total = float(finals.sum())
+        if best is None or total > best.total_predicted_bw:
+            best = JointResult(placements, order, total, 0.0)
+    assert best is not None
+    best.seconds = time.time() - t0
+    return best

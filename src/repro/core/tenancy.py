@@ -137,6 +137,10 @@ class JobLedger:
         """Sorted global ids of all GPUs not held by any live job."""
         return [g for g in range(self.cluster.n_gpus) if g not in self._owner]
 
+    def n_free(self) -> int:
+        """Number of free GPUs — O(1), for scheduler capacity checks."""
+        return self.cluster.n_gpus - len(self._owner)
+
     def occupancy(self, host_id: int) -> int:
         """Number of busy GPUs on one host."""
         host = self.cluster.hosts[host_id]

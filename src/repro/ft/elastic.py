@@ -28,6 +28,7 @@ import numpy as np
 
 from repro.core.cluster import Cluster
 from repro.core.dispatcher import BandPilotDispatcher
+from repro.core.scheduler import migration_cost
 
 
 @dataclasses.dataclass
@@ -71,17 +72,26 @@ class ElasticDecision:
 
 
 class ElasticCoordinator:
-    """Owns the availability state and re-dispatches through BandPilot."""
+    """Owns the availability state and re-dispatches through BandPilot.
+
+    ``migration_cost_per_gpu`` prices voluntary moves: failure handling is
+    mandatory (the old placement is gone), but :meth:`consider_rebalance`
+    only migrates when the predicted gain beats the same migration-cost
+    charge the admission scheduler's release hook uses
+    (:func:`repro.core.scheduler.migration_cost`).
+    """
 
     def __init__(
         self,
         cluster: Cluster,
         dispatcher: BandPilotDispatcher,
         request_size: int,
+        migration_cost_per_gpu: float = 2.0,
     ):
         self.cluster = cluster
         self.dispatcher = dispatcher
         self.request_size = request_size
+        self.migration_cost_per_gpu = migration_cost_per_gpu
         self.unavailable: set = set()
         self.current: List[int] = []
 
@@ -108,6 +118,29 @@ class ElasticCoordinator:
         self.current = sub
         bw = self.dispatcher.last_result.predicted_bw
         return ElasticDecision(sub, bw, event.kind)
+
+    def consider_rebalance(self) -> Optional[ElasticDecision]:
+        """Opportunistic elastic re-dispatch (no failure forcing it).
+
+        After recovery events — co-tenants departing, stragglers returning
+        to the pool — the current placement may have become stale.  Re-run
+        the search over the surviving pool and migrate only when the
+        predicted bandwidth gain exceeds the migration-cost charge for the
+        GPUs that would move.  Returns the decision, or None to stay put.
+        """
+        if not self.current:
+            raise RuntimeError("no current allocation; dispatch first")
+        avail = [g for g in self.cluster.all_gpus() if g not in self.unavailable]
+        cur_bw = float(
+            np.asarray(self.dispatcher.predictor.predict([self.current]))[0]
+        )
+        sub = self.dispatcher.dispatch(avail, len(self.current))
+        new_bw = self.dispatcher.last_result.predicted_bw
+        cost = migration_cost(self.current, sub, self.migration_cost_per_gpu)
+        if sorted(sub) == sorted(self.current) or new_bw - cur_bw <= cost:
+            return None
+        self.current = sub
+        return ElasticDecision(sub, new_bw, "rebalance")
 
 
 def run_elastic_training(

@@ -17,6 +17,8 @@ from repro.kernels.flash_attention import ops as fa_ops, ref as fa_ref
 from repro.kernels.rglru import ops as lru_ops, ref as lru_ref
 from repro.kernels.rwkv6 import ops as wkv_ops, ref as wkv_ref
 
+pytestmark = pytest.mark.slow  # heavy jit/interpret sweeps: slow CI lane
+
 RNG = np.random.default_rng(0)
 
 

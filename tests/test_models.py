@@ -17,6 +17,8 @@ from repro.configs import ARCHS
 from repro.models import encdec, transformer
 from repro.models.model_zoo import build_model
 
+pytestmark = pytest.mark.slow  # heavy jit/interpret sweeps: slow CI lane
+
 RNG = np.random.default_rng(0)
 
 

@@ -25,6 +25,8 @@ from repro.serve.engine import ServeConfig, ServeEngine
 from repro.train.optimizer import AdamWConfig, adamw, cosine_schedule
 from repro.train.train_loop import TrainRunConfig, train_loop
 
+pytestmark = pytest.mark.slow  # jit-heavy train/serve loops + subprocess run
+
 
 # ---------------------------------------------------------------------------
 # Optimizer

@@ -15,6 +15,8 @@ import pytest
 
 import repro.core as core
 
+pytestmark = pytest.mark.slow  # surrogate training + subprocess launchers
+
 
 def _repo_env():
     env = dict(os.environ)

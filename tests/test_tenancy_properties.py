@@ -1,0 +1,123 @@
+"""Property-based JobLedger invariants (ISSUE 2 satellite).
+
+Random admit/release interleavings must preserve, after every mutation:
+
+  * live allocations are pairwise GPU-disjoint;
+  * ``busy() ∪ available()`` partitions the cluster (and they are disjoint);
+  * per-host occupancy sums match the live allocations;
+  * double-admit and double-release raise.
+
+The hypothesis strategies drive randomized interleavings where available;
+a seeded np.random fuzz covers the same invariants on images without
+hypothesis (where the shim turns the ``@given`` tests into skips).
+"""
+
+import numpy as np
+import pytest
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # property tests skip, module still collects
+    from _hypothesis_fallback import given, settings, st
+
+import repro.core as core
+from repro.core.tenancy import JobLedger
+
+
+@pytest.fixture(scope="module")
+def mix():
+    return core.het_4mix_cluster()
+
+
+def check_invariants(cluster, ledger: JobLedger) -> None:
+    allocs = list(ledger.jobs())
+    seen = set()
+    for a in allocs:
+        gset = set(a.gpus)
+        assert len(gset) == a.k, a
+        assert not (gset & seen), f"overlapping allocations at {a}"
+        seen |= gset
+        assert a.host_ids == tuple(sorted(cluster.partition_by_host(a.gpus)))
+    busy, avail = ledger.busy(), set(ledger.available())
+    assert busy == seen
+    assert busy | avail == set(cluster.all_gpus())
+    assert not (busy & avail)
+    for h in cluster.hosts:
+        expect = sum(
+            1 for a in allocs for g in a.gpus if g in set(h.gpu_ids)
+        )
+        assert ledger.occupancy(h.host_id) == expect
+    assert sum(ledger.occupancy(h.host_id) for h in cluster.hosts) == sum(
+        a.k for a in allocs
+    )
+
+
+def run_interleaving(cluster, ops, k_sizes) -> None:
+    """Drive admit/release decisions from two integer streams, checking the
+    invariants after every mutation.  ``ops[i]`` odd -> try release."""
+    ledger = JobLedger(cluster)
+    live = []
+    n_admitted = 0
+    for step, (op, ksz) in enumerate(zip(ops, k_sizes)):
+        if op % 2 == 1 and live:
+            job_id = live.pop(op % len(live))
+            before = len(ledger)
+            ledger.release(job_id)
+            assert len(ledger) == before - 1
+            with pytest.raises(KeyError):
+                ledger.release(job_id)  # double-release raises
+        else:
+            avail = ledger.available()
+            k = 1 + ksz % 8
+            if k > len(avail):
+                continue
+            picks = [avail[(ksz * 7 + i * 13) % len(avail)] for i in range(k)]
+            picks = sorted(set(picks))
+            job_id = f"j{n_admitted}"
+            alloc = ledger.admit(job_id, picks)
+            n_admitted += 1
+            live.append(job_id)
+            assert alloc.gpus == tuple(picks)
+            with pytest.raises(ValueError):
+                ledger.admit(job_id, picks)  # double-admit raises
+            if ledger.available():
+                with pytest.raises(ValueError):
+                    # busy GPU in a fresh allocation also raises
+                    ledger.admit("fresh", [picks[0]])
+        check_invariants(cluster, ledger)
+    for job_id in list(live):
+        ledger.release(job_id)
+        check_invariants(cluster, ledger)
+    assert len(ledger) == 0
+    assert ledger.available() == cluster.all_gpus()
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    ops=st.lists(st.integers(0, 9), min_size=1, max_size=40),
+    k_sizes=st.lists(st.integers(0, 1000), min_size=40, max_size=40),
+)
+def test_random_interleavings_preserve_invariants(ops, k_sizes):
+    run_interleaving(core.het_4mix_cluster(), ops, k_sizes)
+
+
+def test_seeded_interleavings_preserve_invariants(mix):
+    """Same property, driven by seeded randomness: runs even without
+    hypothesis installed."""
+    rng = np.random.default_rng(0)
+    for _ in range(15):
+        n = int(rng.integers(5, 45))
+        ops = rng.integers(0, 10, size=n).tolist()
+        k_sizes = rng.integers(0, 1000, size=n).tolist()
+        run_interleaving(mix, ops, k_sizes)
+
+
+def test_admit_release_roundtrip_restores_exact_state(mix):
+    ledger = JobLedger(mix)
+    ledger.admit("a", [0, 1, 8, 9])
+    before_avail = ledger.available()
+    before_busy = set(ledger.busy())
+    ledger.admit("b", [2, 3, 16, 17])
+    ledger.release("b")
+    assert ledger.available() == before_avail
+    assert ledger.busy() == before_busy
+    check_invariants(mix, ledger)
