@@ -2,6 +2,11 @@
 
 Paper claim: R^2 > 0.95 and MAPE < 5% with only 250 samples across the
 cluster zoo.
+
+The heterogeneous clusters additionally report a ``legacyfeat`` ablation
+row at the paper's headline n=250: the same protocol with the per-host-type
+normalized intra-bandwidth channel zeroed (``host_norm=False``) — the MAPE
+delta of the ROADMAP's Het-VA feature-normalization item.
 """
 
 from __future__ import annotations
@@ -15,6 +20,21 @@ from benchmarks.common import SURROGATE_STEPS, csv_row
 
 SAMPLE_COUNTS = (50, 100, 250, 500)
 CLUSTERS = ("H100", "Het-RA", "Het-VA", "Het-4Mix")
+ABLATE_HOST_NORM = ("Het-VA", "Het-4Mix")  # legacyfeat rows at n=250
+
+
+def _fit_eval(cluster, tables, train, test, host_norm=True):
+    t0 = time.time()
+    params, _ = core.train_surrogate(
+        cluster, tables, train, core.TrainConfig(steps=SURROGATE_STEPS),
+        host_norm=host_norm,
+    )
+    train_s = time.time() - t0
+    pred = core.SurrogatePredictor(cluster, tables, params, host_norm=host_norm)
+    t0 = time.time()
+    m = core.evaluate_surrogate(pred, test)
+    us = (time.time() - t0) / max(m["n"], 1) * 1e6
+    return m, us, train_s
 
 
 def run() -> list:
@@ -25,18 +45,18 @@ def run() -> list:
         tables = core.IntraHostTables(cluster, sim)
         for n in SAMPLE_COUNTS:
             train, test = core.make_train_test_split(sim, n, seed=0)
-            t0 = time.time()
-            params, _ = core.train_surrogate(
-                cluster, tables, train, core.TrainConfig(steps=SURROGATE_STEPS)
-            )
-            train_s = time.time() - t0
-            pred = core.SurrogatePredictor(cluster, tables, params)
-            t0 = time.time()
-            m = core.evaluate_surrogate(pred, test)
-            n_eval = m["n"]
-            us = (time.time() - t0) / max(n_eval, 1) * 1e6
+            m, us, train_s = _fit_eval(cluster, tables, train, test)
             rows.append(csv_row(
                 f"fig5_{name}_n{n}", us,
                 f"r2={m['r2']:.4f};mape={m['mape']:.2f}%;train_s={train_s:.0f}",
             ))
+            if n == 250 and name in ABLATE_HOST_NORM:
+                leg, us_l, _ = _fit_eval(
+                    cluster, tables, train, test, host_norm=False
+                )
+                rows.append(csv_row(
+                    f"fig5_{name}_n{n}_legacyfeat", us_l,
+                    f"r2={leg['r2']:.4f};mape={leg['mape']:.2f}%;"
+                    f"norm_delta={m['mape'] - leg['mape']:+.2f}pts",
+                ))
     return rows

@@ -24,6 +24,7 @@ from benchmarks import (
     bench_llama70b_delta,
     bench_contention,
     bench_scheduler,
+    bench_learned_contention,
 )
 
 BENCHES = [
@@ -37,6 +38,7 @@ BENCHES = [
     ("appendixA_llama70b_delta", bench_llama70b_delta.run),
     ("sec44_contention", bench_contention.run),
     ("issue2_scheduler_policies", bench_scheduler.run),
+    ("issue3_learned_contention", bench_learned_contention.run),
 ]
 
 

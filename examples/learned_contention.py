@@ -1,0 +1,89 @@
+"""Learned contention: train the ContendedSurrogate, harvest, fine-tune.
+
+Walks the learned-contention subsystem end to end on the H100 testbed with
+the *saturating* contention ground truth (demand-weighted rail shares +
+non-linear NIC multiplexing — the system-level effects the analytic
+even-split cap cannot see).  Deliberately tiny training budgets so the demo
+stays fast; `benchmarks/bench_learned_contention.py` runs the full
+protocol.
+
+  1. train the isolated surrogate, then the ContendedSurrogate on a small
+     (subset, ledger, contended-bandwidth) curriculum;
+  2. compare held-out contended MAPE: learned vs the analytic fair-share
+     cap;
+  3. replay a Poisson trace with a TelemetryHarvester attached and
+     fine-tune the contended model online on the harvested observations
+     (the Sec. 4.1.2 adaptation loop, now contended).
+
+  PYTHONPATH=src python examples/learned_contention.py
+"""
+
+import numpy as np
+
+import repro.core as core
+
+
+def main():
+    cluster = core.h100_cluster()
+    sat = core.BandwidthSimulator(cluster, contention="saturating")
+    tables = core.IntraHostTables(cluster, sat)
+    print(cluster.describe())
+
+    # -- 1. isolated surrogate, then the contended curriculum ---------------
+    train_iso, _ = core.make_train_test_split(sat, 150, test_mult=1, seed=0)
+    params, _ = core.train_surrogate(
+        cluster, tables, train_iso, core.TrainConfig(steps=600)
+    )
+    iso_pred = core.SurrogatePredictor(cluster, tables, params)
+
+    train, test = core.make_contended_split(sat, 300, test_mult=1, seed=3)
+    n_cont = sum(1 for s in train if s.contended)
+    print(f"\ncurriculum: {len(train)} samples ({n_cont} contended, "
+          f"{len(train) - n_cont} isolated)")
+    cparams, info = core.train_contended_surrogate(
+        cluster, tables, core.to_triples(cluster, train),
+        core.TrainConfig(steps=600), base_params=params,
+    )
+    cpred = core.ContendedSurrogatePredictor(cluster, tables, cparams)
+    print(f"trained ContendedSurrogate in {info['train_seconds']:.0f}s "
+          f"({info['param_bytes'] / 1024:.0f} KB)")
+
+    # -- 2. held-out accuracy: learned vs analytic cap ----------------------
+    triples = core.to_triples(cluster, [s for s in test if s.contended])
+    learned = core.evaluate_contended_predictor(cpred, triples)
+    _, analytic = core.evaluate_analytic_cap(cluster, iso_pred, triples)
+    print(f"\nheld-out contended MAPE ({learned['n']} samples): "
+          f"learned {learned['mape']:.1f}% vs analytic cap "
+          f"{analytic['mape']:.1f}%")
+
+    # -- 3. harvest live admissions, fine-tune online -----------------------
+    disp = core.BandPilotDispatcher(
+        cluster, tables, iso_pred, name="BP-learned",
+        contention_mode="learned", contended_predictor=cpred,
+    )
+    trace = core.poisson_trace(
+        cluster, 30, np.random.default_rng(5),
+        mean_interarrival=1.0, mean_duration=8.0,
+        k_choices=range(4, cluster.n_gpus // 2 + 1),
+    )
+    recs, harvester = core.harvest_trace(
+        cluster, sat, tables, disp, trace
+    )
+    s = core.summarize_trace(recs)["BP-learned"]
+    print(f"\nreplayed {len(recs)} jobs with mode='learned': "
+          f"mean contended GBE {100 * s['mean_gbe']:.2f}%, "
+          f"harvested {len(harvester)} telemetry samples")
+
+    before = core.evaluate_contended_predictor(cpred, harvester.triples())
+    cparams2 = core.online_finetune_contended(
+        cluster, tables, cparams, harvester.triples(), steps=150
+    )
+    cpred2 = core.ContendedSurrogatePredictor(cluster, tables, cparams2)
+    after = core.evaluate_contended_predictor(cpred2, harvester.triples())
+    print(f"online fine-tune on harvested telemetry: MAPE "
+          f"{before['mape']:.1f}% -> {after['mape']:.1f}% "
+          "(on the harvested distribution)")
+
+
+if __name__ == "__main__":
+    main()

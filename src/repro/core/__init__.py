@@ -18,9 +18,24 @@ Public surface:
   Admission scheduling (queue policies, joint batching, re-dispatch):
     scheduler.AdmissionScheduler / SchedulerConfig / compare_policies /
     migration_cost, search.joint_hybrid_search
+  Learned contention (trained contended surrogate + telemetry pipeline):
+    contended_dataset.build_contended_dataset / make_contended_split /
+    TelemetryHarvester / harvest_trace, surrogate.ContendedSurrogatePredictor,
+    training.train_contended_surrogate / online_finetune_contended /
+    evaluate_contended_predictor, ContentionAwarePredictor(mode="learned")
 """
 
 from repro.core.bandwidth_sim import BW_SCALE, BandwidthSimulator
+from repro.core.contended_dataset import (
+    ContendedSample,
+    TelemetryHarvester,
+    build_contended_dataset,
+    harvest_trace,
+    make_contended_split,
+    materialize_ledger,
+    sample_cotenant_ledger,
+    to_triples,
+)
 from repro.core.contention import (
     ContentionAwarePredictor,
     MergeView,
@@ -67,12 +82,20 @@ from repro.core.search import (
     joint_hybrid_search,
     pts_search,
 )
-from repro.core.surrogate import SurrogatePredictor
+from repro.core.surrogate import (
+    ContendedSurrogatePredictor,
+    SurrogatePredictor,
+    init_contended_params,
+)
 from repro.core.training import (
     TrainConfig,
+    evaluate_analytic_cap,
+    evaluate_contended_predictor,
     evaluate_surrogate,
     make_train_test_split,
     online_finetune,
+    online_finetune_contended,
+    train_contended_surrogate,
     train_surrogate,
 )
 
@@ -117,9 +140,23 @@ __all__ = [
     "joint_hybrid_search",
     "pts_search",
     "SurrogatePredictor",
+    "ContendedSurrogatePredictor",
+    "init_contended_params",
+    "ContendedSample",
+    "TelemetryHarvester",
+    "build_contended_dataset",
+    "harvest_trace",
+    "make_contended_split",
+    "materialize_ledger",
+    "sample_cotenant_ledger",
+    "to_triples",
     "TrainConfig",
     "evaluate_surrogate",
+    "evaluate_analytic_cap",
+    "evaluate_contended_predictor",
     "make_train_test_split",
     "online_finetune",
+    "online_finetune_contended",
+    "train_contended_surrogate",
     "train_surrogate",
 ]

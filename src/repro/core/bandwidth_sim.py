@@ -49,6 +49,25 @@ Intra-host terms are unaffected (NVSwitch/ring traffic stays private to the
 job's own GPUs).  With an empty ledger every ``c_h`` is 1 and the expression
 — including the deterministic jitter — reduces *exactly* to the isolated
 ``B(S)``, so releasing all co-tenants provably restores isolated bandwidth.
+
+**Contention models.**  The fair split above is ``contention="fair"`` (the
+default, bit-identical to the PR-1 behaviour).  ``contention="saturating"``
+is the richer ground truth the *learned* contention subsystem trains
+against: real fabrics neither split evenly nor multiplex for free.  The
+candidate's share of host h's rail capacity becomes
+
+  ``share_h = (n_h / (n_h + sum_j w_jh)) * 1 / (1 + alpha_h * (c_h - 1))``
+
+where ``w_jh`` is contender j's GPU count on h (demand-weighted sharing: a
+2-GPU tail of a cross-host job draws less rail traffic than an 8-GPU one)
+and the second factor models the non-linear goodput loss of multiplexing
+``c_h`` collectives through one NIC stack, with ``alpha_h`` keyed to the
+host class (link heterogeneity: legacy shared-NIC hosts degrade ~2.5x
+harder than modern rail-optimized fabrics).  With an empty ledger
+``share_h = 1`` and the model is again *exactly* the isolated ``B(S)``.
+The analytic virtual-merge estimator keeps predicting the even split — by
+design: the gap between the two is what the learned surrogate absorbs
+(see ``docs/contention.md``).
 """
 
 from __future__ import annotations
@@ -68,6 +87,15 @@ SINGLE_GPU_BW = 500.0          # "bandwidth" of a 1-GPU allocation (no comm)
 JITTER = 0.02                  # deterministic per-subset jitter amplitude
 BW_SCALE = 500.0               # normalization scale for model features/targets
 BALANCED_COUNTS = (1, 2, 4, 8)
+
+# Saturating contention model (see module docstring): per-host-class
+# multiplexing loss.  Modern rail-optimized fabrics (>= 25 GB/s per rail:
+# H100, TPU trays) time-slice collectives with little overhead; legacy
+# shared-NIC hosts pay heavily for concurrent flows.
+CONTENTION_MODELS = ("fair", "saturating")
+SATURATION_ALPHA_FAST = 0.08
+SATURATION_ALPHA_SLOW = 0.20
+_FAST_RAIL_BW = 25.0
 
 
 def _stable_unit_hash(*key) -> float:
@@ -126,22 +154,50 @@ def inter_constraint_bw(
     return rail_bw * min(counts) * (2.0 * (k - 1) / k) * eta
 
 
+def saturation_alpha(host_type) -> float:
+    """Multiplexing-loss coefficient of a host class (link heterogeneity)."""
+    return (
+        SATURATION_ALPHA_FAST
+        if host_type.nic_rail_bw >= _FAST_RAIL_BW
+        else SATURATION_ALPHA_SLOW
+    )
+
+
+def saturating_rail_share(
+    n_h: int, demands: Sequence[int], alpha: float
+) -> float:
+    """Candidate's share of one host's rail capacity under the saturating
+    model: demand-weighted split times the non-linear multiplexing loss.
+    No contenders -> exactly 1.0 (the isolated rail)."""
+    c = 1 + len(demands)
+    if c == 1:
+        return 1.0
+    return (n_h / (n_h + sum(demands))) / (1.0 + alpha * (c - 1))
+
+
 def contended_inter_term(
-    cluster, by_host: Dict[int, List[int]], rail_contenders, eta: float = INTER_EFF
+    cluster, by_host: Dict[int, List[int]], rail_contenders,
+    eta: float = INTER_EFF, rail_share=None,
 ) -> float:
     """THE jittered, fair-shared inter-host term — the single definition the
     contended ground truth and the virtual-merge estimator both evaluate, so
     the two can never drift apart.
 
     ``rail_contenders(host_id) -> c_h`` supplies the number of collectives
-    (candidate included) competing for that host's NIC rails.
+    (candidate included) competing for that host's NIC rails.  When
+    ``rail_share(host_id) -> fraction`` is given (the saturating model) it
+    replaces the even ``1 / c_h`` split; the default path is bit-identical
+    to the historical fair split.
     """
     counts: List[int] = []
     rail = float("inf")
     for hid, gpus in by_host.items():
         counts.append(len(gpus))
         host = cluster.hosts[hid]
-        rail = min(rail, host.host_type.nic_rail_bw / rail_contenders(hid))
+        if rail_share is None:
+            rail = min(rail, host.host_type.nic_rail_bw / rail_contenders(hid))
+        else:
+            rail = min(rail, host.host_type.nic_rail_bw * rail_share(hid))
     k = sum(counts)
     inter = inter_constraint_bw(counts, rail, k, eta=eta)
     return inter * _jitter(
@@ -157,9 +213,20 @@ class BandwidthSimulator:
     what GBE is computed against.
     """
 
-    def __init__(self, cluster: Cluster, noise_std: float = 0.01):
+    def __init__(
+        self,
+        cluster: Cluster,
+        noise_std: float = 0.01,
+        contention: str = "fair",
+    ):
+        if contention not in CONTENTION_MODELS:
+            raise ValueError(
+                f"unknown contention model {contention!r}; "
+                f"expected one of {CONTENTION_MODELS}"
+            )
         self.cluster = cluster
         self.noise_std = noise_std
+        self.contention = contention
         self._intra_cache: Dict[Tuple[int, Tuple[int, ...]], float] = {}
 
     # -- intra-host ---------------------------------------------------------
@@ -206,14 +273,31 @@ class BandwidthSimulator:
                 return 1
             return 1 + ledger.rail_contenders(hid, against=subset)
 
-        inter = contended_inter_term(self.cluster, by_host, contenders)
+        rail_share = None
+        if ledger is not None and self.contention == "saturating":
+            def rail_share(hid: int) -> float:
+                return saturating_rail_share(
+                    len(by_host[hid]),
+                    ledger.contender_demands(hid, against=subset),
+                    saturation_alpha(self.cluster.hosts[hid].host_type),
+                )
+
+        inter = contended_inter_term(
+            self.cluster, by_host, contenders, rail_share=rail_share
+        )
         return min(min(constraints), inter)
 
     def measure(
-        self, subset: Sequence[int], rng: Optional[np.random.Generator] = None
+        self,
+        subset: Sequence[int],
+        rng: Optional[np.random.Generator] = None,
+        ledger=None,
     ) -> float:
-        """One simulated nccl-tests measurement (ground truth + noise)."""
-        bw = self.true_bandwidth(subset)
+        """One simulated nccl-tests measurement (ground truth + noise).
+
+        With a ``ledger`` the measurement is of the *contention-degraded*
+        bandwidth — what a live job's telemetry would actually report."""
+        bw = self.true_bandwidth(subset, ledger=ledger)
         if rng is not None and self.noise_std > 0:
             bw *= float(1.0 + rng.normal(0.0, self.noise_std))
         return max(bw, 1e-3)

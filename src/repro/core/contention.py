@@ -116,6 +116,9 @@ def contended_inter_cap(
     return _cap_from_snapshot(cluster, ledger.cross_jobs_by_host(), subset, eta)
 
 
+PREDICTOR_MODES = ("analytic", "learned")
+
+
 class ContentionAwarePredictor:
     """Wrap a predictor so ``predict`` returns contention-degraded bandwidth.
 
@@ -123,12 +126,43 @@ class ContentionAwarePredictor:
     hybrid search consumes, so it threads through ``search.hybrid_search``
     unchanged.  The ledger is read live at predict time: one wrapper built at
     service start stays correct across every admit/release.
+
+    Two modes:
+
+    * ``mode="analytic"`` (default) — the virtual-merge fair-share cap:
+      ``min(B_iso(S), cap(S, L))``.
+    * ``mode="learned"`` — candidates with at least one rail contender are
+      scored by a trained :class:`~repro.core.surrogate.
+      ContendedSurrogatePredictor` (``contended=...``), clamped by the
+      isolated estimate (a co-tenant can never *raise* bandwidth).
+
+    Both modes are exact pass-throughs for single-host candidates,
+    uncontended candidates, and the empty ledger — the learned mode returns
+    the isolated predictor's output *bit-identically* there
+    (regression-pinned in ``tests/test_learned_contention.py``).
     """
 
-    def __init__(self, cluster: Cluster, base, ledger: JobLedger):
+    def __init__(
+        self,
+        cluster: Cluster,
+        base,
+        ledger: JobLedger,
+        mode: str = "analytic",
+        contended=None,
+    ):
+        if mode not in PREDICTOR_MODES:
+            raise ValueError(
+                f"unknown mode {mode!r}; expected one of {PREDICTOR_MODES}"
+            )
+        if mode == "learned" and contended is None:
+            raise ValueError(
+                "mode='learned' needs a contended predictor (contended=...)"
+            )
         self.cluster = cluster
         self.base = base
         self.ledger = ledger
+        self.mode = mode
+        self.contended = contended
         self.n_capped = 0           # candidates whose estimate was degraded
         self.predict_seconds = 0.0  # wrapper overhead (excl. base predictor)
 
@@ -142,13 +176,46 @@ class ContentionAwarePredictor:
         # scores hundreds of candidates per admission through this path).
         cross_by_host = self.ledger.cross_jobs_by_host()
         out = iso.copy()
-        for i, s in enumerate(subsets):
-            cap = _cap_from_snapshot(self.cluster, cross_by_host, s)
-            if cap < out[i]:
-                out[i] = cap
-                self.n_capped += 1
+        if self.mode == "learned":
+            idx = [
+                i for i, s in enumerate(subsets)
+                if self._contended_by(cross_by_host, s)
+            ]
+            if idx:
+                # model inference is accounted by the contended predictor's
+                # own predict_seconds; keep this counter wrapper-only
+                t_model = self.contended.predict_seconds
+                learned = self.contended.predict(
+                    [subsets[i] for i in idx], self.ledger
+                )
+                t0 += self.contended.predict_seconds - t_model
+                for i, p in zip(idx, learned):
+                    if p < out[i]:
+                        out[i] = p
+                        self.n_capped += 1
+        else:
+            for i, s in enumerate(subsets):
+                cap = _cap_from_snapshot(self.cluster, cross_by_host, s)
+                if cap < out[i]:
+                    out[i] = cap
+                    self.n_capped += 1
         self.predict_seconds += time.time() - t0
         return out
+
+    def _contended_by(
+        self, cross_by_host: CrossJobsByHost, subset: Subset
+    ) -> bool:
+        """True iff >=1 live cross-host job contends with ``subset`` — the
+        learned head only ever sees inputs with a non-zero ledger context."""
+        by_host = self.cluster.partition_by_host(subset)
+        if len(by_host) <= 1:
+            return False
+        sset = set(subset)
+        return any(
+            JobLedger.contends(a, sset)
+            for hid in by_host
+            for a in cross_by_host.get(hid, ())
+        )
 
     def predict_one(self, subset: Subset) -> float:
         return float(self.predict([subset])[0])

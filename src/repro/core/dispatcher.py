@@ -86,9 +86,28 @@ class DispatcherService:
     def __init__(self, cluster: Cluster):
         self.cluster = cluster
         self.ledger = JobLedger(cluster)
+        # Optional telemetry sink (repro.core.contended_dataset.
+        # TelemetryHarvester): measured bandwidths reported by live jobs are
+        # recorded with their co-tenant context for online fine-tuning.
+        self.harvester = None
 
     def dispatch(self, avail: Sequence[int], k: int, rng=None) -> Subset:
         raise NotImplementedError
+
+    def report_bandwidth(self, job_id: str, bw: float) -> Optional[Allocation]:
+        """Production telemetry entry point: a live job reports the
+        collective bandwidth it actually measured.  Forwarded (with the
+        job's current co-tenant ledger context) to the attached harvester;
+        a no-op sink otherwise.  Returns the job's allocation, or None for
+        a stale report (job already released — an ordinary race between a
+        job's last measurement and its departure; the sample is dropped
+        because its co-tenant context is gone)."""
+        if job_id not in self.ledger:
+            return None
+        alloc = self.ledger.allocation(job_id)
+        if self.harvester is not None:
+            self.harvester.observe(self.ledger, alloc.gpus, bw)
+        return alloc
 
     def admit(self, job_id: str, k: int, rng=None) -> Allocation:
         """Place a k-GPU job on currently-free GPUs and record it live."""
@@ -115,9 +134,12 @@ class BandPilotDispatcher(DispatcherService):
 
     ``contention_aware=True`` (default) wraps the predictor with the
     virtual-merge estimator, so ``admit`` degrades candidate scores by the
-    fair-share rail capacity left next to live cross-host tenants.  With an
-    empty ledger the wrapper is an exact no-op, so single-shot ``dispatch``
-    behaviour (and the Sec. 5.3 harness) is unchanged.
+    fair-share rail capacity left next to live cross-host tenants.
+    ``contention_mode="learned"`` (with a trained ``contended_predictor``)
+    swaps the analytic cap for the ContendedSurrogate, so the search ranks
+    candidates by *learned* contended bandwidth.  With an empty ledger both
+    wrappers are an exact no-op, so single-shot ``dispatch`` behaviour (and
+    the Sec. 5.3 harness) is unchanged.
     """
 
     def __init__(
@@ -127,14 +149,19 @@ class BandPilotDispatcher(DispatcherService):
         predictor,
         name: str = "BandPilot",
         contention_aware: bool = True,
+        contention_mode: str = "analytic",
+        contended_predictor=None,
     ):
         super().__init__(cluster)
         self.tables = tables
         self.base_predictor = predictor
         self.contention_aware = contention_aware
+        self.contention_mode = contention_mode
+        self.contended_predictor = contended_predictor
         if contention_aware:
             self.predictor = ContentionAwarePredictor(
-                cluster, predictor, self.ledger
+                cluster, predictor, self.ledger,
+                mode=contention_mode, contended=contended_predictor,
             )
         else:
             self.predictor = predictor

@@ -5,26 +5,82 @@ host*: a feature tuple of (i) the Stage-1 measured intra-host bandwidth of
 the GPUs selected on that host and (ii) the number of GPUs selected there.
 Padding + mask make the representation batchable; the architecture itself is
 size-agnostic (any number of hosts / any k).
+
+Two featurizations live here:
+
+* **Isolated** (``featurize_one`` / ``featurize_batch``): per-host tokens of
+  ``N_FEATURES`` channels.  Channel 4 is the per-host-type *normalized*
+  intra-host bandwidth: ``(log1p(intra) - log1p(rail_bw * n_h)) / 5`` —
+  the intra bandwidth measured against the host type's NIC rail capacity
+  at the selected count.  Mixed NVLink generations span ~2.5 decades in
+  log-space, and the raw log channel leaves the model to recover each host
+  class's operating point (and hence which of the intra/inter constraints
+  binds — where the Het-VA errors concentrate, see ROADMAP) on its own;
+  this channel hands it the normalized position directly.  The matching
+  embed row is zero-initialized (``surrogate.init_hierarchical_params``) so
+  an un-trained or legacy-trained model is unaffected.  ``host_norm=False``
+  zeroes the channel (the ablation knob ``bench_surrogate_accuracy`` uses
+  to report the delta).
+
+* **Contended** (``featurize_contended_one`` / ``featurize_contended_batch``):
+  the isolated channels plus ``N_LEDGER_FEATURES`` ledger-context channels
+  per token — segment flag, rail-contender count ``c_h``, contender GPU
+  demand on the host, and disjoint occupancy — and (optionally) one extra
+  token per (contending job, shared host) pair carrying the contender's own
+  intra-host features with the segment flag set.  Under an **empty ledger**
+  the first ``N_FEATURES`` channels are bit-identical to the isolated
+  featurization, every context channel is exactly zero, and no contender
+  token is emitted (regression-pinned): the contended representation is a
+  strict superset of the isolated one.
 """
 
 from __future__ import annotations
 
-from typing import List, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.bandwidth_sim import BW_SCALE
 from repro.core.cluster import Cluster
 from repro.core.intra_host import IntraHostTables
+from repro.core.tenancy import JobLedger
 
 # Per-host token features.  The paper's tuple is (intra-host bandwidth from
 # the Stage-1 lookup, GPU count on that host); we encode the bandwidth in
 # log-space (it spans ~2.5 decades across heterogeneous hosts) and append
 # two request-context features the dispatcher trivially knows — the host's
-# share of the request (n_h/k) and the normalized request size — which
-# resolve the inter-host rail term without asking pooling to count tokens.
-N_FEATURES = 4
+# share of the request (n_h/k) and the normalized request size — plus the
+# per-host-type normalized bandwidth (see module docstring).
+N_FEATURES = 5
 _LOG_SCALE = 5.0  # keep in sync with surrogate.LOG_SCALE
+
+# Ledger-context channels appended by the contended featurizer:
+#   [segment flag, c_h / C_NORM, contender demand / 8, disjoint occupancy]
+N_LEDGER_FEATURES = 4
+N_CONTENDED_FEATURES = N_FEATURES + N_LEDGER_FEATURES
+_C_NORM = 4.0  # rail-contender count normalizer
+
+def _host_token(
+    cluster: Cluster,
+    tables: IntraHostTables,
+    hid: int,
+    gpus: Sequence[int],
+    k: int,
+    host_norm: bool,
+) -> np.ndarray:
+    """The isolated feature tuple of one (host, selected GPUs) token."""
+    host_type = cluster.hosts[hid].host_type
+    intra = tables.lookup(hid, cluster.local_tuple(hid, gpus))
+    out = np.zeros((N_FEATURES,), np.float32)
+    out[0] = np.log1p(intra) / _LOG_SCALE
+    out[1] = len(gpus) / 8.0
+    out[2] = len(gpus) / k
+    out[3] = k / max(cluster.n_gpus, 1)
+    if host_norm:
+        out[4] = (
+            np.log1p(intra) - np.log1p(host_type.nic_rail_bw * len(gpus))
+        ) / _LOG_SCALE
+    return out
 
 
 def featurize_one(
@@ -32,6 +88,7 @@ def featurize_one(
     tables: IntraHostTables,
     subset: Sequence[int],
     max_hosts: int,
+    host_norm: bool = True,
 ) -> Tuple[np.ndarray, np.ndarray]:
     """-> (feats [max_hosts, N_FEATURES] float32, mask [max_hosts] float32)."""
     by_host = cluster.partition_by_host(subset)
@@ -39,11 +96,7 @@ def featurize_one(
     mask = np.zeros((max_hosts,), np.float32)
     k = len(subset)
     for i, (hid, gpus) in enumerate(sorted(by_host.items())):
-        intra = tables.lookup(hid, cluster.local_tuple(hid, gpus))
-        feats[i, 0] = np.log1p(intra) / _LOG_SCALE
-        feats[i, 1] = len(gpus) / 8.0
-        feats[i, 2] = len(gpus) / k
-        feats[i, 3] = k / max(cluster.n_gpus, 1)
+        feats[i] = _host_token(cluster, tables, hid, gpus, k, host_norm)
         mask[i] = 1.0
     return feats, mask
 
@@ -53,6 +106,7 @@ def featurize_batch(
     tables: IntraHostTables,
     subsets: Sequence[Sequence[int]],
     max_hosts: int | None = None,
+    host_norm: bool = True,
 ) -> Tuple[np.ndarray, np.ndarray]:
     """-> (feats [B, H, F], mask [B, H]) for a batch of allocations."""
     if max_hosts is None:
@@ -61,7 +115,118 @@ def featurize_batch(
     feats = np.zeros((B, max_hosts, N_FEATURES), np.float32)
     mask = np.zeros((B, max_hosts), np.float32)
     for b, subset in enumerate(subsets):
-        feats[b], mask[b] = featurize_one(cluster, tables, subset, max_hosts)
+        feats[b], mask[b] = featurize_one(
+            cluster, tables, subset, max_hosts, host_norm=host_norm
+        )
+    return feats, mask
+
+
+# ---------------------------------------------------------------------------
+# Contended featurization: (subset, ledger) -> tokens with context channels
+# ---------------------------------------------------------------------------
+
+def default_max_tokens(cluster: Cluster) -> int:
+    """Token budget for the contended featurizer: every candidate host plus
+    up to two contender tokens per host (overflow is truncated; the count
+    and demand *channels* still carry the dropped contenders)."""
+    return 3 * cluster.n_hosts
+
+
+def featurize_contended_one(
+    cluster: Cluster,
+    tables: IntraHostTables,
+    subset: Sequence[int],
+    ledger: Optional[JobLedger],
+    max_tokens: int,
+    include_contenders: bool = True,
+    host_norm: bool = True,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """-> (feats [max_tokens, N_CONTENDED_FEATURES], mask [max_tokens]).
+
+    Candidate host tokens come first (segment flag 0) with their isolated
+    channels computed by the *same* code path as :func:`featurize_one`;
+    contender tokens (one per contending job per shared host, segment flag
+    1) follow in deterministic (host, job id) order and are truncated at
+    ``max_tokens``.
+    """
+    by_host = cluster.partition_by_host(subset)
+    feats = np.zeros((max_tokens, N_CONTENDED_FEATURES), np.float32)
+    mask = np.zeros((max_tokens,), np.float32)
+    k = len(subset)
+    sset = set(subset)
+    busy = ledger.busy() if ledger is not None else set()
+
+    hosts = sorted(by_host.items())
+    if len(hosts) > max_tokens:
+        raise ValueError(
+            f"subset spans {len(hosts)} hosts > max_tokens={max_tokens}"
+        )
+    # One ledger traversal per host: the contender jobs drive both the
+    # context channels and the contender tokens (this is the hot path —
+    # learned-mode search featurizes hundreds of candidates per admission).
+    jobs_by_host = {
+        hid: (
+            ledger.cross_host_jobs_on(hid, against=subset)
+            if ledger is not None else []
+        )
+        for hid, _ in hosts
+    }
+    ctx_by_host = {}
+    for hid, _ in hosts:
+        jobs = jobs_by_host[hid]
+        host = cluster.hosts[hid]
+        on_host = {
+            a.job_id: [g for g in a.gpus if cluster.gpu_host[g] == hid]
+            for a in jobs
+        }
+        occ = sum(
+            1 for g in host.gpu_ids if g in busy and g not in sset
+        ) / host.n_gpus if ledger is not None else 0.0
+        demand = sum(len(g) for g in on_host.values())
+        ctx_by_host[hid] = (len(jobs) / _C_NORM, demand / 8.0, occ)
+        jobs_by_host[hid] = [(a, on_host[a.job_id]) for a in jobs]
+    for i, (hid, gpus) in enumerate(hosts):
+        feats[i, :N_FEATURES] = _host_token(
+            cluster, tables, hid, gpus, k, host_norm
+        )
+        feats[i, N_FEATURES + 1:] = ctx_by_host[hid]  # segment stays 0
+        mask[i] = 1.0
+    n = len(hosts)
+    if include_contenders and ledger is not None and len(hosts) > 1:
+        for hid, _ in hosts:
+            for alloc, on_host in jobs_by_host[hid]:
+                if n >= max_tokens:
+                    return feats, mask  # truncate; channels keep the counts
+                feats[n, :N_FEATURES] = _host_token(
+                    cluster, tables, hid, on_host, alloc.k, host_norm
+                )
+                feats[n, N_FEATURES] = 1.0  # segment: contender token
+                feats[n, N_FEATURES + 1:] = ctx_by_host[hid]
+                mask[n] = 1.0
+                n += 1
+    return feats, mask
+
+
+def featurize_contended_batch(
+    cluster: Cluster,
+    tables: IntraHostTables,
+    pairs: Sequence[Tuple[Sequence[int], Optional[JobLedger]]],
+    max_tokens: Optional[int] = None,
+    include_contenders: bool = True,
+    host_norm: bool = True,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """-> (feats [B, T, N_CONTENDED_FEATURES], mask [B, T]) for a batch of
+    (subset, ledger) pairs; ``ledger=None`` means isolated."""
+    if max_tokens is None:
+        max_tokens = default_max_tokens(cluster)
+    B = len(pairs)
+    feats = np.zeros((B, max_tokens, N_CONTENDED_FEATURES), np.float32)
+    mask = np.zeros((B, max_tokens), np.float32)
+    for b, (subset, ledger) in enumerate(pairs):
+        feats[b], mask[b] = featurize_contended_one(
+            cluster, tables, subset, ledger, max_tokens,
+            include_contenders=include_contenders, host_norm=host_norm,
+        )
     return feats, mask
 
 

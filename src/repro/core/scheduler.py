@@ -235,6 +235,7 @@ class AdmissionScheduler:
         dispatcher,
         config: Optional[SchedulerConfig] = None,
         rng: Optional[np.random.Generator] = None,
+        harvester=None,
     ):
         self.cluster = cluster
         self.sim = sim
@@ -242,6 +243,10 @@ class AdmissionScheduler:
         self.dispatcher = dispatcher
         self.config = config or SchedulerConfig()
         self.rng = rng
+        # Optional telemetry sink (contended_dataset.TelemetryHarvester):
+        # every graded admission is also recorded as a (subset, ledger,
+        # contended-bw) observation for the online fine-tuning loop.
+        self.harvester = harvester
         self.records: List[TenantRecord] = []
         self.migrations: List[MigrationEvent] = []
         self._rec_by_job: Dict[str, TenantRecord] = {}
@@ -477,6 +482,10 @@ class AdmissionScheduler:
             [(j.job_id, j.k) for j in jobs],
             orders=orders,
             contention_aware=getattr(self.dispatcher, "contention_aware", True),
+            contention_mode=getattr(
+                self.dispatcher, "contention_mode", "analytic"
+            ),
+            contended=getattr(self.dispatcher, "contended_predictor", None),
         )
         by_id = {j.job_id: (j, ov) for j, ov in zip(jobs, overtakes)}
         for p in plan.placements:
@@ -523,6 +532,8 @@ class AdmissionScheduler:
         # self-excludes the job's own (GPU-overlapping) ledger entry
         bw = self.sim.true_bandwidth(alloc.gpus, ledger=ledger)
         iso = self.sim.true_bandwidth(alloc.gpus)
+        if self.harvester is not None:
+            self.harvester.observe(ledger, alloc.gpus, bw)
         shared = sum(
             1 for hid in alloc.host_ids
             if ledger.rail_contenders(hid, against=alloc.gpus) > 0

@@ -278,6 +278,8 @@ def joint_hybrid_search(
     requests: Sequence[Tuple[str, int]],
     orders: Sequence[str] = JOINT_ORDERS,
     contention_aware: bool = True,
+    contention_mode: str = "analytic",
+    contended=None,
 ) -> JointResult:
     """Place a batch of ``(job_id, k)`` requests *jointly* against a ledger.
 
@@ -295,6 +297,9 @@ def joint_hybrid_search(
     real ledger: they are pairwise GPU-disjoint and drawn from its current
     availability.  ``contention_aware=False`` keeps batch-mates as
     availability constraints only (the contention-oblivious ablation).
+    ``contention_mode``/``contended`` select the analytic fair-share cap or
+    the learned ContendedSurrogate for the degradation estimates, exactly as
+    in :class:`~repro.core.contention.ContentionAwarePredictor`.
     """
     from repro.core.contention import ContentionAwarePredictor
 
@@ -320,7 +325,10 @@ def joint_hybrid_search(
         for a in ledger.jobs():
             scratch.admit(a.job_id, a.gpus)
         pred = (
-            ContentionAwarePredictor(cluster, predictor, scratch)
+            ContentionAwarePredictor(
+                cluster, predictor, scratch,
+                mode=contention_mode, contended=contended,
+            )
             if contention_aware else predictor
         )
         placements: List[JointPlacement] = []

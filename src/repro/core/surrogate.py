@@ -1,6 +1,6 @@
 """Bandwidth surrogate models in pure JAX (Sec. 4.2).
 
-Two models share one Transformer-encoder trunk:
+Three models share one Transformer-encoder trunk:
 
 * **HierarchicalSurrogate** (the paper's design): tokens are per-host feature
   tuples (Stage-1 intra-host bandwidth lookup, GPU count); a 6-layer,
@@ -9,6 +9,13 @@ Two models share one Transformer-encoder trunk:
 * **NaiveSurrogate** (ablation baseline, Sec. 5.5.1): tokens are raw GPU
   identifiers passed through a learned embedding; the model must infer the
   physical hierarchy from scratch.
+* **ContendedSurrogate** (the learned-contention head): the same encoder
+  trunk, warm-started from the isolated surrogate, plus a zero-initialized
+  *context embedding* over the ledger channels of
+  :func:`repro.core.features.featurize_contended_batch`.  At init it is
+  exactly the isolated model on any zero-context input; training on a
+  curriculum of (subset, ledger, contended-bw) triples teaches it the rail
+  split the analytic estimator only approximates.
 
 Everything is written against plain parameter pytrees (dicts) so the model
 is trivially checkpointable and shardable with the rest of the framework.
@@ -92,8 +99,13 @@ def _trunk_init(key, d=D_MODEL, n_layers=N_LAYERS):
 
 def init_hierarchical_params(key) -> PyTree:
     k_embed, k_trunk = jax.random.split(key)
+    embed = _dense_init(k_embed, feat_lib.N_FEATURES, D_MODEL, scale=1.0)
+    # The per-host-type normalized channel (features.py channel 4) starts
+    # inert: a zero embed row means an un-trained (or legacy-trained) model
+    # is bit-for-bit unaffected by it; training opts in where it helps.
+    embed["w"] = embed["w"].at[feat_lib.N_FEATURES - 1].set(0.0)
     return {
-        "embed": _dense_init(k_embed, feat_lib.N_FEATURES, D_MODEL, scale=1.0),
+        "embed": embed,
         "trunk": _trunk_init(k_trunk),
     }
 
@@ -103,6 +115,21 @@ def init_naive_params(key, n_gpus: int) -> PyTree:
     return {
         "id_embed": jax.random.normal(k_embed, (n_gpus, D_MODEL)) * 0.1,
         "trunk": _trunk_init(k_trunk),
+    }
+
+
+def init_contended_params(base_params: PyTree) -> PyTree:
+    """ContendedSurrogate init: the isolated trunk + embed (warm start) plus
+    a ZERO context embedding — so at init the contended model computes
+    exactly the isolated prediction wherever the ledger channels are zero.
+    Deterministic (no rng): all the randomness came from the base params."""
+    copied = jax.tree_util.tree_map(jnp.array, base_params)
+    return {
+        "embed": copied["embed"],
+        "ctx_embed": {
+            "w": jnp.zeros((feat_lib.N_LEDGER_FEATURES, D_MODEL), jnp.float32)
+        },
+        "trunk": copied["trunk"],
     }
 
 
@@ -176,6 +203,18 @@ def apply_naive(params: PyTree, ids: jnp.ndarray, mask: jnp.ndarray):
     return _encoder(params["trunk"], x, mask)
 
 
+def apply_contended(params: PyTree, feats: jnp.ndarray, mask: jnp.ndarray):
+    """feats: [B, T, N_CONTENDED_FEATURES], mask: [B, T] -> normalized bw [B].
+
+    The ledger channels enter through a bias-free context embedding added to
+    the base-token embedding; with an all-zero context the forward pass is
+    the isolated :func:`apply_hierarchical` of the embedded trunk."""
+    base = feats[..., : feat_lib.N_FEATURES]
+    ctx = feats[..., feat_lib.N_FEATURES:]
+    x = _dense(params["embed"], base) + ctx @ params["ctx_embed"]["w"]
+    return _encoder(params["trunk"], x, mask)
+
+
 # ---------------------------------------------------------------------------
 # Predictor: the deployable surrogate B̂(S)
 # ---------------------------------------------------------------------------
@@ -202,11 +241,13 @@ class SurrogatePredictor:
         params: PyTree,
         naive: bool = False,
         max_k: Optional[int] = None,
+        host_norm: bool = True,
     ):
         self.cluster = cluster
         self.tables = tables
         self.params = params
         self.naive = naive
+        self.host_norm = host_norm
         self.max_k = max_k or cluster.n_gpus
         self.n_model_calls = 0      # instrumentation for Fig. 8
         self.predict_seconds = 0.0  # cumulative surrogate-inference time
@@ -249,10 +290,88 @@ class SurrogatePredictor:
             mask_p[B:, 0] = 1.0  # keep padded rows non-degenerate
             preds = self._apply(self.params, jnp.asarray(ids), jnp.asarray(mask_p))
         else:
-            feats, mask = feat_lib.featurize_batch(self.cluster, self.tables, subsets)
+            feats, mask = feat_lib.featurize_batch(
+                self.cluster, self.tables, subsets, host_norm=self.host_norm
+            )
             feats = np.pad(feats, ((0, Bp - B), (0, 0), (0, 0)))
             mask_p = np.pad(mask, ((0, Bp - B), (0, 0)))
             mask_p[B:, 0] = 1.0
             preds = self._apply(self.params, jnp.asarray(feats), jnp.asarray(mask_p))
         self.n_model_calls += B
         return np.asarray(decode_bw(preds))[:B]
+
+
+# ---------------------------------------------------------------------------
+# Contended predictor: the deployable B̂(S | L)
+# ---------------------------------------------------------------------------
+
+class ContendedSurrogatePredictor:
+    """Deployable learned-contention B̂(S | L) (the ContendedSurrogate).
+
+    Same two-stage dispatch as :class:`SurrogatePredictor`: single-host
+    allocations never touch a NIC, so Stage-1 exact lookups answer them
+    regardless of the ledger; multi-host allocations are featurized together
+    with their ledger context and scored by the contended Transformer.
+
+    ``predict(subsets, ledger)`` scores a batch against one live ledger (the
+    search path); ``predict_pairs`` takes explicit (subset, ledger) pairs
+    (the dataset-evaluation path, where every sample has its own ledger).
+    """
+
+    def __init__(
+        self,
+        cluster: Cluster,
+        tables: IntraHostTables,
+        params: PyTree,
+        max_tokens: Optional[int] = None,
+        include_contenders: bool = True,
+        host_norm: bool = True,
+    ):
+        self.cluster = cluster
+        self.tables = tables
+        self.params = params
+        self.max_tokens = max_tokens or feat_lib.default_max_tokens(cluster)
+        self.include_contenders = include_contenders
+        self.host_norm = host_norm
+        self.n_model_calls = 0
+        self.predict_seconds = 0.0
+        self._apply = jax.jit(apply_contended)
+
+    def predict(self, subsets: Sequence[Sequence[int]], ledger) -> np.ndarray:
+        """Contended B̂ for a batch of allocations against one live ledger."""
+        return self.predict_pairs([(s, ledger) for s in subsets])
+
+    def predict_one(self, subset: Sequence[int], ledger) -> float:
+        return float(self.predict([subset], ledger)[0])
+
+    def predict_pairs(self, pairs: Sequence[Tuple[Sequence[int], Any]]) -> np.ndarray:
+        t0 = time.time()
+        out = np.zeros((len(pairs),), np.float64)
+        model_idx: List[int] = []
+        model_pairs: List[Tuple[Sequence[int], Any]] = []
+        for i, (s, ledger) in enumerate(pairs):
+            if len(self.cluster.partition_by_host(s)) == 1:
+                out[i] = self.tables.lookup_global(list(s))  # Stage-1: exact
+            else:
+                model_idx.append(i)
+                model_pairs.append((s, ledger))
+        if model_pairs:
+            B = len(model_pairs)
+            Bp = _round_up_pow2(B)
+            feats, mask = feat_lib.featurize_contended_batch(
+                self.cluster, self.tables, model_pairs,
+                max_tokens=self.max_tokens,
+                include_contenders=self.include_contenders,
+                host_norm=self.host_norm,
+            )
+            feats = np.pad(feats, ((0, Bp - B), (0, 0), (0, 0)))
+            mask_p = np.pad(mask, ((0, Bp - B), (0, 0)))
+            mask_p[B:, 0] = 1.0
+            preds = self._apply(
+                self.params, jnp.asarray(feats), jnp.asarray(mask_p)
+            )
+            self.n_model_calls += B
+            for i, p in zip(model_idx, np.asarray(decode_bw(preds))[:B]):
+                out[i] = p
+        self.predict_seconds += time.time() - t0
+        return out

@@ -45,8 +45,9 @@ class Allocation:
 
 @dataclasses.dataclass(frozen=True)
 class ContentionSnapshot:
-    """Frozen per-host rail-contender counts, duck-typing the one method of
-    :class:`JobLedger` the bandwidth simulator consumes.
+    """Frozen per-host rail-contender counts (and per-contender GPU demands),
+    duck-typing the two methods of :class:`JobLedger` the bandwidth simulator
+    consumes.
 
     Valid ONLY for candidate subsets GPU-disjoint from every live allocation
     (anything drawn from ``available()``): the disjointness check is
@@ -55,9 +56,15 @@ class ContentionSnapshot:
     """
 
     counts: Dict[int, int]
+    demands: Dict[int, Tuple[int, ...]] = dataclasses.field(default_factory=dict)
 
     def rail_contenders(self, host_id: int, against: Sequence[int] = ()) -> int:
         return self.counts.get(host_id, 0)
+
+    def contender_demands(
+        self, host_id: int, against: Sequence[int] = ()
+    ) -> Tuple[int, ...]:
+        return self.demands.get(host_id, ())
 
 
 class JobLedger:
@@ -187,12 +194,31 @@ class JobLedger:
         against a candidate subset (see module docstring for the predicate)."""
         return len(self.cross_host_jobs_on(host_id, against=against))
 
+    def contender_demands(
+        self, host_id: int, against: Sequence[int] = ()
+    ) -> Tuple[int, ...]:
+        """Per-contender GPU counts on ``host_id`` (one entry per contending
+        cross-host job, same predicate as :meth:`rail_contenders`) — the rail
+        demands the *saturating* contention model weighs shares by."""
+        return tuple(
+            sum(1 for g in a.gpus if self.cluster.gpu_host[g] == host_id)
+            for a in self.cross_host_jobs_on(host_id, against=against)
+        )
+
     def snapshot(self) -> ContentionSnapshot:
-        """Pre-resolved contender counts for candidates drawn from
+        """Pre-resolved contender counts/demands for candidates drawn from
         ``available()`` (always GPU-disjoint from live jobs)."""
-        return ContentionSnapshot({
-            hid: len(jobs) for hid, jobs in self.cross_jobs_by_host().items()
-        })
+        cross = self.cross_jobs_by_host()
+        return ContentionSnapshot(
+            {hid: len(jobs) for hid, jobs in cross.items()},
+            {
+                hid: tuple(
+                    sum(1 for g in a.gpus if self.cluster.gpu_host[g] == hid)
+                    for a in jobs
+                )
+                for hid, jobs in cross.items()
+            },
+        )
 
     def describe(self) -> str:
         live = ", ".join(

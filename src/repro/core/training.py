@@ -4,6 +4,15 @@ The paper trains the hierarchical Transformer on a deliberately sparse set of
 inter-host measurements (250 samples in the headline results) and keeps it
 fresh by fine-tuning on bandwidths observed from live jobs.  Both paths share
 one jitted AdamW step.
+
+The learned-contention subsystem adds a third trainee: the
+**ContendedSurrogate** (`train_contended_surrogate`), fitted on (subset,
+ledger, contended-bandwidth) triples — synthetic ones from
+:mod:`repro.core.contended_dataset` or live ones from its telemetry
+harvester (`online_finetune_contended`, the Sec. 4.1.2 adaptation loop under
+tenancy).  The curriculum deliberately mixes isolated (empty-ledger) and
+contended samples so the model keeps its isolated accuracy while absorbing
+the rail split.
 """
 
 from __future__ import annotations
@@ -25,6 +34,11 @@ from repro.train.optimizer import AdamWConfig, adamw, cosine_schedule
 
 PyTree = Any
 
+# One contended-training sample: (subset, ledger-or-None, bandwidth GB/s).
+# ``ledger`` duck-types JobLedger (the featurizer reads contender_demands /
+# cross_host_jobs_on / busy); None means isolated.
+ContendedTriple = Tuple[Sequence[int], Any, float]
+
 
 @dataclasses.dataclass
 class TrainConfig:
@@ -42,38 +56,16 @@ def _mse_loss(apply_fn, params, x, mask, y):
     return jnp.mean(jnp.square(pred - y))
 
 
-def train_surrogate(
-    cluster: Cluster,
-    tables: IntraHostTables,
-    dataset: Sequence[Tuple[Sequence[int], float]],
-    config: TrainConfig = TrainConfig(),
-    naive: bool = False,
-    init_params: Optional[PyTree] = None,
+def _fit(
+    apply_fn,
+    params: PyTree,
+    x: jnp.ndarray,
+    mask: jnp.ndarray,
+    targets: jnp.ndarray,
+    config: TrainConfig,
 ) -> Tuple[PyTree, Dict[str, float]]:
-    """Train hierarchical (or naive) surrogate on (allocation, bandwidth) pairs.
-
-    Returns (params, info) where info records wall time and final loss.
-    """
-    key = jax.random.PRNGKey(config.seed)
-    subsets = [list(s) for s, _ in dataset]
-    targets = np.asarray(
-        surr.encode_bw(np.asarray([bw for _, bw in dataset], np.float32))
-    )
-
-    if naive:
-        x, mask = feat_lib.featurize_gpu_ids(cluster, subsets, cluster.n_gpus)
-        apply_fn = surr.apply_naive
-        params = init_params or surr.init_naive_params(key, cluster.n_gpus)
-    else:
-        x, mask = feat_lib.featurize_batch(cluster, tables, subsets)
-        apply_fn = surr.apply_hierarchical
-        params = init_params or surr.init_hierarchical_params(key)
-
-    x = jnp.asarray(x)
-    mask = jnp.asarray(mask)
-    targets = jnp.asarray(targets)
-    n = len(subsets)
-
+    """The shared AdamW loop: minibatch MSE on normalized log-bandwidth."""
+    n = int(x.shape[0])
     opt_cfg = AdamWConfig(
         lr=config.lr, weight_decay=config.weight_decay, grad_clip_norm=1.0
     )
@@ -108,6 +100,42 @@ def train_surrogate(
     return params, info
 
 
+def train_surrogate(
+    cluster: Cluster,
+    tables: IntraHostTables,
+    dataset: Sequence[Tuple[Sequence[int], float]],
+    config: TrainConfig = TrainConfig(),
+    naive: bool = False,
+    init_params: Optional[PyTree] = None,
+    host_norm: bool = True,
+) -> Tuple[PyTree, Dict[str, float]]:
+    """Train hierarchical (or naive) surrogate on (allocation, bandwidth) pairs.
+
+    Returns (params, info) where info records wall time and final loss.
+    """
+    key = jax.random.PRNGKey(config.seed)
+    subsets = [list(s) for s, _ in dataset]
+    targets = np.asarray(
+        surr.encode_bw(np.asarray([bw for _, bw in dataset], np.float32))
+    )
+
+    if naive:
+        x, mask = feat_lib.featurize_gpu_ids(cluster, subsets, cluster.n_gpus)
+        apply_fn = surr.apply_naive
+        params = init_params or surr.init_naive_params(key, cluster.n_gpus)
+    else:
+        x, mask = feat_lib.featurize_batch(
+            cluster, tables, subsets, host_norm=host_norm
+        )
+        apply_fn = surr.apply_hierarchical
+        params = init_params or surr.init_hierarchical_params(key)
+
+    return _fit(
+        apply_fn, params, jnp.asarray(x), jnp.asarray(mask),
+        jnp.asarray(targets), config,
+    )
+
+
 def online_finetune(
     cluster: Cluster,
     tables: IntraHostTables,
@@ -127,8 +155,82 @@ def online_finetune(
 
 
 # ---------------------------------------------------------------------------
+# ContendedSurrogate training (the learned-contention subsystem)
+# ---------------------------------------------------------------------------
+
+def train_contended_surrogate(
+    cluster: Cluster,
+    tables: IntraHostTables,
+    dataset: Sequence[ContendedTriple],
+    config: TrainConfig = TrainConfig(),
+    base_params: Optional[PyTree] = None,
+    init_params: Optional[PyTree] = None,
+    include_contenders: bool = True,
+    max_tokens: Optional[int] = None,
+    host_norm: bool = True,
+) -> Tuple[PyTree, Dict[str, float]]:
+    """Fit the ContendedSurrogate on (subset, ledger, bandwidth) triples.
+
+    ``base_params`` (the trained isolated surrogate) warm-starts the trunk;
+    without it a fresh isolated init is used.  ``init_params`` resumes an
+    existing contended model (the online fine-tune path).  The dataset is
+    the curriculum: :func:`repro.core.contended_dataset.build_contended_dataset`
+    mixes isolated (empty-ledger) and contended samples so the model's
+    zero-context behaviour stays anchored to the isolated one.
+    """
+    key = jax.random.PRNGKey(config.seed)
+    pairs = [(list(s), led) for s, led, _ in dataset]
+    targets = np.asarray(
+        surr.encode_bw(np.asarray([bw for _, _, bw in dataset], np.float32))
+    )
+    x, mask = feat_lib.featurize_contended_batch(
+        cluster, tables, pairs, max_tokens=max_tokens,
+        include_contenders=include_contenders, host_norm=host_norm,
+    )
+    if init_params is None:
+        init_params = surr.init_contended_params(
+            base_params
+            if base_params is not None
+            else surr.init_hierarchical_params(key)
+        )
+    return _fit(
+        surr.apply_contended, init_params, jnp.asarray(x), jnp.asarray(mask),
+        jnp.asarray(targets), config,
+    )
+
+
+def online_finetune_contended(
+    cluster: Cluster,
+    tables: IntraHostTables,
+    params: PyTree,
+    new_samples: Sequence[ContendedTriple],
+    steps: int = 200,
+    lr: float = 5e-4,
+    seed: int = 1,
+    **featurize_kwargs,
+) -> PyTree:
+    """Online adaptation under tenancy: a few low-LR steps on contended
+    bandwidths harvested from live admissions (telemetry harvester)."""
+    cfg = TrainConfig(steps=steps, lr=lr, warmup_steps=0, seed=seed)
+    params, _ = train_contended_surrogate(
+        cluster, tables, new_samples, cfg, init_params=params,
+        **featurize_kwargs,
+    )
+    return params
+
+
+# ---------------------------------------------------------------------------
 # Accuracy metrics (Sec. 5.2): R^2 and MAPE
 # ---------------------------------------------------------------------------
+
+def _accuracy(y: np.ndarray, pred: np.ndarray) -> Dict[str, float]:
+    resid = y - pred
+    ss_res = float(np.sum(resid**2))
+    ss_tot = float(np.sum((y - y.mean()) ** 2))
+    r2 = 1.0 - ss_res / max(ss_tot, 1e-12)
+    mape = float(np.mean(np.abs(resid) / np.maximum(np.abs(y), 1e-9))) * 100.0
+    return {"r2": r2, "mape": mape, "n": len(y)}
+
 
 def evaluate_surrogate(
     predictor: "surr.SurrogatePredictor",
@@ -136,13 +238,49 @@ def evaluate_surrogate(
 ) -> Dict[str, float]:
     subsets = [list(s) for s, _ in dataset]
     y = np.asarray([bw for _, bw in dataset], np.float64)
-    pred = predictor.predict(subsets)
-    resid = y - pred
-    ss_res = float(np.sum(resid**2))
-    ss_tot = float(np.sum((y - y.mean()) ** 2))
-    r2 = 1.0 - ss_res / max(ss_tot, 1e-12)
-    mape = float(np.mean(np.abs(resid) / np.maximum(np.abs(y), 1e-9))) * 100.0
-    return {"r2": r2, "mape": mape, "n": len(dataset)}
+    return _accuracy(y, predictor.predict(subsets))
+
+
+def evaluate_contended_predictor(
+    predictor,
+    dataset: Sequence[ContendedTriple],
+) -> Dict[str, float]:
+    """R^2 / MAPE of a contended predictor over (subset, ledger, bw)
+    triples.  ``predictor`` must expose ``predict_pairs`` (the
+    ContendedSurrogate): each sample is scored against its *own* ledger.
+    For the analytic even-split baseline use :func:`evaluate_analytic_cap`
+    — a plain ``predict(subsets)`` wrapper reads only the single ledger it
+    wraps and would silently mis-score a per-sample-ledger dataset."""
+    if not hasattr(predictor, "predict_pairs"):
+        raise TypeError(
+            "evaluate_contended_predictor needs a predict_pairs predictor; "
+            "for the analytic cap baseline use evaluate_analytic_cap"
+        )
+    y = np.asarray([bw for _, _, bw in dataset], np.float64)
+    pred = predictor.predict_pairs([(list(s), led) for s, led, _ in dataset])
+    return _accuracy(y, np.asarray(pred, np.float64))
+
+
+def evaluate_analytic_cap(
+    cluster: Cluster,
+    base_predictor,
+    dataset: Sequence[ContendedTriple],
+) -> Tuple[np.ndarray, Dict[str, float]]:
+    """The analytic baseline over (subset, ledger, bw) triples:
+    ``min(B̂_iso(S), even-split cap(S, L))`` with each sample's own ledger.
+    One batched isolated predict; the caps are closed-form (no model
+    calls).  Returns (predictions, accuracy dict)."""
+    from repro.core.contention import contended_inter_cap
+
+    subsets = [list(s) for s, _, _ in dataset]
+    preds = np.asarray(base_predictor.predict(subsets), np.float64).copy()
+    for i, (s, ledger, _) in enumerate(dataset):
+        if ledger is not None and len(ledger) > 0:
+            cap = contended_inter_cap(cluster, ledger, s)
+            if cap < preds[i]:
+                preds[i] = cap
+    y = np.asarray([bw for _, _, bw in dataset], np.float64)
+    return preds, _accuracy(y, preds)
 
 
 def make_train_test_split(

@@ -1,0 +1,157 @@
+"""Learned-contention predictor: equivalence regression + mode mechanics.
+
+The load-bearing guarantee (ISSUE 3 acceptance): under an **empty ledger**,
+``ContentionAwarePredictor(mode="learned")`` returns the isolated
+surrogate's predictions *bit-identically* — the learned head only ever
+activates for candidates with at least one live rail contender.  The
+equivalence is architectural (routing), so it holds for any trained
+parameters; the golden pins below additionally freeze the isolated Stage-1
+values per cluster so a drift of the isolated path itself cannot hide
+behind the equivalence.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+import repro.core as core
+from repro.core import surrogate as surr
+from repro.core.tenancy import JobLedger
+
+# Stage-1 exact lookups (deterministic md5-jittered simulator values): the
+# golden pin for the isolated path, per cluster in the zoo.
+GOLDEN_STAGE1 = {
+    "H100": (216.15655021079937, 109.67438608621379),
+    "Het-RA": (6.173531984371529, 3.0559141010415845),
+    "Het-VA": (16.12251537792253, 7.843166285350013),
+    "Het-4Mix": (6.197083785914903, 8.063237494093851),
+}
+
+
+def _stack(name):
+    cl = core.PAPER_CLUSTERS[name]()
+    sim = core.BandwidthSimulator(cl, contention="saturating")
+    tables = core.IntraHostTables(cl, sim)
+    params = surr.init_hierarchical_params(jax.random.PRNGKey(0))
+    iso = core.SurrogatePredictor(cl, tables, params)
+    cpred = core.ContendedSurrogatePredictor(
+        cl, tables, surr.init_contended_params(params)
+    )
+    return cl, sim, tables, iso, cpred
+
+
+@pytest.mark.parametrize("name", sorted(core.PAPER_CLUSTERS))
+def test_learned_empty_ledger_bit_identical(name):
+    cl, sim, tables, iso, cpred = _stack(name)
+    ledger = JobLedger(cl)
+    wrapper = core.ContentionAwarePredictor(
+        cl, iso, ledger, mode="learned", contended=cpred
+    )
+    subs = sim.sample_allocations(12, np.random.default_rng(0))
+    subs += [[0, 1, 2, 3], list(cl.hosts[1].gpu_ids[:2])]
+    np.testing.assert_array_equal(wrapper.predict(subs), iso.predict(subs))
+    # golden pin: the shared isolated path itself has not drifted
+    g1, g2 = GOLDEN_STAGE1[name]
+    got = wrapper.predict([[0, 1, 2, 3], list(cl.hosts[1].gpu_ids[:2])])
+    np.testing.assert_allclose(got, [g1, g2], rtol=1e-12)
+
+
+def test_learned_mode_activates_only_under_contention():
+    cl, sim, tables, iso, cpred = _stack("H100")
+    ledger = JobLedger(cl)
+    wrapper = core.ContentionAwarePredictor(
+        cl, iso, ledger, mode="learned", contended=cpred
+    )
+    contended = [0, 1, 8, 9]          # hosts 0,1 — shares rails with tenant
+    far = [16, 17, 24, 25]            # hosts 2,3 — no shared rails
+    single = [16, 17, 18, 19]         # never touches a NIC
+    base = iso.predict([contended, far, single])
+    ledger.admit("a", [4, 5, 12, 13])  # cross-host tenant on hosts 0,1
+    out = wrapper.predict([contended, far, single])
+    # the learned estimate replaces only the contended candidate, clamped
+    # by the isolated prediction
+    expected = min(
+        base[0], cpred.predict([contended], ledger)[0]
+    )
+    assert out[0] == expected
+    assert out[1] == base[1] and out[2] == base[2]
+    # release -> empty ledger -> exact passthrough again
+    ledger.release("a")
+    np.testing.assert_array_equal(
+        wrapper.predict([contended, far, single]), base
+    )
+
+
+def test_learned_estimate_never_exceeds_isolated():
+    cl, sim, tables, iso, cpred = _stack("H100")
+    ledger = JobLedger(cl)
+    ledger.admit("a", [4, 5, 6, 12, 13, 14])
+    wrapper = core.ContentionAwarePredictor(
+        cl, iso, ledger, mode="learned", contended=cpred
+    )
+    subs = [s for s in sim.sample_allocations(20, np.random.default_rng(1))
+            if set(s).isdisjoint([4, 5, 6, 12, 13, 14])]
+    assert np.all(wrapper.predict(subs) <= iso.predict(subs) + 1e-12)
+
+
+def test_predictor_mode_validation():
+    cl, sim, tables, iso, cpred = _stack("H100")
+    ledger = JobLedger(cl)
+    with pytest.raises(ValueError):
+        core.ContentionAwarePredictor(cl, iso, ledger, mode="vibes")
+    with pytest.raises(ValueError):
+        core.ContentionAwarePredictor(cl, iso, ledger, mode="learned")
+
+
+@pytest.mark.slow
+def test_learned_dispatcher_end_to_end():
+    """The full integration: a learned-mode BandPilot dispatcher admits and
+    releases through the scheduler (joint batched policy included) without
+    ever producing an invalid placement."""
+    cl, sim, tables, iso, cpred = _stack("H100")
+    disp = core.BandPilotDispatcher(
+        cl, tables, iso, name="BP-learned",
+        contention_mode="learned", contended_predictor=cpred,
+    )
+    trace = core.poisson_trace(
+        cl, 12, np.random.default_rng(3), mean_duration=5.0,
+        k_choices=range(4, 13),
+    )
+    recs = core.replay_trace(
+        cl, sim, tables, disp, trace,
+        config=core.SchedulerConfig(policy="batched", batch_window=1.0),
+    )
+    assert len(recs) == len(trace)
+    assert len(disp.ledger) == 0
+    assert all(0.0 < r.gbe <= 1.0 + 1e-9 for r in recs)
+
+
+@pytest.mark.slow
+def test_tiny_contended_finetune_learns():
+    """A tiny curriculum fit must beat the untrained contended head on
+    contended samples (the full accuracy claim lives in
+    benchmarks/bench_learned_contention.py)."""
+    cl = core.h100_cluster()
+    sim = core.BandwidthSimulator(cl, contention="saturating")
+    tables = core.IntraHostTables(cl, sim)
+    base = surr.init_hierarchical_params(jax.random.PRNGKey(0))
+    train, test = core.make_contended_split(
+        sim, 80, test_mult=1, seed=2, isolated_frac=0.2
+    )
+    trip_train = core.to_triples(cl, train)
+    trip_test = core.to_triples(cl, [s for s in test if s.contended])
+    before = core.evaluate_contended_predictor(
+        core.ContendedSurrogatePredictor(
+            cl, tables, surr.init_contended_params(base)
+        ),
+        trip_test,
+    )
+    params, info = core.train_contended_surrogate(
+        cl, tables, trip_train,
+        core.TrainConfig(steps=220, warmup_steps=20), base_params=base,
+    )
+    after = core.evaluate_contended_predictor(
+        core.ContendedSurrogatePredictor(cl, tables, params), trip_test
+    )
+    assert after["mape"] < before["mape"]
+    assert info["n_samples"] == len(trip_train)
