@@ -25,6 +25,7 @@ from benchmarks import (
     bench_contention,
     bench_scheduler,
     bench_learned_contention,
+    bench_defrag,
 )
 
 BENCHES = [
@@ -39,6 +40,7 @@ BENCHES = [
     ("sec44_contention", bench_contention.run),
     ("issue2_scheduler_policies", bench_scheduler.run),
     ("issue3_learned_contention", bench_learned_contention.run),
+    ("issue4_defrag", bench_defrag.run),
 ]
 
 

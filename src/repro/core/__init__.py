@@ -23,6 +23,11 @@ Public surface:
     TelemetryHarvester / harvest_trace, surrogate.ContendedSurrogatePredictor,
     training.train_contended_surrogate / online_finetune_contended /
     evaluate_contended_predictor, ContentionAwarePredictor(mode="learned")
+  Defragmentation (metrics, consolidation planner, scheduler triggers):
+    defrag.fragmentation_metrics / FragmentationMetrics, plan_defrag /
+    apply_plan / DefragConfig, evaluate_move / net_migration_gain (shared
+    migration economics), make_frag_penalty (placement tie-break),
+    SchedulerConfig(defrag=True)
 """
 
 from repro.core.bandwidth_sim import BW_SCALE, BandwidthSimulator
@@ -41,6 +46,24 @@ from repro.core.contention import (
     MergeView,
     contended_inter_cap,
     virtual_merge,
+)
+from repro.core.defrag import (
+    DefragConfig,
+    DefragPlan,
+    FragmentationMetrics,
+    MoveEval,
+    apply_plan,
+    consolidation_proposer,
+    evaluate_move,
+    evaluate_placement,
+    forced_rail_contended,
+    fragmentation_metrics,
+    hybrid_proposer,
+    is_consolidating,
+    make_frag_penalty,
+    net_migration_gain,
+    plan_defrag,
+    room_makeable,
 )
 from repro.core.cluster import (
     Cluster,
@@ -134,6 +157,22 @@ __all__ = [
     "SchedulerConfig",
     "compare_policies",
     "migration_cost",
+    "DefragConfig",
+    "DefragPlan",
+    "FragmentationMetrics",
+    "MoveEval",
+    "apply_plan",
+    "consolidation_proposer",
+    "evaluate_move",
+    "evaluate_placement",
+    "forced_rail_contended",
+    "fragmentation_metrics",
+    "hybrid_proposer",
+    "is_consolidating",
+    "make_frag_penalty",
+    "room_makeable",
+    "net_migration_gain",
+    "plan_defrag",
     "IntraHostTables",
     "eha_search",
     "hybrid_search",

@@ -310,22 +310,37 @@ class BandwidthSimulator:
         rng: np.random.Generator,
         k_range: Optional[Tuple[int, int]] = None,
         multi_host_only: bool = True,
+        small_k_weight: float = 0.0,
     ) -> List[List[int]]:
         """Sparse random allocations for surrogate training (Sec. 4.1.2).
 
         ``multi_host_only`` mirrors the paper: intra-host combinations are
         measured exhaustively (Stage-1), so the *training set* for the
         Transformer consists of inter-host samples.
+
+        ``small_k_weight`` oversamples small-k / near-crossover shapes (the
+        ROADMAP's residual Het-VA error mode: allocations where the intra
+        and inter constraints nearly cross and uniform-k sampling sees too
+        few examples): with that probability, k is drawn from the bottom of
+        the range (``lo .. lo+3``) instead of uniformly.  The default 0.0
+        draws nothing extra from the rng, so existing seeded datasets are
+        reproduced bit-for-bit.
         """
+        if not 0.0 <= small_k_weight <= 1.0:
+            raise ValueError("small_k_weight must be in [0, 1]")
         n = self.cluster.n_gpus
         lo, hi = k_range if k_range else (2, n)
+        small_hi = min(lo + 3, hi)
         out: List[List[int]] = []
         seen = set()
         max_tries = n_samples * 50
         tries = 0
         while len(out) < n_samples and tries < max_tries:
             tries += 1
-            k = int(rng.integers(lo, hi + 1))
+            if small_k_weight > 0.0 and rng.random() < small_k_weight:
+                k = int(rng.integers(lo, small_hi + 1))
+            else:
+                k = int(rng.integers(lo, hi + 1))
             subset = sorted(rng.choice(n, size=k, replace=False).tolist())
             if multi_host_only and len(self.cluster.partition_by_host(subset)) < 2:
                 continue
@@ -342,8 +357,11 @@ class BandwidthSimulator:
         rng: np.random.Generator,
         noisy: bool = True,
         k_range: Optional[Tuple[int, int]] = None,
+        small_k_weight: float = 0.0,
     ) -> List[Tuple[List[int], float]]:
-        allocs = self.sample_allocations(n_samples, rng, k_range=k_range)
+        allocs = self.sample_allocations(
+            n_samples, rng, k_range=k_range, small_k_weight=small_k_weight
+        )
         return [
             (a, self.measure(a, rng if noisy else None)) for a in allocs
         ]

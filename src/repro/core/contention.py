@@ -220,6 +220,18 @@ class ContentionAwarePredictor:
     def predict_one(self, subset: Subset) -> float:
         return float(self.predict([subset])[0])
 
+    def tenant_bandwidths(self) -> Dict[str, float]:
+        """Contention-degraded estimate for every *live* tenant, keyed by
+        job id.  Each job's own ledger entry self-excludes through the
+        ``contends`` predicate, so no bookkeeping is needed to grade a job
+        that is already admitted.  This is the predictor-side view the
+        defrag planner's gain accounting mirrors (the scheduler's triggers
+        evaluate the same sum with the grading simulator — see
+        :mod:`repro.core.defrag`)."""
+        allocs = list(self.ledger.jobs())
+        preds = self.predict([list(a.gpus) for a in allocs])
+        return {a.job_id: float(p) for a, p in zip(allocs, preds)}
+
     def merged_bandwidth(self, subset: Subset) -> float:
         """Isolated-model bandwidth of the merged virtual collective — the
         shared-bottleneck capacity probe from the paper's Sec. 4.4 framing.

@@ -140,6 +140,13 @@ class BandPilotDispatcher(DispatcherService):
     candidates by *learned* contended bandwidth.  With an empty ledger both
     wrappers are an exact no-op, so single-shot ``dispatch`` behaviour (and
     the Sec. 5.3 harness) is unchanged.
+
+    ``frag_weight > 0`` additionally applies the fragmentation tie-break
+    (:func:`repro.core.defrag.make_frag_penalty`) to every search this
+    dispatcher runs — near-equal candidates prefer topping up partially
+    busy hosts over cracking open clean ones, keeping large blocks intact
+    for future arrivals.  The default 0.0 is bit-identical to the previous
+    behaviour.
     """
 
     def __init__(
@@ -151,6 +158,7 @@ class BandPilotDispatcher(DispatcherService):
         contention_aware: bool = True,
         contention_mode: str = "analytic",
         contended_predictor=None,
+        frag_weight: float = 0.0,
     ):
         super().__init__(cluster)
         self.tables = tables
@@ -158,6 +166,7 @@ class BandPilotDispatcher(DispatcherService):
         self.contention_aware = contention_aware
         self.contention_mode = contention_mode
         self.contended_predictor = contended_predictor
+        self.frag_weight = frag_weight
         if contention_aware:
             self.predictor = ContentionAwarePredictor(
                 cluster, predictor, self.ledger,
@@ -169,8 +178,16 @@ class BandPilotDispatcher(DispatcherService):
         self.last_result: Optional[search.HybridResult] = None
 
     def dispatch(self, avail: Sequence[int], k: int, rng=None) -> Subset:
+        penalty = None
+        if self.frag_weight > 0:
+            from repro.core.defrag import make_frag_penalty
+
+            penalty = make_frag_penalty(
+                self.cluster, self.ledger, self.frag_weight
+            )
         res = search.hybrid_search(
-            self.cluster, self.tables, self.predictor, avail, k
+            self.cluster, self.tables, self.predictor, avail, k,
+            frag_penalty=penalty,
         )
         self.last_result = res
         return res.subset

@@ -31,6 +31,12 @@ re-places the one whose contention-degraded bandwidth would improve the
 most, charged with a migration-cost term (``migration_cost``, shared with
 :mod:`repro.ft.elastic`), and only if no other live job's degraded
 bandwidth drops.  A declined move restores the exact prior placement.
+The trial-move machinery (gain rule, no-harm check, exact ledger restore)
+lives in :mod:`repro.core.defrag` and is shared with the **defragmentation
+triggers** (``defrag=True``): a rate-limited background consolidation pass
+at release time plus an on-demand make-room pass when an admission would
+otherwise be forced into a cross-host rail-contended placement that a
+cheap consolidation could avoid (see ``docs/defrag.md``).
 
 ``repro.core.dispatcher.replay_trace`` is now a thin wrapper over this
 module with the ``fifo`` policy.
@@ -45,9 +51,13 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core import baselines, search
+from repro.core import baselines, defrag as defrag_mod, search
 from repro.core.bandwidth_sim import BandwidthSimulator
 from repro.core.cluster import Cluster
+from repro.core.defrag import (  # shared migration economics (moved there)
+    DefragConfig,
+    migration_cost,
+)
 from repro.core.intra_host import IntraHostTables
 from repro.core.tenancy import Allocation, JobLedger
 
@@ -91,6 +101,9 @@ class TenantRecord:
     overtakes: int = 0     # waiting jobs this admission jumped ahead of
     batch_size: int = 1    # jobs co-admitted in the same joint flush
     migrations: int = 0    # times this job was re-placed while live
+    # -- fragmentation state right after this admission (defrag metrics) ----
+    stranding: float = 0.0  # fraction of free GPUs on partially-busy hosts
+    clean_hosts: int = 0    # fully-free hosts left after this admission
 
 
 def poisson_trace(
@@ -151,31 +164,23 @@ def summarize_trace(
             "mean_batch_size": float(np.mean([r.batch_size for r in rs])),
             "total_overtakes": int(sum(r.overtakes for r in rs)),
             "total_migrations": int(sum(r.migrations for r in rs)),
+            # fragmentation state faced across the trace (defrag metrics)
+            "mean_stranding": float(np.mean([r.stranding for r in rs])),
+            "mean_clean_hosts": float(np.mean([r.clean_hosts for r in rs])),
             "n": len(rs),
         }
     return out
 
 
 # ---------------------------------------------------------------------------
-# Migration cost (shared with repro.ft.elastic)
+# Migration events.  migration_cost itself now lives in repro.core.defrag
+# (one home for the migration economics shared by re-dispatch, the defrag
+# planner, and repro.ft.elastic) and is re-exported above.
 # ---------------------------------------------------------------------------
-
-def migration_cost(
-    old_gpus: Sequence[int], new_gpus: Sequence[int], cost_per_gpu: float
-) -> float:
-    """Bandwidth-equivalent charge for moving a live job.
-
-    Each GPU the job vacates means checkpoint/restore traffic and a stall
-    for the whole collective, so the charge is proportional to how much of
-    the placement actually moves: ``cost_per_gpu * |old \\ new|``.  A
-    re-placement equal to the current one is free (and a no-op).
-    """
-    return cost_per_gpu * len(set(old_gpus) - set(new_gpus))
-
 
 @dataclasses.dataclass
 class MigrationEvent:
-    """One committed elastic re-dispatch, for inspection/benchmarks."""
+    """One committed live-job move, for inspection/benchmarks."""
 
     t: float
     job_id: str
@@ -184,6 +189,7 @@ class MigrationEvent:
     old_bw: float    # contention-degraded, before the move
     new_bw: float    # contention-degraded, after the move
     cost: float      # migration_cost charged against the gain
+    kind: str = "redispatch"  # or "defrag" / "make-room" (trigger passes)
 
 
 # ---------------------------------------------------------------------------
@@ -197,6 +203,8 @@ class SchedulerConfig:
     aging_limit: int = 4             # backfill: overtakes before a job fences
     redispatch: bool = False         # elastic re-dispatch on release
     migration_cost_per_gpu: float = 2.0  # GB/s of degraded-bw gain per moved GPU
+    defrag: bool = False             # background + make-room consolidation
+    defrag_config: Optional[DefragConfig] = None  # knobs; defaults when None
 
     def __post_init__(self):
         if self.policy not in POLICIES:
@@ -207,6 +215,14 @@ class SchedulerConfig:
             raise ValueError("batch_window must be >= 0")
         if self.aging_limit < 1:
             raise ValueError("aging_limit must be >= 1")
+        if self.defrag:
+            # within one scheduler there is ONE migration price: redispatch
+            # and defrag moves must never charge different costs per GPU
+            # (replace, not mutate: the caller's DefragConfig may be shared)
+            self.defrag_config = dataclasses.replace(
+                self.defrag_config or DefragConfig(),
+                migration_cost_per_gpu=self.migration_cost_per_gpu,
+            )
 
 
 @dataclasses.dataclass
@@ -249,6 +265,8 @@ class AdmissionScheduler:
         self.harvester = harvester
         self.records: List[TenantRecord] = []
         self.migrations: List[MigrationEvent] = []
+        self._defrag_spent = 0                 # moves charged to the budget
+        self._last_defrag = float("-inf")      # last background pass time
         self._rec_by_job: Dict[str, TenantRecord] = {}
         self._departures: List[Tuple[float, int, str]] = []  # (end, seq, id)
         self._waiting: deque = deque()  # _QueueEntry, arrival order
@@ -304,6 +322,8 @@ class AdmissionScheduler:
             self._drain(t_end)
             if self.config.redispatch:
                 self._maybe_redispatch(t_end)
+            if self.config.defrag:
+                self._maybe_background_defrag(t_end)
 
     def _on_arrival(self, job: TraceJob) -> None:
         ledger = self.dispatcher.ledger
@@ -463,6 +483,13 @@ class AdmissionScheduler:
             and hasattr(self.dispatcher, "tables")
             and hasattr(self.dispatcher, "base_predictor")
         )
+        if joint_capable and self.config.defrag:
+            # make room for the batch's largest member BEFORE planning:
+            # defrag moves relocate live jobs into free GPUs, so they must
+            # never run between a joint plan and its commit.  The sequential
+            # fallback below triggers per-admission instead (in
+            # _admit_via_dispatcher), never both.
+            self._maybe_make_room(max(j.k for j in jobs), t)
         if not joint_capable:
             order = range(n)
             if self.config.batch_window > 0:
@@ -486,6 +513,7 @@ class AdmissionScheduler:
                 self.dispatcher, "contention_mode", "analytic"
             ),
             contended=getattr(self.dispatcher, "contended_predictor", None),
+            frag_weight=getattr(self.dispatcher, "frag_weight", 0.0),
         )
         by_id = {j.job_id: (j, ov) for j, ov in zip(jobs, overtakes)}
         for p in plan.placements:
@@ -495,6 +523,8 @@ class AdmissionScheduler:
     def _admit_via_dispatcher(
         self, job: TraceJob, t: float, overtakes: int = 0, batch_size: int = 1
     ) -> None:
+        if self.config.defrag:
+            self._maybe_make_room(job.k, t)
         ledger = self.dispatcher.ledger
         _, opt_bw = baselines.oracle_dispatch(
             self.cluster, self.sim, self.tables, ledger.available(), job.k,
@@ -538,11 +568,13 @@ class AdmissionScheduler:
             1 for hid in alloc.host_ids
             if ledger.rail_contenders(hid, against=alloc.gpus) > 0
         ) if alloc.cross_host else 0
+        frag = ledger.fragmentation()
         rec = TenantRecord(
             self.dispatcher.name, job.job_id, job.k, t, t - job.arrival,
             bw / opt_bw, bw, iso, opt_bw, n_live, shared,
             policy=self.config.policy, overtakes=overtakes,
             batch_size=batch_size,
+            stranding=frag.stranding, clean_hosts=frag.clean_hosts,
         )
         self.records.append(rec)
         self._rec_by_job[job.job_id] = rec
@@ -559,71 +591,107 @@ class AdmissionScheduler:
         other live job's degraded bandwidth drops."""
         ledger = self.dispatcher.ledger
         candidates = [a for a in ledger.jobs() if a.cross_host]
-        best: Optional[Tuple[float, Allocation, Subset, float, float]] = None
+        best: Optional[defrag_mod.MoveEval] = None
         for alloc in list(candidates):
-            trial = self._trial_move(alloc)
-            if trial is None:
+            ev = self._trial_move(alloc)
+            if ev is None:
                 continue
-            gain, subset, old_bw, new_bw = trial
-            if best is None or gain > best[0]:
-                best = (gain, alloc, subset, old_bw, new_bw)
+            if best is None or ev.self_gain > best.self_gain:
+                best = ev
         if best is None:
             return
-        gain, alloc, subset, old_bw, new_bw = best
-        ledger.release(alloc.job_id)
-        ledger.admit(alloc.job_id, subset)
-        cost = migration_cost(
-            alloc.gpus, subset, self.config.migration_cost_per_gpu
-        )
+        ledger.release(best.job_id)
+        ledger.admit(best.job_id, best.new_gpus)
         self.migrations.append(MigrationEvent(
-            t, alloc.job_id, alloc.gpus, tuple(sorted(subset)),
-            old_bw, new_bw, cost,
+            t, best.job_id, best.old_gpus, best.new_gpus,
+            best.old_bw, best.new_bw, best.cost,
         ))
-        rec = self._rec_by_job.get(alloc.job_id)
+        rec = self._rec_by_job.get(best.job_id)
         if rec is not None:
             rec.migrations += 1
 
     def _trial_move(
         self, alloc: Allocation
-    ) -> Optional[Tuple[float, Subset, float, float]]:
-        """Evaluate re-placing one live job; restores the ledger exactly.
+    ) -> Optional["defrag_mod.MoveEval"]:
+        """Evaluate re-placing one live job via the shared trial-move
+        helper (:func:`repro.core.defrag.evaluate_move` — gain rule,
+        no-harm check, exact ledger restore); the re-dispatch hook's
+        objective is the moved job's own net gain.
 
-        Returns (net gain, new subset, old degraded bw, new degraded bw) or
-        None when the move does not pay or would hurt a co-tenant."""
+        Returns the :class:`~repro.core.defrag.MoveEval` or None when the
+        move does not pay or would hurt a co-tenant."""
+        return defrag_mod.evaluate_move(
+            self.sim, self.dispatcher.ledger, alloc,
+            lambda led, avail, k: self.dispatcher.dispatch(
+                avail, k, rng=self.rng
+            ),
+            self.config.migration_cost_per_gpu,
+            min_self_gain=1e-9,  # cheap reject before co-tenant grading
+        )
+
+    # -- defragmentation triggers --------------------------------------------
+
+    def _defrag_proposer(self) -> defrag_mod.ProposalFan:
+        """How the planner re-places movers: best-fit consolidation slots
+        (with the dispatcher's own contention-aware hybrid machinery as the
+        fallback) when available, else the dispatcher's plain ``dispatch``."""
+        d = self.dispatcher
+        cfg = self.config.defrag_config
+        if hasattr(d, "tables") and hasattr(d, "base_predictor"):
+            return defrag_mod.consolidation_proposer(
+                self.cluster, d.tables, d.base_predictor,
+                contention_aware=getattr(d, "contention_aware", True),
+                contention_mode=getattr(d, "contention_mode", "analytic"),
+                contended=getattr(d, "contended_predictor", None),
+                frag_weight=cfg.frag_weight,
+            )
+        return lambda led, avail, k: [d.dispatch(avail, k, rng=self.rng)]
+
+    def _run_defrag_pass(
+        self, t: float, kind: str, target_k: Optional[int] = None
+    ) -> None:
+        cfg = self.config.defrag_config
+        remaining = cfg.max_total_moves - self._defrag_spent
+        if remaining <= 0:
+            return  # trace-level migration budget exhausted
         ledger = self.dispatcher.ledger
-        old_bw = self.sim.true_bandwidth(alloc.gpus, ledger=ledger)
-        others = {
-            a.job_id: self.sim.true_bandwidth(a.gpus, ledger=ledger)
-            for a in ledger.jobs() if a.job_id != alloc.job_id
-        }
-        ledger.release(alloc.job_id)
-        try:
-            subset = self.dispatcher.dispatch(
-                ledger.available(), alloc.k, rng=self.rng
-            )
-            if tuple(sorted(subset)) == alloc.gpus:
-                return None
-            new_bw = self.sim.true_bandwidth(subset, ledger=ledger)
-            gain = new_bw - old_bw - migration_cost(
-                alloc.gpus, subset, self.config.migration_cost_per_gpu
-            )
-            if gain <= 1e-9:
-                return None
-            # no-harm check: co-tenants' degraded bandwidth must not drop
-            ledger.admit(alloc.job_id, subset)
-            try:
-                for a in ledger.jobs():
-                    if a.job_id == alloc.job_id:
-                        continue
-                    after = self.sim.true_bandwidth(a.gpus, ledger=ledger)
-                    if after < others[a.job_id] - 1e-9:
-                        return None
-            finally:
-                ledger.release(alloc.job_id)
-            return gain, subset, old_bw, new_bw
-        finally:
-            if alloc.job_id not in ledger:
-                ledger.admit(alloc.job_id, alloc.gpus)
+        plan = defrag_mod.plan_defrag(
+            self.cluster, self.sim, ledger, cfg, self._defrag_proposer(),
+            target_k=target_k,
+            budget=min(cfg.max_moves_per_pass, remaining),
+        )
+        defrag_mod.apply_plan(ledger, plan)
+        for mv in plan.moves:
+            self.migrations.append(MigrationEvent(
+                t, mv.job_id, mv.old_gpus, mv.new_gpus,
+                mv.old_bw, mv.new_bw, mv.cost, kind=kind,
+            ))
+            rec = self._rec_by_job.get(mv.job_id)
+            if rec is not None:
+                rec.migrations += 1
+            self._defrag_spent += 1
+
+    def _maybe_background_defrag(self, t: float) -> None:
+        """Rate-limited consolidation pass at release time (the event-driven
+        equivalent of an idle/periodic background sweep)."""
+        cfg = self.config.defrag_config
+        if t - self._last_defrag < cfg.interval:
+            return
+        self._last_defrag = t
+        self._run_defrag_pass(t, kind="defrag")
+
+    def _maybe_make_room(self, k: int, t: float) -> None:
+        """On-demand pass: consolidate just enough to open a k-GPU clean
+        block when the admission would otherwise be forced cross-host into
+        contended rails (see :func:`repro.core.defrag.forced_rail_contended`)."""
+        cfg = self.config.defrag_config
+        if not cfg.make_room:
+            return
+        if defrag_mod.forced_rail_contended(
+            self.cluster, self.dispatcher.ledger, k,
+            quality_only=cfg.make_room_quality,
+        ):
+            self._run_defrag_pass(t, kind="make-room", target_k=k)
 
 
 # ---------------------------------------------------------------------------

@@ -4,6 +4,16 @@ Both components consume a *predictor* object exposing
 ``predict(list_of_subsets) -> np.ndarray`` (the hierarchical surrogate, or
 ground truth for the Ideal-BP upper bound) and return a (subset, predicted_bw)
 pair.  ``hybrid_search`` runs both and keeps the argmax (Sec. 4.3.1).
+
+Every search entry point accepts an optional ``frag_penalty(subset) ->
+relative discount`` tie-break (built by :func:`repro.core.defrag.
+make_frag_penalty`): candidate *selection* maximizes ``predicted_bw * (1 -
+frag_penalty(S))``, steering otherwise-equal candidates away from breaking
+up clean hosts, while the *reported* predicted bandwidth stays the raw
+(undiscounted) estimate.  A relative discount is scale-free — the same
+weight is a tie-break on a 500 GB/s H100 fabric and a 20 GB/s legacy one.
+``frag_penalty=None`` (the default) is bit-identical to the historical
+behaviour.
 """
 
 from __future__ import annotations
@@ -11,7 +21,7 @@ from __future__ import annotations
 import dataclasses
 import itertools
 import time
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -20,6 +30,14 @@ from repro.core.intra_host import IntraHostTables
 from repro.core.tenancy import JobLedger
 
 Subset = List[int]
+FragPenalty = Optional[Callable[[Sequence[int]], float]]
+
+
+def _penalized(preds: np.ndarray, candidates, frag_penalty: FragPenalty):
+    """Selection scores: predictions discounted by the relative tie-break."""
+    if frag_penalty is None:
+        return preds
+    return preds * (1.0 - np.asarray([frag_penalty(c) for c in candidates]))
 
 
 @dataclasses.dataclass
@@ -45,17 +63,25 @@ def best_single_host(
     tables: IntraHostTables,
     avail_by_host: Dict[int, List[int]],
     k: int,
+    frag_penalty: FragPenalty = None,
 ) -> Optional[Tuple[float, int, Subset]]:
     """Best k-GPU allocation on any single host with >=k available GPUs,
-    using exact Stage-1 lookups.  Returns (bw, host_id, global_subset)."""
+    using exact Stage-1 lookups.  Returns (bw, host_id, global_subset) with
+    the raw bw; with ``frag_penalty`` the *choice* among hosts maximizes
+    the penalized score (prefer topping up a dirty host over cracking open
+    a clean one)."""
     best = None
+    best_score = None
     for hid, gpus in avail_by_host.items():
         if len(gpus) < k:
             continue
         locals_ = [cluster.gpu_local[g] for g in gpus]
         bw, sub = tables.best_subset(hid, k, locals_)
-        if best is None or bw > best[0]:
-            best = (bw, hid, tables.to_globals(hid, sub))
+        subset = tables.to_globals(hid, sub)
+        score = bw * (1.0 - frag_penalty(subset)) if frag_penalty else bw
+        if best_score is None or score > best_score:
+            best = (bw, hid, subset)
+            best_score = score
     return best
 
 
@@ -111,6 +137,7 @@ def eha_search(
     avail: Sequence[int],
     k: int,
     max_host_combos: int = 64,
+    frag_penalty: FragPenalty = None,
 ) -> SearchResult:
     """Algorithm 1.  Fast constructive search around the equilibrium insight."""
     t0 = time.time()
@@ -118,12 +145,19 @@ def eha_search(
     n_cands = 0
 
     # Phase 1: single-host prioritization (exact via Stage-1 tables).
-    single = best_single_host(cluster, tables, by_host, k)
-    if single is not None:
+    # With a frag_penalty the shortcut is NOT taken blindly: consolidation
+    # deliberately opens clean single-host blocks, and on heterogeneous
+    # clusters a freed point-to-point host's full-host ring can be far
+    # slower than a balanced cross-host placement — so the single-host
+    # winner is scored against the phase-2 candidates below instead.
+    single = best_single_host(cluster, tables, by_host, k, frag_penalty)
+    if single is not None and frag_penalty is None:
         bw, _, subset = single
         return SearchResult(subset, bw, time.time() - t0, 1)
 
-    # Phase 2: balanced multi-host construction over the minimum host count.
+    # Phase 2: balanced multi-host construction over the minimum host count
+    # (plus one more host when the single-host shortcut is being
+    # re-examined, so genuine multi-host alternatives exist to compare).
     hosts = sorted(by_host.items(), key=lambda kv: -len(kv[1]))
     sizes = [len(g) for _, g in hosts]
     m = 0
@@ -139,31 +173,37 @@ def eha_search(
     # Host combinations of size m with enough capacity (largest-first bias).
     candidates: List[Subset] = []
     host_ids = [hid for hid, _ in hosts]
-    combos = 0
-    for combo in itertools.combinations(range(len(host_ids)), m):
-        caps = [sizes[i] for i in combo]
-        if sum(caps) < k:
-            continue
-        combos += 1
-        if combos > max_host_combos:
-            break
-        chosen_hids = [host_ids[i] for i in combo]
-        for counts in balanced_count_assignments(caps, k):
-            subset: Subset = []
-            for hid, n_h in zip(chosen_hids, counts):
-                if n_h == 0:
-                    continue
-                locals_ = [cluster.gpu_local[g] for g in by_host[hid]]
-                _, sub = tables.best_subset(hid, n_h, locals_)
-                subset.extend(tables.to_globals(hid, sub))
-            candidates.append(sorted(subset))
+    m_sizes = [m]
+    if single is not None and m + 1 <= len(host_ids):
+        m_sizes.append(m + 1)
+    for m_cur in m_sizes:
+        combos = 0
+        for combo in itertools.combinations(range(len(host_ids)), m_cur):
+            caps = [sizes[i] for i in combo]
+            if sum(caps) < k:
+                continue
+            combos += 1
+            if combos > max_host_combos:
+                break
+            chosen_hids = [host_ids[i] for i in combo]
+            for counts in balanced_count_assignments(caps, k):
+                subset: Subset = []
+                for hid, n_h in zip(chosen_hids, counts):
+                    if n_h == 0:
+                        continue
+                    locals_ = [cluster.gpu_local[g] for g in by_host[hid]]
+                    _, sub = tables.best_subset(hid, n_h, locals_)
+                    subset.extend(tables.to_globals(hid, sub))
+                candidates.append(sorted(subset))
+    if single is not None:
+        candidates.append(sorted(single[2]))
 
     if not candidates:  # degenerate fallback: greedy fill
         pool = [g for _, gs in hosts for g in gs]
         candidates = [sorted(pool[:k])]
     preds = predictor.predict(candidates)
     n_cands = len(candidates)
-    best_idx = int(np.argmax(preds))
+    best_idx = int(np.argmax(_penalized(preds, candidates, frag_penalty)))
     return SearchResult(
         candidates[best_idx], float(preds[best_idx]), time.time() - t0, n_cands
     )
@@ -179,6 +219,7 @@ def pts_search(
     predictor,
     avail: Sequence[int],
     k: int,
+    frag_penalty: FragPenalty = None,
 ) -> SearchResult:
     """Algorithm 2.  Top-down iterative elimination of the bottleneck GPU."""
     t0 = time.time()
@@ -186,9 +227,13 @@ def pts_search(
     s_curr: Subset = sorted(avail)
     n_cands = 0
 
-    # Search pruning: node-insertion heuristic for small requests.
+    # Search pruning: node-insertion heuristic for small requests.  With a
+    # frag_penalty the *host choice* is penalty-aware, but the prune itself
+    # stays (full-pool elimination would cost O(|avail|^2) predictor calls
+    # per dispatch); the single-vs-multi-host comparison that frag mode
+    # needs happens in EHA's phase 2, which hybrid_search always runs.
     if k <= 8:
-        single = best_single_host(cluster, tables, by_host, k)
+        single = best_single_host(cluster, tables, by_host, k, frag_penalty)
         if single is not None:
             _, hid, _ = single
             s_curr = sorted(by_host[hid])
@@ -198,7 +243,7 @@ def pts_search(
         children = [s_curr[:i] + s_curr[i + 1:] for i in range(len(s_curr))]
         preds = predictor.predict(children)
         n_cands += len(children)
-        s_curr = children[int(np.argmax(preds))]
+        s_curr = children[int(np.argmax(_penalized(preds, children, frag_penalty)))]
 
     final_bw = float(predictor.predict([s_curr])[0])
     return SearchResult(s_curr, final_bw, time.time() - t0, n_cands + 1)
@@ -227,10 +272,17 @@ def hybrid_search(
     predictor,
     avail: Sequence[int],
     k: int,
+    frag_penalty: FragPenalty = None,
 ) -> HybridResult:
-    eha = eha_search(cluster, tables, predictor, avail, k)
-    pts = pts_search(cluster, tables, predictor, avail, k)
-    if eha.predicted_bw >= pts.predicted_bw:
+    eha = eha_search(cluster, tables, predictor, avail, k,
+                     frag_penalty=frag_penalty)
+    pts = pts_search(cluster, tables, predictor, avail, k,
+                     frag_penalty=frag_penalty)
+    eha_score, pts_score = eha.predicted_bw, pts.predicted_bw
+    if frag_penalty is not None:
+        eha_score *= 1.0 - frag_penalty(eha.subset)
+        pts_score *= 1.0 - frag_penalty(pts.subset)
+    if eha_score >= pts_score:
         return HybridResult(eha.subset, eha.predicted_bw, eha, pts, "EHA")
     return HybridResult(pts.subset, pts.predicted_bw, eha, pts, "PTS")
 
@@ -280,6 +332,7 @@ def joint_hybrid_search(
     contention_aware: bool = True,
     contention_mode: str = "analytic",
     contended=None,
+    frag_weight: float = 0.0,
 ) -> JointResult:
     """Place a batch of ``(job_id, k)`` requests *jointly* against a ledger.
 
@@ -300,8 +353,13 @@ def joint_hybrid_search(
     ``contention_mode``/``contended`` select the analytic fair-share cap or
     the learned ContendedSurrogate for the degradation estimates, exactly as
     in :class:`~repro.core.contention.ContentionAwarePredictor`.
+    ``frag_weight > 0`` applies the fragmentation tie-break
+    (:func:`repro.core.defrag.make_frag_penalty`) against the *scratch*
+    ledger, so later batch-mates are steered away from cracking open hosts
+    their earlier mates left clean.
     """
     from repro.core.contention import ContentionAwarePredictor
+    from repro.core.defrag import make_frag_penalty
 
     if not requests:
         raise ValueError("joint_hybrid_search needs >=1 request")
@@ -331,6 +389,12 @@ def joint_hybrid_search(
             )
             if contention_aware else predictor
         )
+        # the penalty reads the scratch live, so it stays current as each
+        # batch-mate admits below
+        penalty = (
+            make_frag_penalty(cluster, scratch, frag_weight)
+            if frag_weight > 0 else None
+        )
         placements: List[JointPlacement] = []
         for job_id, k in seq:
             avail = scratch.available()
@@ -339,7 +403,8 @@ def joint_hybrid_search(
                     f"joint batch does not fit: {job_id!r} needs k={k}, "
                     f"{len(avail)} GPUs free"
                 )
-            res = hybrid_search(cluster, tables, pred, avail, k)
+            res = hybrid_search(cluster, tables, pred, avail, k,
+                                frag_penalty=penalty)
             scratch.admit(job_id, res.subset)
             placements.append(
                 JointPlacement(job_id, k, res.subset, res.predicted_bw)

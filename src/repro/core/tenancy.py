@@ -53,10 +53,16 @@ class ContentionSnapshot:
     (anything drawn from ``available()``): the disjointness check is
     pre-resolved, which is what makes hot loops — the exact Oracle's count-
     vector enumeration — skip the per-candidate set work.
+
+    ``frag`` carries the ledger's fragmentation state at snapshot time (a
+    :class:`repro.core.defrag.FragmentationMetrics`), so consumers grading
+    or planning against the frozen view see the same stranding / clean-host
+    picture the defrag subsystem acts on.
     """
 
     counts: Dict[int, int]
     demands: Dict[int, Tuple[int, ...]] = dataclasses.field(default_factory=dict)
+    frag: Optional[object] = None  # defrag.FragmentationMetrics (lazy import)
 
     def rail_contenders(self, host_id: int, against: Sequence[int] = ()) -> int:
         return self.counts.get(host_id, 0)
@@ -153,6 +159,21 @@ class JobLedger:
         host = self.cluster.hosts[host_id]
         return sum(1 for g in host.gpu_ids if g in self._owner)
 
+    def free_by_host(self) -> Dict[int, int]:
+        """host id -> free GPU count, for every host (zeros included)."""
+        return {
+            h.host_id: h.n_gpus - self.occupancy(h.host_id)
+            for h in self.cluster.hosts
+        }
+
+    def fragmentation(self):
+        """Fragmentation state of the current occupancy — stranding score,
+        clean-host count, largest placeable single-host block (a
+        :class:`repro.core.defrag.FragmentationMetrics`)."""
+        from repro.core.defrag import fragmentation_metrics
+
+        return fragmentation_metrics(self.cluster, self)
+
     @staticmethod
     def contends(alloc: Allocation, against: Set[int]) -> bool:
         """THE rail-contention predicate (see module docstring): a live job
@@ -218,6 +239,7 @@ class JobLedger:
                 )
                 for hid, jobs in cross.items()
             },
+            frag=self.fragmentation(),
         )
 
     def describe(self) -> str:

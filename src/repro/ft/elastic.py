@@ -27,8 +27,8 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.cluster import Cluster
+from repro.core.defrag import net_migration_gain
 from repro.core.dispatcher import BandPilotDispatcher
-from repro.core.scheduler import migration_cost
 
 
 @dataclasses.dataclass
@@ -76,9 +76,9 @@ class ElasticCoordinator:
 
     ``migration_cost_per_gpu`` prices voluntary moves: failure handling is
     mandatory (the old placement is gone), but :meth:`consider_rebalance`
-    only migrates when the predicted gain beats the same migration-cost
-    charge the admission scheduler's release hook uses
-    (:func:`repro.core.scheduler.migration_cost`).
+    only migrates when the predicted gain beats the migration-cost charge —
+    the same :func:`repro.core.defrag.net_migration_gain` rule the admission
+    scheduler's release hook and the defrag planner apply.
     """
 
     def __init__(
@@ -136,8 +136,10 @@ class ElasticCoordinator:
         )
         sub = self.dispatcher.dispatch(avail, len(self.current))
         new_bw = self.dispatcher.last_result.predicted_bw
-        cost = migration_cost(self.current, sub, self.migration_cost_per_gpu)
-        if sorted(sub) == sorted(self.current) or new_bw - cur_bw <= cost:
+        gain = net_migration_gain(
+            self.current, sub, cur_bw, new_bw, self.migration_cost_per_gpu
+        )
+        if sorted(sub) == sorted(self.current) or gain <= 0:
             return None
         self.current = sub
         return ElasticDecision(sub, new_bw, "rebalance")

@@ -1,0 +1,589 @@
+"""Defragmentation subsystem (ISSUE 4): metrics, planner invariants, triggers.
+
+Covers the ISSUE 4 satellites:
+  * property-based plan invariants (hypothesis + seeded fallback, matching
+    ``tests/test_tenancy_properties.py``) — plans conserve occupancy, never
+    violate the per-tenant no-harm check, and are idempotent on an
+    already-defragmented ledger;
+  * the shared migration economics (``migration_cost`` re-export,
+    ``net_migration_gain``, ``evaluate_placement`` exact-restore);
+  * golden equivalence — ``defrag=off`` scheduler runs are bit-identical
+    to the plain fifo path (and hence to the PR-1 golden records already
+    pinned in ``tests/test_scheduler.py``);
+  * triggers — budget bound, MigrationEvent kinds, drained ledger;
+  * the fragmentation-aware placement tie-break and the small-k
+    oversampling knob (``sample_allocations(small_k_weight=...)``).
+"""
+
+import numpy as np
+import pytest
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # property tests skip, module still collects
+    from _hypothesis_fallback import given, settings, st
+
+import repro.core as core
+from repro.core import defrag
+from repro.core.scheduler import AdmissionScheduler, SchedulerConfig
+from repro.core.tenancy import JobLedger
+
+
+@pytest.fixture(scope="module")
+def h100():
+    cl = core.h100_cluster()
+    sim = core.BandwidthSimulator(cl)
+    tables = core.IntraHostTables(cl, sim)
+    return cl, sim, tables
+
+
+@pytest.fixture(scope="module")
+def mix():
+    cl = core.het_4mix_cluster()
+    sim = core.BandwidthSimulator(cl)
+    tables = core.IntraHostTables(cl, sim)
+    return cl, sim, tables
+
+
+def _bp(cl, tables, sim, **kw):
+    return core.BandPilotDispatcher(
+        cl, tables, core.GroundTruthPredictor(sim), **kw
+    )
+
+
+# ---------------------------------------------------------------------------
+# Layer 1: fragmentation metrics
+# ---------------------------------------------------------------------------
+
+def test_metrics_on_empty_and_fragmented_ledger(h100):
+    cl, _, _ = h100
+    ledger = core.JobLedger(cl)
+    frag = ledger.fragmentation()
+    assert frag.total_free == cl.n_gpus
+    assert frag.clean_hosts == cl.n_hosts
+    assert frag.fragmented_hosts == 0
+    assert frag.largest_free_block == 8
+    assert frag.largest_quality_block == 8  # H100 hosts are switch-fabric
+    assert frag.premium_free == cl.n_gpus
+    assert frag.stranding == 0.0
+    # dirty every host a little: all free GPUs become stranded
+    for i, h in enumerate(cl.hosts):
+        ledger.admit(f"j{i}", [h.gpu_ids[0], h.gpu_ids[1]])
+    frag = ledger.fragmentation()
+    assert frag.clean_hosts == 0
+    assert frag.fragmented_hosts == cl.n_hosts
+    assert frag.largest_free_block == 6
+    assert frag.stranding == 1.0
+    # a fully-busy host is neither clean nor fragmented
+    ledger.release("j0")
+    ledger.admit("full", list(cl.hosts[0].gpu_ids))
+    frag = ledger.fragmentation()
+    assert frag.clean_hosts == 0
+    assert frag.fragmented_hosts == cl.n_hosts - 1
+    assert frag.stranding == 1.0
+
+
+def test_metrics_quality_block_on_heterogeneous(mix):
+    cl, _, _ = mix
+    ledger = core.JobLedger(cl)
+    frag = ledger.fragmentation()
+    # Het-4Mix: only the A800 host is switch-fabric
+    assert frag.largest_quality_block == 8
+    assert frag.premium_free == 8
+    a800 = next(h for h in cl.hosts if h.host_type.nvswitch)
+    ledger.admit("a", list(a800.gpu_ids[:6]))
+    frag = ledger.fragmentation()
+    assert frag.largest_quality_block == 2
+    assert frag.premium_free == 2
+    assert frag.largest_free_block == 8  # point-to-point hosts still clean
+
+
+def test_snapshot_carries_fragmentation(h100):
+    cl, _, _ = h100
+    ledger = core.JobLedger(cl)
+    ledger.admit("a", [0, 1, 8, 9])
+    snap = ledger.snapshot()
+    assert snap.frag == ledger.fragmentation()
+    assert sum(ledger.free_by_host().values()) == ledger.n_free()
+
+
+def test_tenant_bandwidths_grades_every_live_job(h100):
+    """The predictor-side per-tenant view: each live job's own entry
+    self-excludes, so with the ground-truth predictor the estimates equal
+    the contended ground truth exactly."""
+    cl, sim, _ = h100
+    ledger = core.JobLedger(cl)
+    ledger.admit("solo", [0, 1, 2, 3])
+    ledger.admit("crossy", [4, 12, 24, 25])
+    aware = core.ContentionAwarePredictor(
+        cl, core.GroundTruthPredictor(sim), ledger
+    )
+    out = aware.tenant_bandwidths()
+    assert set(out) == {"solo", "crossy"}
+    for job_id, bw in out.items():
+        alloc = ledger.allocation(job_id)
+        assert bw == pytest.approx(
+            sim.true_bandwidth(alloc.gpus, ledger=ledger)
+        )
+
+
+def test_forced_rail_contended(h100):
+    cl, _, _ = h100
+    ledger = core.JobLedger(cl)
+    # empty cluster: a clean block always fits k <= 8
+    assert not core.forced_rail_contended(cl, ledger, 8)
+    # k larger than any host: cross-host is inherent, never "forced"
+    assert not core.forced_rail_contended(cl, ledger, 9)
+    # fragment every host AND add rail traffic
+    ledger.admit("a", [0, 1])
+    ledger.admit("b", [8, 9])
+    ledger.admit("c", [16, 17])
+    ledger.admit("x", [4, 12, 24, 25])  # cross-host tenant on 3 rails
+    assert core.forced_rail_contended(cl, ledger, 8)
+    # not admittable at all -> queueing problem, not fragmentation
+    assert not core.forced_rail_contended(cl, ledger, 30)
+
+
+def test_room_makeable_quality_gate():
+    h100 = core.h100_cluster()
+    assert core.room_makeable(h100, 8)
+    assert not core.room_makeable(h100, 9)
+    het_va = core.het_va_cluster()  # no switch-fabric hosts at all
+    assert not core.room_makeable(het_va, 4, quality_only=True)
+    assert core.room_makeable(het_va, 4, quality_only=False)
+
+
+# ---------------------------------------------------------------------------
+# Shared migration economics
+# ---------------------------------------------------------------------------
+
+def test_migration_cost_shared_single_definition():
+    from repro.core import scheduler
+    assert scheduler.migration_cost is defrag.migration_cost
+    assert core.migration_cost is defrag.migration_cost
+    assert defrag.net_migration_gain([0, 1], [2, 3], 10.0, 15.0, 2.0) == \
+        pytest.approx(15.0 - 10.0 - 4.0)
+    # identical placement: zero cost, zero gain
+    assert defrag.net_migration_gain([0, 1], [1, 0], 10.0, 10.0, 2.0) == 0.0
+
+
+def test_evaluate_placement_restores_ledger_exactly(h100):
+    cl, sim, _ = h100
+    ledger = core.JobLedger(cl)
+    alloc = ledger.admit("a", [0, 1, 8, 9])
+    ledger.admit("b", [16, 17])
+    before_owner = dict(ledger._owner)
+    # identical subset -> None, untouched
+    assert core.evaluate_placement(sim, ledger, alloc, [9, 8, 1, 0], 2.0) \
+        is None
+    ev = core.evaluate_placement(sim, ledger, alloc, [2, 3, 4, 5], 2.0)
+    assert ledger._owner == before_owner  # exact restore either way
+    assert ev is not None
+    assert ev.new_gpus == (2, 3, 4, 5)
+    assert ev.cost == pytest.approx(2.0 * 4)
+    assert ev.self_gain == pytest.approx(ev.new_bw - ev.old_bw - ev.cost)
+    # the moved job went cross-host -> single-host: a consolidating move
+    assert core.is_consolidating(cl, ev)
+
+
+def test_is_consolidating_rejects_premium_squat(h100):
+    cl, sim, _ = h100
+    ledger = core.JobLedger(cl)
+    ledger.admit("other", [2, 3])          # keeps host 0 dirty
+    alloc = ledger.admit("squat", [0, 1])  # single-host pair on host 0
+    # host 1 is clean: relocating the pair there frees nothing, dirties a
+    # clean host, keeps span at 1 -> NOT a defrag move
+    ev = core.evaluate_placement(
+        sim, ledger, alloc, [8, 9], 2.0, require_no_harm=False,
+    )
+    assert ev is not None
+    assert not core.is_consolidating(cl, ev)
+
+
+def test_evaluate_move_matches_redispatch_semantics(h100):
+    """The scheduler's release-time re-dispatch refactored onto the shared
+    helper: a move that pays must have the same gain the legacy inline code
+    computed (new - old - cost), and declined trials restore the ledger."""
+    cl, sim, tables = h100
+    disp = _bp(cl, tables, sim)
+    ledger = disp.ledger
+    ledger.admit("t1", [0, 1, 2, 3])
+    bad = ledger.admit("bad", [4, 12, 20, 28])  # 1+1+1+1: rail-bound
+    busy_before = set(ledger.busy())
+    ev = core.evaluate_move(
+        sim, ledger, bad,
+        lambda led, avail, k: disp.dispatch(avail, k),
+        cost_per_gpu=2.0,
+    )
+    assert set(ledger.busy()) == busy_before
+    assert ev is not None and ev.self_gain > 0
+    assert ev.self_gain == pytest.approx(
+        ev.new_bw - ev.old_bw
+        - core.migration_cost(ev.old_gpus, ev.new_gpus, 2.0)
+    )
+
+
+# ---------------------------------------------------------------------------
+# Planner properties (hypothesis + seeded fallback)
+# ---------------------------------------------------------------------------
+
+def _random_fragmented_ledger(cl, seeds):
+    """Deterministically admit small jobs from an integer stream."""
+    ledger = JobLedger(cl)
+    n = 0
+    for s in seeds:
+        avail = ledger.available()
+        k = 2 + s % 4
+        if k + 4 > len(avail):  # keep some headroom so moves exist
+            break
+        picks = sorted({avail[(s * 7 + i * 13) % len(avail)]
+                        for i in range(k)})
+        ledger.admit(f"p{n}", picks)
+        n += 1
+    return ledger
+
+
+def check_plan_invariants(cl, sim, tables, ledger, target_k=None):
+    cfg = core.DefragConfig(max_moves_per_pass=6, max_total_moves=6)
+    proposer = core.consolidation_proposer(
+        cl, tables, core.GroundTruthPredictor(sim),
+        frag_weight=cfg.frag_weight,
+    )
+    before_alloc = {a.job_id: a.gpus for a in ledger.jobs()}
+    before_bw = {
+        a.job_id: sim.true_bandwidth(a.gpus, ledger=ledger)
+        for a in ledger.jobs()
+    }
+    plan = core.plan_defrag(cl, sim, ledger, cfg, proposer, target_k=target_k)
+    # planning never touches the live ledger
+    assert {a.job_id: a.gpus for a in ledger.jobs()} == before_alloc
+    core.apply_plan(ledger, plan)
+    after = {a.job_id: a for a in ledger.jobs()}
+    # occupancy conserved: same jobs, same sizes, still disjoint (the
+    # ledger enforces disjointness on admit; sizes checked here)
+    assert set(after) == set(before_alloc)
+    for job_id, gpus in before_alloc.items():
+        assert after[job_id].k == len(gpus)
+    seen = set()
+    for a in after.values():
+        assert not (set(a.gpus) & seen)
+        seen |= set(a.gpus)
+    # per-tenant no-harm composes across the plan's moves
+    for job_id in before_bw:
+        now = sim.true_bandwidth(after[job_id].gpus, ledger=ledger)
+        assert now >= before_bw[job_id] - 1e-6, job_id
+    # every committed move was consolidating and cleared the bar
+    for mv in plan.moves:
+        assert core.is_consolidating(cl, mv)
+    # idempotence: the defragmented ledger plans no further moves
+    replan = core.plan_defrag(cl, sim, ledger, cfg, proposer,
+                              target_k=target_k)
+    assert replan.n_moves == 0, [m.job_id for m in replan.moves]
+    return plan
+
+
+@settings(max_examples=10, deadline=None)
+@given(seeds=st.lists(st.integers(0, 10_000), min_size=2, max_size=8))
+def test_plan_invariants_random_ledgers(seeds):
+    cl = core.h100_cluster()
+    sim = core.BandwidthSimulator(cl)
+    tables = core.IntraHostTables(cl, sim)
+    ledger = _random_fragmented_ledger(cl, seeds)
+    if len(ledger) == 0:
+        return
+    check_plan_invariants(cl, sim, tables, ledger)
+
+
+def test_plan_invariants_seeded(h100):
+    """Same property, driven by seeded randomness: runs even without
+    hypothesis installed."""
+    cl, sim, tables = h100
+    rng = np.random.default_rng(0)
+    for trial in range(6):
+        seeds = rng.integers(0, 10_000, size=int(rng.integers(2, 9)))
+        ledger = _random_fragmented_ledger(cl, seeds.tolist())
+        if len(ledger) == 0:
+            continue
+        check_plan_invariants(cl, sim, tables, ledger,
+                              target_k=8 if trial % 2 else None)
+
+
+def test_plan_invariants_seeded_heterogeneous(mix):
+    cl, sim, tables = mix
+    rng = np.random.default_rng(3)
+    for _ in range(4):
+        seeds = rng.integers(0, 10_000, size=int(rng.integers(2, 8)))
+        ledger = _random_fragmented_ledger(cl, seeds.tolist())
+        if len(ledger) == 0:
+            continue
+        check_plan_invariants(cl, sim, tables, ledger)
+
+
+def test_make_room_plan_opens_target_block(h100):
+    cl, sim, tables = h100
+    ledger = core.JobLedger(cl)
+    ledger.admit("a", [0, 1])
+    ledger.admit("b", [8, 9])
+    ledger.admit("c", [16, 17])
+    ledger.admit("x", [4, 12, 24, 25])
+    assert ledger.fragmentation().largest_free_block < 8
+    cfg = core.DefragConfig(max_moves_per_pass=4)
+    proposer = core.consolidation_proposer(
+        cl, tables, core.GroundTruthPredictor(sim),
+        frag_weight=cfg.frag_weight,
+    )
+    plan = core.plan_defrag(cl, sim, ledger, cfg, proposer, target_k=8)
+    assert plan.n_moves >= 1
+    assert plan.after.largest_free_block >= 8
+    core.apply_plan(ledger, plan)
+    assert ledger.fragmentation().largest_free_block >= 8
+
+
+def test_plan_respects_budget(h100):
+    cl, sim, tables = h100
+    ledger = core.JobLedger(cl)
+    ledger.admit("a", [0, 1])
+    ledger.admit("b", [8, 9])
+    ledger.admit("c", [16, 17])
+    ledger.admit("x", [4, 12, 24, 25])
+    cfg = core.DefragConfig(max_moves_per_pass=5)
+    proposer = core.consolidation_proposer(
+        cl, tables, core.GroundTruthPredictor(sim),
+    )
+    plan = core.plan_defrag(cl, sim, ledger, cfg, proposer, budget=1)
+    assert plan.n_moves <= 1
+
+
+def test_defrag_config_validation():
+    with pytest.raises(ValueError):
+        core.DefragConfig(max_moves_per_pass=0)
+    with pytest.raises(ValueError):
+        core.DefragConfig(max_total_moves=-1)
+    with pytest.raises(ValueError):
+        core.DefragConfig(interval=-1.0)
+
+
+def test_apply_plan_raises_on_stale_state(h100):
+    cl, sim, tables = h100
+    ledger = core.JobLedger(cl)
+    ledger.admit("a", [0, 1])
+    ledger.admit("b", [8, 9])
+    ledger.admit("c", [16, 17])
+    ledger.admit("x", [4, 12, 24, 25])
+    cfg = core.DefragConfig()
+    proposer = core.consolidation_proposer(
+        cl, tables, core.GroundTruthPredictor(sim),
+    )
+    plan = core.plan_defrag(cl, sim, ledger, cfg, proposer, target_k=8)
+    assert plan.n_moves >= 1
+    # occupy a GPU the plan wants: the apply must raise, not corrupt
+    ledger.admit("intruder", [plan.moves[0].new_gpus[0]])
+    with pytest.raises(ValueError):
+        core.apply_plan(ledger, plan)
+
+
+# ---------------------------------------------------------------------------
+# Placement tie-break
+# ---------------------------------------------------------------------------
+
+def test_frag_penalty_prefers_topping_up_dirty_hosts(h100):
+    cl, sim, tables = h100
+    ledger = core.JobLedger(cl)
+    ledger.admit("tenant", [0, 1, 2, 3])  # host 0: 4 busy, 4 free
+    penalty = core.make_frag_penalty(cl, ledger, weight=0.02)
+    assert penalty([4, 5, 6, 7]) == 0.0     # tops up the dirty host
+    assert penalty([8, 9, 10, 11]) == pytest.approx(0.02)  # cracks a clean one
+    assert penalty(list(range(8, 16))) == 0.0  # consumes it fully: no strand
+    gt = core.GroundTruthPredictor(sim)
+    res = core.hybrid_search(cl, tables, gt, ledger.available(), 4,
+                             frag_penalty=penalty)
+    # NVSwitch hosts are uniform up to jitter (<2%): the tie-break must pick
+    # the dirty host's remaining GPUs over cracking open a clean host
+    assert set(res.subset) == {4, 5, 6, 7}
+
+
+def test_frag_penalty_none_is_bit_identical(h100):
+    cl, sim, tables = h100
+    gt = core.GroundTruthPredictor(sim)
+    rng = np.random.default_rng(5)
+    for _ in range(5):
+        avail = core.cluster.availability_scenario(cl, rng)
+        k = int(rng.integers(2, max(3, len(avail) // 2)))
+        if k > len(avail):
+            continue
+        a = core.hybrid_search(cl, tables, gt, avail, k)
+        b = core.hybrid_search(cl, tables, gt, avail, k, frag_penalty=None)
+        assert a.subset == b.subset
+        assert a.predicted_bw == b.predicted_bw
+
+
+def test_joint_search_accepts_frag_weight(h100):
+    cl, sim, tables = h100
+    ledger = core.JobLedger(cl)
+    ledger.admit("tenant", [0, 1, 2, 3])
+    gt = core.GroundTruthPredictor(sim)
+    plan = core.joint_hybrid_search(
+        cl, tables, gt, ledger, [("a", 4), ("b", 4)], frag_weight=0.02,
+    )
+    subs = [set(p.subset) for p in plan.placements]
+    assert not (subs[0] & subs[1])
+    assert all(len(s) == 4 for s in subs)
+    assert not (subs[0] | subs[1]) & ledger.busy()
+
+
+# ---------------------------------------------------------------------------
+# Scheduler triggers
+# ---------------------------------------------------------------------------
+
+def _trace(cl, n=20, seed=7, k_choices=None):
+    return core.poisson_trace(
+        cl, n, np.random.default_rng(seed),
+        mean_interarrival=1.0, mean_duration=8.0,
+        k_choices=k_choices or [2, 3, 4, 6, 8, 12, 16],
+    )
+
+
+def test_defrag_off_is_bit_identical_to_plain_fifo(h100):
+    """The golden-pinned acceptance: defrag=off replays are the PR 3 fifo
+    path, record for record (the goldens themselves are pinned in
+    tests/test_scheduler.py; this guards the off-path wiring)."""
+    cl, sim, tables = h100
+    trace = _trace(cl)
+    legacy = core.replay_trace(cl, sim, tables, _bp(cl, tables, sim), trace)
+    sched = AdmissionScheduler(
+        cl, sim, tables, _bp(cl, tables, sim),
+        SchedulerConfig(policy="fifo", defrag=False),
+    )
+    off = sched.run(trace)
+    assert [(r.job_id, r.t_admit, r.gbe, r.bw) for r in off] == \
+        [(r.job_id, r.t_admit, r.gbe, r.bw) for r in legacy]
+    assert sched.migrations == []
+
+
+def test_defrag_triggers_fire_and_respect_budget(h100):
+    cl, sim, tables = h100
+    trace = _trace(cl, n=30, seed=0)
+    budget = 3
+    disp = _bp(cl, tables, sim, frag_weight=0.02)
+    sched = AdmissionScheduler(
+        cl, sim, tables, disp,
+        SchedulerConfig(
+            policy="fifo", defrag=True,
+            defrag_config=core.DefragConfig(
+                max_total_moves=budget, interval=1.0,
+            ),
+        ),
+    )
+    recs = sched.run(trace)
+    assert len(recs) == len(trace)
+    assert len(disp.ledger) == 0  # drained
+    assert 1 <= len(sched.migrations) <= budget
+    assert all(m.kind in ("defrag", "make-room") for m in sched.migrations)
+    assert sum(r.migrations for r in recs) == len(sched.migrations)
+    # fragmentation state is recorded and summarized
+    assert all(0.0 <= r.stranding <= 1.0 for r in recs)
+    s = core.summarize_trace(recs)[disp.name]
+    assert "mean_stranding" in s and "mean_clean_hosts" in s
+
+
+def test_defrag_moves_never_lower_live_bandwidth(h100, monkeypatch):
+    cl, sim, tables = h100
+    checked = {"passes": 0}
+    orig = AdmissionScheduler._run_defrag_pass
+
+    def verified(self, t, kind, target_k=None):
+        ledger = self.dispatcher.ledger
+        before = {
+            a.job_id: self.sim.true_bandwidth(a.gpus, ledger=ledger)
+            for a in ledger.jobs()
+        }
+        n = len(self.migrations)
+        orig(self, t, kind, target_k=target_k)
+        if len(self.migrations) > n:
+            checked["passes"] += 1
+            for a in ledger.jobs():
+                if a.job_id in before:
+                    after = self.sim.true_bandwidth(a.gpus, ledger=ledger)
+                    assert after >= before[a.job_id] - 1e-6, a.job_id
+
+    monkeypatch.setattr(AdmissionScheduler, "_run_defrag_pass", verified)
+    disp = _bp(cl, tables, sim, frag_weight=0.02)
+    sched = AdmissionScheduler(
+        cl, sim, tables, disp,
+        SchedulerConfig(policy="fifo", defrag=True,
+                        defrag_config=core.DefragConfig(interval=1.0)),
+    )
+    sched.run(_trace(cl, n=30, seed=0))
+    assert checked["passes"] >= 1  # the hook actually consolidated
+
+
+def test_defrag_composes_with_redispatch_and_batched(h100):
+    cl, sim, tables = h100
+    trace = _trace(cl, n=20, seed=3)
+    for cfg in (
+        SchedulerConfig(policy="fifo", defrag=True, redispatch=True),
+        SchedulerConfig(policy="batched", batch_window=2.0, defrag=True),
+        SchedulerConfig(policy="backfill", defrag=True),
+    ):
+        disp = _bp(cl, tables, sim, frag_weight=0.02)
+        sched = AdmissionScheduler(cl, sim, tables, disp, cfg)
+        recs = sched.run(trace)
+        assert len(recs) == len(trace), cfg.policy
+        assert len(disp.ledger) == 0
+        spent = sum(1 for m in sched.migrations
+                    if m.kind in ("defrag", "make-room"))
+        assert spent <= cfg.defrag_config.max_total_moves
+
+
+@pytest.mark.slow
+def test_defrag_improves_large_arrivals_on_h100_trace(h100):
+    """The ISSUE 4 acceptance bar at test scale: on a 60-job bimodal H100
+    trace, defrag=on improves the large (k>=8) arrivals' mean contended
+    bandwidth without losing GBE, within the migration budget."""
+    cl, sim, tables = h100
+    trace = _trace(cl, n=60, seed=1, k_choices=[2, 2, 3, 4, 4, 6, 8, 12, 16])
+
+    def replay(cfg, fw):
+        disp = _bp(cl, tables, sim, frag_weight=fw)
+        sched = AdmissionScheduler(cl, sim, tables, disp, cfg)
+        return sched.run(trace), sched
+
+    off, _ = replay(SchedulerConfig(policy="fifo"), 0.0)
+    on, sched = replay(
+        SchedulerConfig(policy="fifo", defrag=True,
+                        defrag_config=core.DefragConfig(
+                            max_total_moves=16, interval=2.0)),
+        0.02,
+    )
+    bw_off = np.mean([r.bw for r in off if r.k >= 8])
+    bw_on = np.mean([r.bw for r in on if r.k >= 8])
+    assert bw_on > bw_off + 10.0  # double-digit GB/s gain on this trace
+    gbe_off = np.mean([r.gbe for r in off])
+    gbe_on = np.mean([r.gbe for r in on])
+    assert gbe_on > gbe_off - 0.01
+    assert 1 <= len(sched.migrations) <= 16
+
+
+# ---------------------------------------------------------------------------
+# Satellite: small-k oversampling
+# ---------------------------------------------------------------------------
+
+def test_sample_allocations_small_k_weight(mix):
+    cl, sim, _ = mix
+    # default: explicit 0.0 is bit-identical to the legacy call
+    a = sim.sample_allocations(30, np.random.default_rng(0))
+    b = sim.sample_allocations(30, np.random.default_rng(0),
+                               small_k_weight=0.0)
+    assert a == b
+    # oversampling skews the k distribution toward the crossover range
+    heavy = sim.sample_allocations(60, np.random.default_rng(0),
+                                   small_k_weight=0.9)
+    frac_small = np.mean([len(s) <= 5 for s in heavy])
+    frac_small_base = np.mean(
+        [len(s) <= 5 for s in sim.sample_allocations(
+            60, np.random.default_rng(0))]
+    )
+    assert frac_small > frac_small_base + 0.2
+    assert all(len(self_) >= 2 for self_ in heavy)
+    with pytest.raises(ValueError):
+        sim.sample_allocations(5, np.random.default_rng(0),
+                               small_k_weight=1.5)
