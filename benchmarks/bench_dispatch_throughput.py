@@ -1,0 +1,187 @@
+"""Dispatch fast path (ISSUE 5): end-to-end admissions/sec, before vs after.
+
+Replays pinned scheduler traces (H100 + Het-4Mix; fifo/batched x
+analytic/learned x defrag on/off) through BandPilot twice per
+configuration:
+
+* **before** — the pre-PR dispatch path: per-candidate loop featurizers,
+  per-candidate analytic caps, sequential PTS rounds, no prediction cache,
+  JIT shapes always padded to ``cluster.n_hosts`` tokens;
+* **after** — the fast path defaults: vectorized featurization, fused PTS
+  rounds, batched caps, ledger-versioned prediction cache, bucketed JIT
+  shapes.
+
+Both sides replay with oracle grading off (``AdmissionScheduler(grade=
+False)``): the exact-Oracle baseline is evaluation apparatus, identical on
+both sides, and a production dispatcher never runs it — admissions/sec
+must measure the dispatch path.  The chosen subsets are asserted identical
+between the two sides on every configuration (the bit-identity contract),
+and the per-phase breakdown (featurize / infer / contention-wrap / other)
+is reported for each.
+
+Rows:
+  dispatch_tput_{cluster}_{policy}_{mode}[_defrag] — us per admission
+    (after side), derived = before/after admissions/sec + speedup +
+    both breakdowns + identical-subsets flag
+  dispatch_tput_target — the pinned headline config (H100 fifo analytic)
+    speedup vs the >=5x target
+  dispatch_latency_guard — worst-case hybrid-search latency (after side)
+    vs the Fig. 8 250 ms envelope (threshold via BENCH_SEARCH_LATENCY_MS)
+"""
+
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+import repro.core as core
+from repro.core import surrogate as surr
+from benchmarks.common import csv_row, get_context
+
+CLUSTERS = ("H100", "Het-4Mix")
+N_JOBS = int(os.environ.get("BENCH_TRACE_JOBS", "50"))
+LATENCY_MS = float(os.environ.get("BENCH_SEARCH_LATENCY_MS", "250"))
+TARGET_SPEEDUP = 5.0
+PINNED = ("H100", "fifo", "analytic", False)  # the headline config
+
+CONFIGS = (
+    # (policy, batch_window, mode, defrag)
+    ("fifo", 0.0, "analytic", False),
+    ("batched", 2.0, "analytic", False),
+    ("fifo", 0.0, "learned", False),
+    ("fifo", 0.0, "analytic", True),
+)
+
+
+def _trace(cluster):
+    return core.poisson_trace(
+        cluster, N_JOBS, np.random.default_rng(11),
+        mean_interarrival=1.0, mean_duration=8.0,
+        k_choices=range(4, cluster.n_gpus // 2 + 1),
+    )
+
+
+def _dispatcher(ctx, mode, fast):
+    pred = core.SurrogatePredictor(
+        ctx.cluster, ctx.tables, ctx.params,
+        vectorized=fast, bucket_shapes=fast,
+    )
+    kw = {}
+    if mode == "learned":
+        # untrained warm-start head: the bench measures the dispatch path,
+        # not model accuracy, and an untrained ContendedSurrogate exercises
+        # exactly the same featurize+infer work as a trained one
+        kw = dict(
+            contention_mode="learned",
+            contended_predictor=core.ContendedSurrogatePredictor(
+                ctx.cluster, ctx.tables,
+                surr.init_contended_params(ctx.params),
+                vectorized=fast, bucket_shapes=fast,
+            ),
+        )
+    disp = core.BandPilotDispatcher(
+        ctx.cluster, ctx.tables, pred, cache=fast, **kw
+    )
+    if not fast:
+        disp.contention_predictor.vectorized = False
+    return disp
+
+
+def _replay(ctx, trace, policy, window, mode, defrag, fast):
+    """-> (seconds, chosen subsets, stats, worst hybrid-search seconds)."""
+    disp = _dispatcher(ctx, mode, fast)
+    chosen = []
+    worst = [0.0]
+    orig = core.BandPilotDispatcher.dispatch
+
+    def wrapped(self, avail, k, rng=None):
+        s = orig(self, avail, k, rng=rng)
+        chosen.append(tuple(s))
+        if self.last_result is not None:
+            worst[0] = max(worst[0], self.last_result.total_seconds)
+        return s
+
+    disp.dispatch = wrapped.__get__(disp)
+    cfg = core.SchedulerConfig(
+        policy=policy, batch_window=window, defrag=defrag,
+    )
+    sched = core.AdmissionScheduler(
+        ctx.cluster, ctx.sim, ctx.tables, disp, cfg, grade=False
+    )
+    t0 = time.time()
+    recs = sched.run(trace)
+    # joint batched placements commit without dispatch(): fold the graded
+    # records in so the identity check covers every admission path
+    chosen += [(r.job_id, r.bw) for r in recs]
+    return time.time() - t0, chosen, disp.predictor_stats(), worst[0]
+
+
+def _breakdown(dt, st):
+    other = max(dt - st.featurize_seconds - st.infer_seconds
+                - st.wrapper_seconds, 0.0)
+    return (
+        f"feat={st.featurize_seconds:.2f}s;infer={st.infer_seconds:.2f}s;"
+        f"wrap={st.wrapper_seconds:.2f}s;other={other:.2f}s;"
+        f"hits={st.cache_hits};misses={st.cache_misses}"
+    )
+
+
+def run() -> list:
+    rows = []
+    pinned_speedup = None
+    first_speedup = None
+    worst_latency = 0.0
+    for name in CLUSTERS:
+        ctx = get_context(name)
+        trace = _trace(ctx.cluster)
+        for policy, window, mode, defrag in CONFIGS:
+            # full unmeasured replay per side first: JIT compilation of
+            # every (B, H) shape bucket the trace exercises must land
+            # outside the timed window (it is a once-per-process cost, not
+            # a per-admission one)
+            _replay(ctx, trace, policy, window, mode, defrag, fast=True)
+            _replay(ctx, trace, policy, window, mode, defrag, fast=False)
+            dt_a, sub_a, st_a, worst_a = _replay(
+                ctx, trace, policy, window, mode, defrag, fast=True
+            )
+            dt_b, sub_b, st_b, _ = _replay(
+                ctx, trace, policy, window, mode, defrag, fast=False
+            )
+            identical = sub_a == sub_b
+            assert identical, (
+                f"fast path changed subset selection: {name} {policy} {mode}"
+            )
+            worst_latency = max(worst_latency, worst_a)
+            speedup = dt_b / dt_a if dt_a > 0 else float("inf")
+            tag = f"{policy}_{mode}" + ("_defrag" if defrag else "")
+            if (name, policy, mode, defrag) == PINNED:
+                pinned_speedup = speedup
+            if first_speedup is None:
+                first_speedup = speedup
+            rows.append(csv_row(
+                f"dispatch_tput_{name}_{tag}",
+                1e6 * dt_a / len(trace),
+                f"after={len(trace) / dt_a:.1f}adm/s;"
+                f"before={len(trace) / dt_b:.1f}adm/s;"
+                f"speedup={speedup:.2f}x;identical={identical};"
+                f"after[{_breakdown(dt_a, st_a)}];"
+                f"before[{_breakdown(dt_b, st_b)}]",
+            ))
+    # a CI smoke override may run a config subset without the pinned one:
+    # fall back to the first measured config rather than crash
+    headline = pinned_speedup if pinned_speedup is not None else first_speedup
+    rows.append(csv_row(
+        "dispatch_tput_target", 0.0,
+        f"pinned=H100/fifo/analytic;speedup={headline:.2f}x;"
+        f"target={TARGET_SPEEDUP:.0f}x;"
+        f"met={headline >= TARGET_SPEEDUP}",
+    ))
+    rows.append(csv_row(
+        "dispatch_latency_guard", 1e6 * worst_latency,
+        f"worst_search_ms={1e3 * worst_latency:.1f};"
+        f"threshold_ms={LATENCY_MS:.0f};"
+        f"ok={1e3 * worst_latency < LATENCY_MS}",
+    ))
+    return rows

@@ -2,6 +2,15 @@
 
 Paper claim: total hybrid search stays well under 250 ms on the 32-GPU
 cluster, dominated by cumulative surrogate inference in the PTS phase.
+
+Extended (ISSUE 5) with the configurations the admission scheduler actually
+runs: Het-4Mix rows and ``mode="learned"`` rows, each with the fast path's
+per-phase breakdown — featurize / infer / contention-wrap / other — taken
+from the unified :class:`repro.core.PredictorStats`.  The contended rows
+search against a tenanted ledger (two live cross-host jobs), so the
+contention wrapper and (in learned mode) the ContendedSurrogate are genuinely
+on the hot path.  The fast path's job is to move the featurize share from
+dominant to minor; these rows are where that is visible.
 """
 
 from __future__ import annotations
@@ -12,6 +21,8 @@ import numpy as np
 
 import repro.core as core
 from repro.core import search
+from repro.core import surrogate as surr
+from repro.core.predict_cache import collect_stats
 from benchmarks.common import csv_row, get_context
 
 
@@ -38,4 +49,60 @@ def run() -> list:
         "fig8_under_250ms", 1e6 * worst_total,
         f"worst_total_ms={1e3 * worst_total:.0f};claim=<250ms",
     ))
+
+    # -- scheduler configurations: per-phase breakdown under tenancy --------
+    for name in ("H100", "Het-4Mix"):
+        cctx = get_context(name)
+        cl, tables = cctx.cluster, cctx.tables
+        cparams = surr.init_contended_params(cctx.params)
+        for mode in ("analytic", "learned"):
+            for k in (8, 16):
+                ledger = core.JobLedger(cl)
+                # two cross-host tenants: candidate rails genuinely shared
+                ledger.admit("t0", [cl.hosts[0].gpu_ids[0],
+                                    cl.hosts[1].gpu_ids[0]])
+                ledger.admit("t1", [cl.hosts[-2].gpu_ids[1],
+                                    cl.hosts[-1].gpu_ids[0]])
+                iso = core.SurrogatePredictor(cl, tables, cctx.params)
+                contended = (
+                    core.ContendedSurrogatePredictor(cl, tables, cparams)
+                    if mode == "learned" else None
+                )
+                avail = ledger.available()
+                # unmeasured warm-up: JIT compilation of this config's
+                # shape buckets is a once-per-process cost, not search
+                # time.  The measured pass gets a FRESH prediction cache
+                # (cold misses), only the compiled executables are reused.
+                warm = core.cached_contention_predictor(
+                    cl, iso, ledger, mode=mode, contended=contended,
+                )
+                search.eha_search(cl, tables, warm, avail, k)
+                search.pts_search(cl, tables, warm, avail, k)
+                iso.stats.reset()
+                if contended is not None:
+                    contended.stats.reset()
+                pred = core.cached_contention_predictor(
+                    cl, iso, ledger, mode=mode, contended=contended,
+                )
+                t0 = time.time()
+                eha = search.eha_search(cl, tables, pred, avail, k)
+                pts = search.pts_search(cl, tables, pred, avail, k)
+                total = time.time() - t0
+                st = collect_stats(pred, contended)
+                other = max(
+                    total - st.featurize_seconds - st.infer_seconds
+                    - st.wrapper_seconds, 0.0,
+                )
+                rows.append(csv_row(
+                    f"fig8_{name}_{mode}_k{k}", 1e6 * total,
+                    f"eha_ms={1e3 * eha.seconds:.1f};"
+                    f"pts_ms={1e3 * pts.seconds:.1f};"
+                    f"feat_ms={1e3 * st.featurize_seconds:.1f};"
+                    f"infer_ms={1e3 * st.infer_seconds:.1f};"
+                    f"wrap_ms={1e3 * st.wrapper_seconds:.1f};"
+                    f"other_ms={1e3 * other:.1f};"
+                    f"feat_share={st.featurize_seconds / max(total, 1e-9):.2f};"
+                    f"n_eval={eha.n_candidates + pts.n_candidates};"
+                    f"hits={st.cache_hits}",
+                ))
     return rows

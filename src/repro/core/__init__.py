@@ -28,6 +28,11 @@ Public surface:
     apply_plan / DefragConfig, evaluate_move / net_migration_gain (shared
     migration economics), make_frag_penalty (placement tie-break),
     SchedulerConfig(defrag=True)
+  Dispatch fast path (vectorized featurization + ledger-versioned memos):
+    predict_cache.PredictionCache / CachedPredictor / GradingCache /
+    PredictorStats / cached_contention_predictor, features.featurize_batch
+    (vectorized) / featurize_children (incremental PTS rounds),
+    BandPilotDispatcher(cache=True), JobLedger.version
 """
 
 from repro.core.bandwidth_sim import BW_SCALE, BandwidthSimulator
@@ -87,6 +92,14 @@ from repro.core.dispatcher import (
     summarize,
 )
 from repro.core.intra_host import IntraHostTables
+from repro.core.predict_cache import (
+    CachedPredictor,
+    GradingCache,
+    PredictionCache,
+    PredictorStats,
+    cached_contention_predictor,
+    collect_stats,
+)
 from repro.core.scheduler import (
     AdmissionScheduler,
     MigrationEvent,
@@ -174,6 +187,12 @@ __all__ = [
     "net_migration_gain",
     "plan_defrag",
     "IntraHostTables",
+    "CachedPredictor",
+    "GradingCache",
+    "PredictionCache",
+    "PredictorStats",
+    "cached_contention_predictor",
+    "collect_stats",
     "eha_search",
     "hybrid_search",
     "joint_hybrid_search",

@@ -34,8 +34,13 @@ from typing import Dict, List, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.bandwidth_sim import INTER_EFF, contended_inter_term
+from repro.core.bandwidth_sim import (
+    INTER_EFF,
+    _jitter,
+    contended_inter_term,
+)
 from repro.core.cluster import Cluster
+from repro.core.predict_cache import PredictorStats
 from repro.core.tenancy import Allocation, JobLedger
 
 Subset = Sequence[int]
@@ -116,6 +121,107 @@ def contended_inter_cap(
     return _cap_from_snapshot(cluster, ledger.cross_jobs_by_host(), subset, eta)
 
 
+class _SnapshotArrays:
+    """Dense per-snapshot arrays for the vectorized cap: contender GPU
+    membership masks, per-host touch flags, and static host data.  Built
+    once per (ledger uid, version) and reused across every predict call of
+    an admission — the hybrid search degrades ~20 candidate batches against
+    one unchanged ledger state."""
+
+    def __init__(self, cluster: Cluster, cross_by_host: CrossJobsByHost):
+        self.gpu_host = np.asarray(cluster.gpu_host, np.int64)
+        self.rail_bw = np.asarray(
+            [h.host_type.nic_rail_bw for h in cluster.hosts], np.float64
+        )
+        allocs = sorted(
+            {a.job_id: a
+             for jobs in cross_by_host.values() for a in jobs}.values(),
+            key=lambda a: a.job_id,
+        )
+        nJ = len(allocs)
+        self.occ = np.zeros((nJ, cluster.n_gpus), np.int64)
+        self.touch = np.zeros((nJ, cluster.n_hosts), np.int64)
+        for j, a in enumerate(allocs):
+            gs = np.asarray(a.gpus, np.int64)
+            self.occ[j, gs] = 1
+            self.touch[j, self.gpu_host[gs]] = 1
+
+
+def _subset_grid(
+    snap: _SnapshotArrays, subsets: Sequence[Subset], n_hosts: int, n_gpus: int
+):
+    """Membership/count grids + contends matrix for a candidate batch."""
+    B = len(subsets)
+    lens = np.asarray([len(s) for s in subsets], np.int64)
+    flat = (
+        np.concatenate([np.asarray(s, np.int64) for s in subsets])
+        if B and lens.sum() else np.zeros((0,), np.int64)
+    )
+    rows = np.repeat(np.arange(B, dtype=np.int64), lens)
+    counts = np.zeros((B, n_hosts), np.int64)
+    np.add.at(counts, (rows, snap.gpu_host[flat]), 1)
+    M = np.zeros((B, n_gpus), np.int64)
+    M[rows, flat] = 1
+    disjoint = ((M @ snap.occ.T) == 0).astype(np.int64)
+    return lens, counts, disjoint
+
+
+def _caps_from_snapshot_batched(
+    cluster: Cluster,
+    cross_by_host: CrossJobsByHost,
+    subsets: Sequence[Subset],
+    eta: float = INTER_EFF,
+    jitter_cache: Optional[Dict] = None,
+    snap: Optional[_SnapshotArrays] = None,
+) -> np.ndarray:
+    """Vectorized :func:`_cap_from_snapshot` over a candidate batch.
+
+    One numpy program replaces the per-candidate partition + per-host
+    contender scan: candidate membership masks matmul against the
+    snapshot's contender GPU masks for the disjointness predicate, and the
+    per-host contender counts fall out of a second matmul.  The final
+    deterministic fabric jitter is the same per-(hosts, counts) hash the
+    scalar path evaluates, memoized in ``jitter_cache`` — outputs are
+    bit-identical to the loop (regression-pinned in tests/test_fast_path).
+    """
+    if snap is None:
+        snap = _SnapshotArrays(cluster, cross_by_host)
+    B = len(subsets)
+    lens, counts, disjoint = _subset_grid(
+        snap, subsets, cluster.n_hosts, cluster.n_gpus
+    )
+    part = counts > 0
+    n_part = part.sum(axis=1)
+    c = 1 + disjoint @ snap.touch                      # [B, n_hosts]
+
+    caps = np.full((B,), np.inf, np.float64)
+    # same float program as the scalar path: min over participating hosts
+    # of rail_bw / c_h, then rail * min(counts) * (2(k-1)/k) * eta * jitter
+    per_host = np.where(part, snap.rail_bw[None, :] / c, np.inf)
+    rail = per_host.min(axis=1)
+    min_counts = np.where(part, counts, np.iinfo(np.int64).max).min(axis=1)
+    active = (n_part > 1) & ((c > 1) & part).any(axis=1)
+    idx = np.nonzero(active)[0]
+    if not len(idx):
+        return caps
+    ks = lens[idx]
+    inter = (
+        rail[idx] * min_counts[idx] * (2.0 * (ks - 1) / ks) * eta
+    )
+    if jitter_cache is None:
+        jitter_cache = {}
+    for i, b in enumerate(idx):
+        key = tuple(
+            (int(h), int(counts[b, h])) for h in np.nonzero(part[b])[0]
+        )
+        j = jitter_cache.get(key)
+        if j is None:
+            j = _jitter(cluster.name, "inter", key)
+            jitter_cache[key] = j
+        caps[b] = inter[i] * j
+    return caps
+
+
 PREDICTOR_MODES = ("analytic", "learned")
 
 
@@ -149,6 +255,7 @@ class ContentionAwarePredictor:
         ledger: JobLedger,
         mode: str = "analytic",
         contended=None,
+        vectorized: bool = True,
     ):
         if mode not in PREDICTOR_MODES:
             raise ValueError(
@@ -163,19 +270,106 @@ class ContentionAwarePredictor:
         self.ledger = ledger
         self.mode = mode
         self.contended = contended
-        self.n_capped = 0           # candidates whose estimate was degraded
-        self.predict_seconds = 0.0  # wrapper overhead (excl. base predictor)
+        self.vectorized = vectorized
+        self.stats = PredictorStats()
+        self._jitter_cache: Dict = {}
+        self._snap_version: Optional[int] = None
+        self._snap: Optional[_SnapshotArrays] = None
+
+    # legacy instrumentation names
+    @property
+    def n_capped(self) -> int:
+        return self.stats.n_capped
+
+    @n_capped.setter
+    def n_capped(self, v: int) -> None:
+        self.stats.n_capped = v
+
+    @property
+    def predict_seconds(self) -> float:
+        """Wrapper overhead (excl. base/contended predictor time)."""
+        return self.stats.wrapper_seconds
+
+    @predict_seconds.setter
+    def predict_seconds(self, v: float) -> None:
+        self.stats.wrapper_seconds = v
 
     def predict(self, subsets: Sequence[Subset]) -> np.ndarray:
         iso = np.asarray(self.base.predict(subsets), dtype=np.float64)
+        return self._degrade(subsets, iso)
+
+    def predict_children(self, parent: Sequence[int]) -> np.ndarray:
+        """One fused PTS elimination round: the base predictor's incremental
+        child path (when it has one) plus one batched cap evaluation."""
+        parent = list(parent)
+        if hasattr(self.base, "predict_children"):
+            iso = np.asarray(self.base.predict_children(parent), np.float64)
+        else:
+            iso = np.asarray(
+                self.base.predict(
+                    [parent[:i] + parent[i + 1:] for i in range(len(parent))]
+                ),
+                np.float64,
+            )
+        children = [parent[:i] + parent[i + 1:] for i in range(len(parent))]
+        return self._degrade(children, iso)
+
+    def _snapshot(self) -> _SnapshotArrays:
+        """Per-(ledger version) dense snapshot: the ledger cannot change
+        within one predict call, and the hybrid search issues ~20 predict
+        batches per admission against one unchanged state — build the
+        membership arrays once per version, not once per batch."""
+        v = (self.ledger.uid, self.ledger.version)
+        if self._snap_version != v:
+            self._snap = _SnapshotArrays(
+                self.cluster, self.ledger.cross_jobs_by_host()
+            )
+            self._snap_version = v
+        return self._snap
+
+    def _degrade(
+        self, subsets: Sequence[Subset], iso: np.ndarray
+    ) -> np.ndarray:
         if len(self.ledger) == 0:
             return iso
         t0 = time.time()
-        # The ledger cannot change within one predict call: snapshot the
-        # cross-host jobs per host once, not per candidate (hybrid search
-        # scores hundreds of candidates per admission through this path).
-        cross_by_host = self.ledger.cross_jobs_by_host()
         out = iso.copy()
+        inner = 0.0  # time spent inside the contended model, not the wrapper
+        if self.mode == "learned" and self.vectorized:
+            snap = self._snapshot()
+            _, counts, disjoint = _subset_grid(
+                snap, subsets, self.cluster.n_hosts, self.cluster.n_gpus
+            )
+            part = counts > 0
+            contended = (part.sum(axis=1) > 1) & (
+                ((disjoint @ snap.touch) * part) > 0
+            ).any(axis=1)
+            idx = np.nonzero(contended)[0].tolist()
+            if idx:
+                before = self.contended.predict_seconds
+                learned = self.contended.predict(
+                    [subsets[i] for i in idx], self.ledger
+                )
+                inner = self.contended.predict_seconds - before
+                for i, p in zip(idx, learned):
+                    if p < out[i]:
+                        out[i] = p
+                        self.stats.n_capped += 1
+            self.stats.wrapper_seconds += time.time() - t0 - inner
+            return out
+        if self.vectorized:  # analytic, batched caps over the version snapshot
+            caps = _caps_from_snapshot_batched(
+                self.cluster, {}, subsets,
+                jitter_cache=self._jitter_cache, snap=self._snapshot(),
+            )
+            capped = caps < out
+            out[capped] = caps[capped]
+            self.stats.n_capped += int(capped.sum())
+            self.stats.wrapper_seconds += time.time() - t0
+            return out
+        # Legacy scalar paths (the throughput bench's before-side): snapshot
+        # the cross-host jobs per host once per call, not per candidate.
+        cross_by_host = self.ledger.cross_jobs_by_host()
         if self.mode == "learned":
             idx = [
                 i for i, s in enumerate(subsets)
@@ -184,22 +378,22 @@ class ContentionAwarePredictor:
             if idx:
                 # model inference is accounted by the contended predictor's
                 # own predict_seconds; keep this counter wrapper-only
-                t_model = self.contended.predict_seconds
+                before = self.contended.predict_seconds
                 learned = self.contended.predict(
                     [subsets[i] for i in idx], self.ledger
                 )
-                t0 += self.contended.predict_seconds - t_model
+                inner = self.contended.predict_seconds - before
                 for i, p in zip(idx, learned):
                     if p < out[i]:
                         out[i] = p
-                        self.n_capped += 1
+                        self.stats.n_capped += 1
         else:
             for i, s in enumerate(subsets):
                 cap = _cap_from_snapshot(self.cluster, cross_by_host, s)
                 if cap < out[i]:
                     out[i] = cap
-                    self.n_capped += 1
-        self.predict_seconds += time.time() - t0
+                    self.stats.n_capped += 1
+        self.stats.wrapper_seconds += time.time() - t0 - inner
         return out
 
     def _contended_by(

@@ -351,12 +351,21 @@ def evaluate_move(
     cost_per_gpu: float,
     require_no_harm: bool = True,
     min_self_gain: Optional[float] = None,
+    before: Optional[dict] = None,
+    frag_before: Optional[FragmentationMetrics] = None,
 ) -> Optional[MoveEval]:
     """Trial-relocate one live job: release it, ask ``propose`` for a new
     subset over the freed availability, then grade the move with
     :func:`evaluate_placement`.  The ledger is restored exactly on every
     path.  This is the shared trial the scheduler's release-time re-dispatch
-    runs (``propose`` = the dispatcher's own ``dispatch``)."""
+    runs (``propose`` = the dispatcher's own ``dispatch``).
+
+    ``sim`` may be any object exposing ``true_bandwidth(S, ledger=...)`` —
+    the simulator itself or the fast path's
+    :class:`~repro.core.predict_cache.GradingCache` memo over it.
+    ``before``/``frag_before`` forward to :func:`evaluate_placement`: a
+    caller trialling many movers against one unchanged ledger state (the
+    re-dispatch hook's candidate loop) grades the pre-move state once."""
     ledger.release(alloc.job_id)
     try:
         subset = propose(ledger, ledger.available(), alloc.k)
@@ -365,6 +374,7 @@ def evaluate_move(
     return evaluate_placement(
         sim, ledger, alloc, subset, cost_per_gpu,
         require_no_harm=require_no_harm, min_self_gain=min_self_gain,
+        before=before, frag_before=frag_before,
     )
 
 
@@ -406,17 +416,25 @@ def hybrid_proposer(
     contention_mode: str = "analytic",
     contended=None,
     frag_weight: float = 0.0,
+    use_cache: bool = True,
+    vectorized: bool = True,
+    stats_sink=None,
 ) -> Proposer:
     """A :data:`Proposer` that re-places jobs exactly the way BandPilot
     admits them: hybrid search under the contention-aware predictor bound
-    to the (scratch) ledger, with the fragmentation tie-break applied."""
-    from repro.core.contention import ContentionAwarePredictor
+    to the (scratch) ledger, with the fragmentation tie-break applied.
+    The per-proposal predictor is wrapped in a ledger-versioned prediction
+    cache (pass the dispatcher's cached ``base_predictor`` to also share
+    the isolated memo across trials)."""
+    from repro.core.predict_cache import cached_contention_predictor
 
     def propose(ledger: JobLedger, avail: Sequence[int], k: int) -> Subset:
         pred = (
-            ContentionAwarePredictor(
+            cached_contention_predictor(
                 cluster, base_predictor, ledger,
                 mode=contention_mode, contended=contended,
+                use_cache=use_cache, vectorized=vectorized,
+                stats_sink=stats_sink,
             )
             if contention_aware else base_predictor
         )
@@ -439,6 +457,9 @@ def consolidation_proposer(
     contention_mode: str = "analytic",
     contended=None,
     frag_weight: float = 0.02,
+    use_cache: bool = True,
+    vectorized: bool = True,
+    stats_sink=None,
 ) -> ProposalFan:
     """Best-fit candidate slots for a defrag mover, cheapest real estate
     first.
@@ -459,7 +480,8 @@ def consolidation_proposer(
             cluster, tables, base_predictor,
             contention_aware=contention_aware,
             contention_mode=contention_mode, contended=contended,
-            frag_weight=frag_weight,
+            frag_weight=frag_weight, use_cache=use_cache,
+            vectorized=vectorized, stats_sink=stats_sink,
         )
         if base_predictor is not None else None
     )

@@ -34,6 +34,11 @@ from repro.core.bandwidth_sim import BandwidthSimulator
 from repro.core.cluster import Cluster, availability_scenario
 from repro.core.contention import ContentionAwarePredictor
 from repro.core.intra_host import IntraHostTables
+from repro.core.predict_cache import (
+    PredictionCache,
+    PredictorStats,
+    collect_stats,
+)
 from repro.core.scheduler import (  # re-exported: the public trace surface
     AdmissionScheduler,
     SchedulerConfig,
@@ -62,14 +67,29 @@ class GroundTruthPredictor:
 
     def __init__(self, sim: BandwidthSimulator):
         self.sim = sim
-        self.n_model_calls = 0
-        self.predict_seconds = 0.0
+        self.stats = PredictorStats()
+
+    @property
+    def n_model_calls(self) -> int:
+        return self.stats.n_model_calls
+
+    @n_model_calls.setter
+    def n_model_calls(self, v: int) -> None:
+        self.stats.n_model_calls = v
+
+    @property
+    def predict_seconds(self) -> float:
+        return self.stats.predict_seconds
+
+    @predict_seconds.setter
+    def predict_seconds(self, v: float) -> None:
+        self.stats.predict_seconds = v
 
     def predict(self, subsets: Sequence[Sequence[int]]) -> np.ndarray:
         t0 = time.time()
         out = np.asarray([self.sim.true_bandwidth(s) for s in subsets])
-        self.predict_seconds += time.time() - t0
-        self.n_model_calls += len(subsets)
+        self.stats.predict_seconds += time.time() - t0
+        self.stats.n_model_calls += len(subsets)
         return out
 
 
@@ -147,6 +167,15 @@ class BandPilotDispatcher(DispatcherService):
     busy hosts over cracking open clean ones, keeping large blocks intact
     for future arrivals.  The default 0.0 is bit-identical to the previous
     behaviour.
+
+    ``cache=True`` (the default) enables the dispatch fast path's
+    prediction memo (:mod:`repro.core.predict_cache`): isolated B̂(S) —
+    ledger-independent while the params are fixed — is memoized for the
+    service lifetime, and contention-degraded scores are memoized per
+    ledger version, so re-scoring the same subset within an admission is
+    free and any admit/release invalidates by construction.  Cached values
+    are stored predictor outputs, so subset selection is bit-identical with
+    the cache on or off (regression-pinned in ``tests/test_fast_path.py``).
     """
 
     def __init__(
@@ -159,23 +188,51 @@ class BandPilotDispatcher(DispatcherService):
         contention_mode: str = "analytic",
         contended_predictor=None,
         frag_weight: float = 0.0,
+        cache: bool = True,
     ):
         super().__init__(cluster)
         self.tables = tables
-        self.base_predictor = predictor
+        self.raw_predictor = predictor
         self.contention_aware = contention_aware
         self.contention_mode = contention_mode
         self.contended_predictor = contended_predictor
         self.frag_weight = frag_weight
+        self.iso_cache: Optional[PredictionCache] = None
+        self.prediction_cache: Optional[PredictionCache] = None
+        if cache:
+            self.iso_cache = PredictionCache()  # ledger-independent memo
+            predictor = self.iso_cache.wrap(
+                predictor, mode="isolated", versioned=False
+            )
+        # base_predictor is what joint search / defrag proposers re-wrap per
+        # scratch ledger: keeping the isolated memo inside it shares the
+        # expensive inference across orders, trials, and passes.
+        self.base_predictor = predictor
         if contention_aware:
-            self.predictor = ContentionAwarePredictor(
+            self.contention_predictor = ContentionAwarePredictor(
                 cluster, predictor, self.ledger,
                 mode=contention_mode, contended=contended_predictor,
             )
+            if cache:
+                self.prediction_cache = PredictionCache(self.ledger)
+                self.predictor = self.prediction_cache.wrap(
+                    self.contention_predictor, mode=contention_mode
+                )
+            else:
+                self.predictor = self.contention_predictor
         else:
             self.predictor = predictor
         self.name = name
         self.last_result: Optional[search.HybridResult] = None
+
+    def predictor_stats(self) -> PredictorStats:
+        """Merged instrumentation across the dispatcher's predictor chain
+        (cache wrappers, contention wrapper, base model) — what the
+        benchmarks report per configuration."""
+        return collect_stats(
+            self.predictor, self.base_predictor,
+            getattr(self, "contended_predictor", None),
+        )
 
     def dispatch(self, avail: Sequence[int], k: int, rng=None) -> Subset:
         penalty = None

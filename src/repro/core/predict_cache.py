@@ -1,0 +1,283 @@
+"""Ledger-versioned prediction memo + unified predictor instrumentation.
+
+The dispatch fast path re-scores the same subsets many times within one
+admission: EHA's phase-2 winner is re-scored by PTS and by the hybrid
+arbiter, a PTS round's winner is re-predicted as the final subset, joint
+batched placement re-scores every plan against the final scratch state, and
+trial moves re-grade co-tenants.  All of those are pure functions of
+``(subset, ledger occupancy)`` — so one memo keyed by ``(subset tuple,
+ledger version, mode)`` makes every repeat free.
+
+**Invalidation contract.**  :class:`~repro.core.tenancy.JobLedger` carries a
+monotonic ``version`` counter bumped on every admit/release.  A versioned
+cache entry is valid for exactly one version: any occupancy change makes
+every outstanding key stale *by construction* (no explicit invalidation
+hooks, nothing to forget to call).  Because the counter only grows, entries
+from an exactly-restored ledger state are conservatively dropped too —
+correctness never depends on state comparison.  Ledger-independent
+predictors (the isolated surrogate: B̂(S) never changes while the params are
+fixed) opt out with ``versioned=False`` and keep their entries for the
+process lifetime (bounded by ``max_entries``).
+
+:class:`PredictorStats` is the one instrumentation record every predictor
+in the stack carries (``.stats``): model calls, cumulative predict time,
+its featurize/inference split, contention-wrapper overhead, degradation and
+cache-hit counters.  Legacy attribute names (``n_model_calls``,
+``predict_seconds``, ``n_capped``) remain readable/writable properties on
+the predictors themselves.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class PredictorStats:
+    """Shared instrumentation for every predictor in the dispatch stack."""
+
+    n_model_calls: int = 0        # candidates sent through a Transformer
+    predict_seconds: float = 0.0  # total wall time inside predict()
+    featurize_seconds: float = 0.0  # ... spent building token batches
+    infer_seconds: float = 0.0      # ... spent in jitted model applies
+    wrapper_seconds: float = 0.0    # contention-wrap overhead (excl. base)
+    n_capped: int = 0             # candidates whose estimate was degraded
+    cache_hits: int = 0
+    cache_misses: int = 0
+
+    def reset(self) -> None:
+        for f in dataclasses.fields(self):
+            setattr(self, f.name, f.default)
+
+    def as_dict(self) -> Dict[str, float]:
+        return dataclasses.asdict(self)
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.cache_hits + self.cache_misses
+        return self.cache_hits / total if total else 0.0
+
+    @staticmethod
+    def merged(*stats: "PredictorStats") -> "PredictorStats":
+        out = PredictorStats()
+        for s in stats:
+            for f in dataclasses.fields(PredictorStats):
+                setattr(out, f.name, getattr(out, f.name) + getattr(s, f.name))
+        return out
+
+
+def collect_stats(*predictors) -> PredictorStats:
+    """Merge the ``.stats`` of every distinct predictor in a chain (wrappers
+    expose their wrapped predictor as ``.base``; shared bases dedup by id)."""
+    seen = {}
+    for p in predictors:
+        while p is not None:
+            if id(p) in seen:
+                break
+            seen[id(p)] = p
+            p = getattr(p, "base", None)
+    return PredictorStats.merged(
+        *(p.stats for p in seen.values() if hasattr(p, "stats"))
+    )
+
+
+_UNVERSIONED = -1
+
+
+class PredictionCache:
+    """Memo of predictor outputs keyed by ``(subset, ledger version, mode)``.
+
+    One cache binds one ledger (or none).  Versioned entries live in a
+    window store that is cleared whenever the observed ledger version moves,
+    so stale keys never accumulate; unversioned (ledger-independent) entries
+    persist up to ``max_entries`` with oldest-first eviction.
+    ``wrap(predictor, mode)`` returns a :class:`CachedPredictor` view; any
+    number of predictors may share one cache under distinct mode tags.
+    """
+
+    def __init__(self, ledger=None, max_entries: int = 1 << 18):
+        self.ledger = ledger
+        self.max_entries = max_entries
+        self._static: Dict[Tuple, float] = {}
+        self._window: Dict[Tuple, float] = {}
+        self._window_version = _UNVERSIONED
+        self.stats = PredictorStats()  # aggregate hit/miss across wrappers
+
+    def version(self) -> int:
+        return self.ledger.version if self.ledger is not None else _UNVERSIONED
+
+    def wrap(self, predictor, mode: str, versioned: bool = True):
+        return CachedPredictor(self, predictor, mode, versioned=versioned)
+
+    def invalidate(self) -> None:
+        self._static.clear()
+        self._window.clear()
+
+    def __len__(self) -> int:
+        return len(self._static) + len(self._window)
+
+    # -- store selection ----------------------------------------------------
+
+    def store_for(self, versioned: bool) -> Dict[Tuple, float]:
+        if not versioned:
+            if len(self._static) >= self.max_entries:
+                # oldest-first eviction: drop the first-inserted half
+                for key in list(self._static)[: self.max_entries // 2]:
+                    del self._static[key]
+            return self._static
+        v = self.version()
+        if v != self._window_version:
+            # occupancy changed: every outstanding versioned entry is stale
+            self._window.clear()
+            self._window_version = v
+        return self._window
+
+
+class CachedPredictor:
+    """Predictor-protocol view over a :class:`PredictionCache`.
+
+    Exposes the same ``predict(list_of_subsets) -> np.ndarray`` protocol the
+    hybrid search consumes (plus ``predict_children`` when the wrapped
+    predictor has a fused elimination path), so it threads through
+    ``search.hybrid_search`` unchanged.  Unknown attributes delegate to the
+    wrapped predictor.
+    """
+
+    def __init__(self, cache: PredictionCache, base, mode: str,
+                 versioned: bool = True):
+        self.cache = cache
+        self.base = base
+        self.mode = mode
+        self.versioned = versioned
+        self.stats = PredictorStats()  # this wrapper's hit/miss counters
+
+    def __getattr__(self, name):
+        return getattr(self.base, name)
+
+    def _lookup(self, subsets: Sequence[Sequence[int]]):
+        store = self.cache.store_for(self.versioned)
+        keys = [(tuple(s), self.mode) for s in subsets]
+        out = np.empty((len(subsets),), np.float64)
+        miss = []
+        for i, key in enumerate(keys):
+            val = store.get(key)
+            if val is None:
+                miss.append(i)
+            else:
+                out[i] = val
+        return store, keys, out, miss
+
+    def _account(self, n_hits: int, n_misses: int) -> None:
+        for s in (self.stats, self.cache.stats):
+            s.cache_hits += n_hits
+            s.cache_misses += n_misses
+
+    def predict(self, subsets: Sequence[Sequence[int]]) -> np.ndarray:
+        store, keys, out, miss = self._lookup(subsets)
+        if miss:
+            preds = np.asarray(
+                self.base.predict([subsets[i] for i in miss]), np.float64
+            )
+            for i, p in zip(miss, preds):
+                out[i] = p
+                store[keys[i]] = float(p)
+        self._account(len(subsets) - len(miss), len(miss))
+        return out
+
+    def predict_children(self, parent: Sequence[int]) -> np.ndarray:
+        """One elimination round, deduplicated against the cache: a full
+        miss runs the wrapped predictor's fused featurize+predict path; any
+        hit degrades only the missing children to the ordinary batch
+        predict."""
+        parent = list(parent)
+        children = [parent[:i] + parent[i + 1:] for i in range(len(parent))]
+        store, keys, out, miss = self._lookup(children)
+        if miss:
+            if len(miss) == len(children) and hasattr(
+                self.base, "predict_children"
+            ):
+                preds = np.asarray(
+                    self.base.predict_children(parent), np.float64
+                )
+            else:
+                preds = np.empty((len(children),), np.float64)
+                got = np.asarray(
+                    self.base.predict([children[i] for i in miss]), np.float64
+                )
+                preds[miss] = got
+            for i in miss:
+                out[i] = preds[i]
+                store[keys[i]] = float(out[i])
+        self._account(len(children) - len(miss), len(miss))
+        return out
+
+    def predict_one(self, subset: Sequence[int]) -> float:
+        return float(self.predict([subset])[0])
+
+
+def cached_contention_predictor(
+    cluster,
+    base,
+    ledger,
+    mode: str = "analytic",
+    contended=None,
+    use_cache: bool = True,
+    vectorized: bool = True,
+    stats_sink: Optional[PredictorStats] = None,
+):
+    """The standard fast-path predictor chain for one ledger: a
+    :class:`~repro.core.contention.ContentionAwarePredictor` over ``base``,
+    wrapped in a ledger-versioned cache.  ``use_cache=False`` /
+    ``vectorized=False`` reproduce the pre-PR path (the before-side of the
+    throughput bench).  ``stats_sink`` substitutes a caller-owned
+    :class:`PredictorStats` for the chain's counters — scratch searches
+    (joint orders, defrag proposals) pass their dispatcher's wrapper stats
+    so per-phase breakdowns do not lose the throwaway wrappers' time."""
+    from repro.core.contention import ContentionAwarePredictor
+
+    inner = ContentionAwarePredictor(
+        cluster, base, ledger, mode=mode, contended=contended,
+        vectorized=vectorized,
+    )
+    if stats_sink is not None:
+        inner.stats = stats_sink
+    if not use_cache:
+        return inner
+    cached = PredictionCache(ledger).wrap(inner, mode=mode, versioned=True)
+    if stats_sink is not None:
+        cached.stats = stats_sink
+    return cached
+
+
+class GradingCache:
+    """Ledger-versioned memo over ``sim.true_bandwidth(S, ledger)`` — the
+    grading-side twin of :class:`PredictionCache`, for the trial-move /
+    defrag machinery that scores placements with the simulator rather than
+    a predictor.  Duck-types the one method those paths consume; keys carry
+    the ledger's ``(uid, version)`` so scratch copies never collide."""
+
+    def __init__(self, sim, max_entries: int = 1 << 17):
+        self.sim = sim
+        self.max_entries = max_entries
+        self._memo: Dict[Tuple, float] = {}
+        self.stats = PredictorStats()
+
+    def true_bandwidth(self, subset, ledger=None) -> float:
+        if ledger is None:
+            key = (tuple(sorted(subset)), _UNVERSIONED, _UNVERSIONED)
+        else:
+            key = (tuple(sorted(subset)), ledger.uid, ledger.version)
+        val = self._memo.get(key)
+        if val is None:
+            self.stats.cache_misses += 1
+            val = self.sim.true_bandwidth(subset, ledger=ledger)
+            if len(self._memo) >= self.max_entries:
+                for k in list(self._memo)[: self.max_entries // 2]:
+                    del self._memo[k]
+            self._memo[key] = val
+        else:
+            self.stats.cache_hits += 1
+        return val

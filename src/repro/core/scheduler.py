@@ -59,6 +59,7 @@ from repro.core.defrag import (  # shared migration economics (moved there)
     migration_cost,
 )
 from repro.core.intra_host import IntraHostTables
+from repro.core.predict_cache import GradingCache
 from repro.core.tenancy import Allocation, JobLedger
 
 Subset = List[int]
@@ -252,6 +253,7 @@ class AdmissionScheduler:
         config: Optional[SchedulerConfig] = None,
         rng: Optional[np.random.Generator] = None,
         harvester=None,
+        grade: bool = True,
     ):
         self.cluster = cluster
         self.sim = sim
@@ -259,10 +261,19 @@ class AdmissionScheduler:
         self.dispatcher = dispatcher
         self.config = config or SchedulerConfig()
         self.rng = rng
+        # Fast-path grading memo: trial moves and defrag planning re-grade
+        # the same (subset, occupancy) pairs; keys carry the ledger's
+        # (uid, version) so every admit/release invalidates by construction.
+        self.grading_cache = GradingCache(sim)
         # Optional telemetry sink (contended_dataset.TelemetryHarvester):
         # every graded admission is also recorded as a (subset, ledger,
         # contended-bw) observation for the online fine-tuning loop.
         self.harvester = harvester
+        # grade=False skips the per-admission exact-Oracle baseline (gbe
+        # becomes NaN) — evaluation apparatus, not dispatch work; the
+        # throughput bench times replays without it so admissions/sec
+        # measures the dispatch path, not the grader.
+        self.grade = grade
         self.records: List[TenantRecord] = []
         self.migrations: List[MigrationEvent] = []
         self._defrag_spent = 0                 # moves charged to the budget
@@ -514,6 +525,7 @@ class AdmissionScheduler:
             ),
             contended=getattr(self.dispatcher, "contended_predictor", None),
             frag_weight=getattr(self.dispatcher, "frag_weight", 0.0),
+            **self._scratch_search_kwargs(),
         )
         by_id = {j.job_id: (j, ov) for j, ov in zip(jobs, overtakes)}
         for p in plan.placements:
@@ -526,10 +538,13 @@ class AdmissionScheduler:
         if self.config.defrag:
             self._maybe_make_room(job.k, t)
         ledger = self.dispatcher.ledger
-        _, opt_bw = baselines.oracle_dispatch(
-            self.cluster, self.sim, self.tables, ledger.available(), job.k,
-            ledger=ledger,
-        )
+        if self.grade:
+            _, opt_bw = baselines.oracle_dispatch(
+                self.cluster, self.sim, self.tables, ledger.available(),
+                job.k, ledger=ledger,
+            )
+        else:
+            opt_bw = float("nan")
         n_live = len(ledger)
         alloc = self.dispatcher.admit(job.job_id, job.k, rng=self.rng)
         self._grade(job, t, alloc, opt_bw, n_live, overtakes, batch_size)
@@ -546,9 +561,13 @@ class AdmissionScheduler:
                 f"joint plan produced an invalid allocation for "
                 f"{job.job_id!r}: {subset}"
             )
-        _, opt_bw = baselines.oracle_dispatch(
-            self.cluster, self.sim, self.tables, avail, job.k, ledger=ledger,
-        )
+        if self.grade:
+            _, opt_bw = baselines.oracle_dispatch(
+                self.cluster, self.sim, self.tables, avail, job.k,
+                ledger=ledger,
+            )
+        else:
+            opt_bw = float("nan")
         n_live = len(ledger)
         alloc = ledger.admit(job.job_id, subset)
         self._grade(job, t, alloc, opt_bw, n_live, overtakes, batch_size)
@@ -560,8 +579,8 @@ class AdmissionScheduler:
         ledger = self.dispatcher.ledger
         # post-admit grading sees the pre-admit contention: contends()
         # self-excludes the job's own (GPU-overlapping) ledger entry
-        bw = self.sim.true_bandwidth(alloc.gpus, ledger=ledger)
-        iso = self.sim.true_bandwidth(alloc.gpus)
+        bw = self.grading_cache.true_bandwidth(alloc.gpus, ledger=ledger)
+        iso = self.grading_cache.true_bandwidth(alloc.gpus)
         if self.harvester is not None:
             self.harvester.observe(ledger, alloc.gpus, bw)
         shared = sum(
@@ -591,9 +610,18 @@ class AdmissionScheduler:
         other live job's degraded bandwidth drops."""
         ledger = self.dispatcher.ledger
         candidates = [a for a in ledger.jobs() if a.cross_host]
+        if not candidates:
+            return
+        # every candidate trials against the same (exactly restored) ledger
+        # state: grade the pre-move baseline once, not once per candidate
+        before = {
+            a.job_id: self.grading_cache.true_bandwidth(a.gpus, ledger=ledger)
+            for a in ledger.jobs()
+        }
+        frag_before = defrag_mod.fragmentation_metrics(self.cluster, ledger)
         best: Optional[defrag_mod.MoveEval] = None
         for alloc in list(candidates):
-            ev = self._trial_move(alloc)
+            ev = self._trial_move(alloc, before, frag_before)
             if ev is None:
                 continue
             if best is None or ev.self_gain > best.self_gain:
@@ -611,25 +639,46 @@ class AdmissionScheduler:
             rec.migrations += 1
 
     def _trial_move(
-        self, alloc: Allocation
+        self, alloc: Allocation, before=None, frag_before=None
     ) -> Optional["defrag_mod.MoveEval"]:
         """Evaluate re-placing one live job via the shared trial-move
         helper (:func:`repro.core.defrag.evaluate_move` — gain rule,
         no-harm check, exact ledger restore); the re-dispatch hook's
-        objective is the moved job's own net gain.
+        objective is the moved job's own net gain.  Grading runs through
+        the ledger-versioned :class:`~repro.core.predict_cache.GradingCache`
+        and reuses the caller's once-per-release ``before`` baseline.
 
         Returns the :class:`~repro.core.defrag.MoveEval` or None when the
         move does not pay or would hurt a co-tenant."""
         return defrag_mod.evaluate_move(
-            self.sim, self.dispatcher.ledger, alloc,
+            self.grading_cache, self.dispatcher.ledger, alloc,
             lambda led, avail, k: self.dispatcher.dispatch(
                 avail, k, rng=self.rng
             ),
             self.config.migration_cost_per_gpu,
             min_self_gain=1e-9,  # cheap reject before co-tenant grading
+            before=before, frag_before=frag_before,
         )
 
     # -- defragmentation triggers --------------------------------------------
+
+    def _scratch_search_kwargs(self) -> Dict:
+        """Fast-path settings for scratch searches (joint plans, defrag
+        proposals): follow the dispatcher's own cache/vectorized settings
+        so a fast-path-off dispatcher replays the pre-PR path end to end
+        (the throughput bench's before side), and sink the throwaway
+        wrappers' stats into the dispatcher's contention wrapper so the
+        per-phase breakdown keeps their time."""
+        d = self.dispatcher
+        wrapper = getattr(d, "contention_predictor", None)
+        return dict(
+            use_cache=(
+                getattr(d, "prediction_cache", None) is not None
+                or getattr(d, "iso_cache", None) is not None
+            ),
+            vectorized=getattr(wrapper, "vectorized", True),
+            stats_sink=wrapper.stats if wrapper is not None else None,
+        )
 
     def _defrag_proposer(self) -> defrag_mod.ProposalFan:
         """How the planner re-places movers: best-fit consolidation slots
@@ -644,6 +693,7 @@ class AdmissionScheduler:
                 contention_mode=getattr(d, "contention_mode", "analytic"),
                 contended=getattr(d, "contended_predictor", None),
                 frag_weight=cfg.frag_weight,
+                **self._scratch_search_kwargs(),
             )
         return lambda led, avail, k: [d.dispatch(avail, k, rng=self.rng)]
 
@@ -656,7 +706,8 @@ class AdmissionScheduler:
             return  # trace-level migration budget exhausted
         ledger = self.dispatcher.ledger
         plan = defrag_mod.plan_defrag(
-            self.cluster, self.sim, ledger, cfg, self._defrag_proposer(),
+            self.cluster, self.grading_cache, ledger, cfg,
+            self._defrag_proposer(),
             target_k=target_k,
             budget=min(cfg.max_moves_per_pass, remaining),
         )

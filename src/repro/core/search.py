@@ -89,20 +89,48 @@ def best_single_host(
 # EHA — Equilibrium-driven Heuristic Algorithm (Algorithm 1)
 # ---------------------------------------------------------------------------
 
+def _distinct_permutations(items: Sequence[int]):
+    """Lazily yield the distinct permutations of a multiset in ascending
+    lexicographic order (Narayana next-permutation with duplicate skipping).
+
+    Replaces ``sorted(set(itertools.permutations(items)))``, which eagerly
+    materializes all m! permutations before deduplication — an O(m!)
+    landmine for m beyond ~10 hosts (k=64 over 2-GPU hosts makes m=32, which
+    would never return) even though the caller only ever consumes the first
+    few distinct entries.
+    """
+    arr = sorted(items)
+    m = len(arr)
+    while True:
+        yield tuple(arr)
+        i = m - 2
+        while i >= 0 and arr[i] >= arr[i + 1]:
+            i -= 1
+        if i < 0:
+            return
+        j = m - 1
+        while arr[j] <= arr[i]:
+            j -= 1
+        arr[i], arr[j] = arr[j], arr[i]
+        arr[i + 1:] = arr[:i:-1]
+
+
 def balanced_count_assignments(
     capacities: Sequence[int], k: int, max_assignments: int = 16
 ) -> List[Tuple[int, ...]]:
     """Distinct near-even distributions of k over hosts with capacities.
 
     E.g. k=8 over 3 hosts -> permutations of (3,3,2) that respect capacity.
-    Capacity overflow is re-waterfilled onto the remaining hosts.
+    Capacity overflow is re-waterfilled onto the remaining hosts.  The
+    permutation stream is lazy (:func:`_distinct_permutations`), so the
+    ``max_assignments`` cap bounds the work even for many hosts.
     """
     m = len(capacities)
     base, rem = divmod(k, m)
     shape = [base + 1] * rem + [base] * (m - rem)
     out: List[Tuple[int, ...]] = []
     seen = set()
-    for perm in sorted(set(itertools.permutations(shape))):
+    for perm in _distinct_permutations(shape):
         counts = list(perm)
         # re-waterfill overflow (a host's share may exceed its availability)
         overflow = 0
@@ -238,10 +266,18 @@ def pts_search(
             _, hid, _ = single
             s_curr = sorted(by_host[hid])
 
-    # Iterative elimination |S| -> k, one GPU at a time.
+    # Iterative elimination |S| -> k, one GPU at a time.  Each round is ONE
+    # fused featurize+predict call when the predictor has an incremental
+    # child path (predict_children: the child batch is the parent's token
+    # matrix with a patched row per child, deduplicated against the
+    # prediction cache); the plain batched predict is the fallback.
+    fused = hasattr(predictor, "predict_children")
     while len(s_curr) > k:
         children = [s_curr[:i] + s_curr[i + 1:] for i in range(len(s_curr))]
-        preds = predictor.predict(children)
+        if fused:
+            preds = predictor.predict_children(s_curr)
+        else:
+            preds = predictor.predict(children)
         n_cands += len(children)
         s_curr = children[int(np.argmax(_penalized(preds, children, frag_penalty)))]
 
@@ -333,6 +369,9 @@ def joint_hybrid_search(
     contention_mode: str = "analytic",
     contended=None,
     frag_weight: float = 0.0,
+    use_cache: bool = True,
+    vectorized: bool = True,
+    stats_sink=None,
 ) -> JointResult:
     """Place a batch of ``(job_id, k)`` requests *jointly* against a ledger.
 
@@ -357,9 +396,17 @@ def joint_hybrid_search(
     (:func:`repro.core.defrag.make_frag_penalty`) against the *scratch*
     ledger, so later batch-mates are steered away from cracking open hosts
     their earlier mates left clean.
+
+    ``use_cache`` (the default) wraps each order's contention-aware
+    predictor in a scratch-ledger-versioned prediction cache
+    (:mod:`repro.core.predict_cache`), so the final whole-plan re-scoring
+    and the overlap between per-job EHA/PTS candidate sets are free; pass a
+    cached *base* ``predictor`` (the dispatcher's ledger-independent
+    isolated memo) to additionally share the expensive isolated inference
+    across candidate orders.
     """
-    from repro.core.contention import ContentionAwarePredictor
     from repro.core.defrag import make_frag_penalty
+    from repro.core.predict_cache import cached_contention_predictor
 
     if not requests:
         raise ValueError("joint_hybrid_search needs >=1 request")
@@ -383,9 +430,11 @@ def joint_hybrid_search(
         for a in ledger.jobs():
             scratch.admit(a.job_id, a.gpus)
         pred = (
-            ContentionAwarePredictor(
+            cached_contention_predictor(
                 cluster, predictor, scratch,
                 mode=contention_mode, contended=contended,
+                use_cache=use_cache, vectorized=vectorized,
+                stats_sink=stats_sink,
             )
             if contention_aware else predictor
         )

@@ -35,6 +35,7 @@ from repro.core import features as feat_lib
 from repro.core.bandwidth_sim import BW_SCALE
 from repro.core.cluster import Cluster
 from repro.core.intra_host import IntraHostTables
+from repro.core.predict_cache import PredictorStats
 
 PyTree = Any
 
@@ -203,6 +204,28 @@ def apply_naive(params: PyTree, ids: jnp.ndarray, mask: jnp.ndarray):
     return _encoder(params["trunk"], x, mask)
 
 
+# Module-level jitted apply+decode functions, SHARED by every predictor
+# instance: jax's compilation cache is keyed on the function object, so a
+# per-predictor ``jax.jit(...)`` closure would re-trace and re-compile every
+# (B, H) shape bucket for every fresh predictor — benchmarks and scratch
+# searches build many.  decode_bw is fused in (elementwise, bit-identical)
+# so each call costs exactly one dispatch + one sync.
+
+@jax.jit
+def _apply_hierarchical_bw(params, feats, mask):
+    return decode_bw(apply_hierarchical(params, feats, mask))
+
+
+@jax.jit
+def _apply_naive_bw(params, ids, mask):
+    return decode_bw(apply_naive(params, ids, mask))
+
+
+@jax.jit
+def _apply_contended_bw(params, feats, mask):
+    return decode_bw(apply_contended(params, feats, mask))
+
+
 def apply_contended(params: PyTree, feats: jnp.ndarray, mask: jnp.ndarray):
     """feats: [B, T, N_CONTENDED_FEATURES], mask: [B, T] -> normalized bw [B].
 
@@ -231,7 +254,13 @@ class SurrogatePredictor:
     Stage-2 Transformer for multi-host ones (Fig. 4).
 
     Batched evaluation pads the batch to a power of two so the jitted apply
-    function compiles only O(log B_max) times.
+    function compiles only O(log B_max) times; with ``bucket_shapes`` (the
+    default) the *token* dimension is likewise bucketed to the power-of-two
+    cover of the batch's max participating-host count instead of always
+    ``cluster.n_hosts`` — padded tokens are exactly masked out, so the
+    pinned trace goldens select identical subsets (``tests/test_fast_path``).
+    ``vectorized=False`` falls back to the legacy per-candidate loop
+    featurizer (the throughput bench's before-side).
     """
 
     def __init__(
@@ -242,19 +271,36 @@ class SurrogatePredictor:
         naive: bool = False,
         max_k: Optional[int] = None,
         host_norm: bool = True,
+        vectorized: bool = True,
+        bucket_shapes: bool = True,
     ):
         self.cluster = cluster
         self.tables = tables
         self.params = params
         self.naive = naive
         self.host_norm = host_norm
+        self.vectorized = vectorized
+        self.bucket_shapes = bucket_shapes
         self.max_k = max_k or cluster.n_gpus
-        self.n_model_calls = 0      # instrumentation for Fig. 8
-        self.predict_seconds = 0.0  # cumulative surrogate-inference time
-        if naive:
-            self._apply = jax.jit(apply_naive)
-        else:
-            self._apply = jax.jit(apply_hierarchical)
+        self.stats = PredictorStats()  # instrumentation for Fig. 8
+        self._apply = _apply_naive_bw if naive else _apply_hierarchical_bw
+
+    # legacy instrumentation names (benchmarks read/reset these directly)
+    @property
+    def n_model_calls(self) -> int:
+        return self.stats.n_model_calls
+
+    @n_model_calls.setter
+    def n_model_calls(self, v: int) -> None:
+        self.stats.n_model_calls = v
+
+    @property
+    def predict_seconds(self) -> float:
+        return self.stats.predict_seconds
+
+    @predict_seconds.setter
+    def predict_seconds(self, v: float) -> None:
+        self.stats.predict_seconds = v
 
     # hierarchical stage dispatch --------------------------------------------
 
@@ -274,31 +320,101 @@ class SurrogatePredictor:
             preds = self._predict_model(model_subsets)
             for i, p in zip(model_idx, preds):
                 out[i] = p
-        self.predict_seconds += time.time() - t0
+        self.stats.predict_seconds += time.time() - t0
         return out
 
     def predict_one(self, subset: Sequence[int]) -> float:
         return float(self.predict([subset])[0])
 
+    def predict_children(self, parent: Sequence[int]) -> np.ndarray:
+        """Fused featurize+predict of one PTS elimination round: all
+        ``|parent|`` remove-one children in parent order, with the child
+        token batch assembled incrementally from the parent's per-host
+        grids (:func:`repro.core.features.featurize_children` machinery)
+        and single-host children answered by Stage-1 gathers — no
+        per-candidate Python.  Predictions are bit-identical to
+        ``predict(children)``: same channels, same shape buckets."""
+        parent = list(parent)
+        n = len(parent)
+        if self.naive or n < 2 or not self.vectorized:
+            # vectorized=False is the pre-PR reference: every child goes
+            # through the ordinary batch predict (loop featurizer)
+            return self.predict(
+                [parent[:i] + parent[i + 1:] for i in range(n)]
+            )
+        t0 = time.time()
+        arrays = feat_lib.host_arrays(self.cluster, self.tables)
+        bits, counts = feat_lib.child_bits_counts(arrays, parent)
+        part = counts > 0
+        n_part = part.sum(axis=1)
+        out = np.zeros((n,), np.float64)
+        for i in np.nonzero(n_part == 1)[0]:
+            h = int(np.argmax(part[i]))
+            out[i] = arrays.intra_bw[h, bits[i, h]]  # Stage-1: exact
+        model = np.nonzero(n_part > 1)[0]
+        if len(model):
+            ks = np.full((len(model),), n - 1, np.int64)
+            tokens = feat_lib._isolated_channels(
+                arrays, bits[model], counts[model], ks, self.host_norm
+            )
+            feats, mask = feat_lib._pack_tokens(
+                tokens, counts[model], self.cluster.n_hosts,
+                feat_lib.N_FEATURES,
+            )
+            self.stats.featurize_seconds += time.time() - t0
+            out[model] = self._apply_model(feats, mask)
+        else:
+            self.stats.featurize_seconds += time.time() - t0
+        self.stats.predict_seconds += time.time() - t0
+        return out
+
     def _predict_model(self, subsets: Sequence[Sequence[int]]) -> np.ndarray:
-        B = len(subsets)
-        Bp = _round_up_pow2(max(B, 1))
         if self.naive:
+            t0 = time.time()
+            B = len(subsets)
+            Bp = _round_up_pow2(max(B, 1))
             ids, mask = feat_lib.featurize_gpu_ids(self.cluster, subsets, self.max_k)
             ids = np.pad(ids, ((0, Bp - B), (0, 0)))
             mask_p = np.pad(mask, ((0, Bp - B), (0, 0)))
             mask_p[B:, 0] = 1.0  # keep padded rows non-degenerate
+            self.stats.featurize_seconds += time.time() - t0
+            t1 = time.time()
             preds = self._apply(self.params, jnp.asarray(ids), jnp.asarray(mask_p))
-        else:
-            feats, mask = feat_lib.featurize_batch(
-                self.cluster, self.tables, subsets, host_norm=self.host_norm
-            )
-            feats = np.pad(feats, ((0, Bp - B), (0, 0), (0, 0)))
-            mask_p = np.pad(mask, ((0, Bp - B), (0, 0)))
-            mask_p[B:, 0] = 1.0
-            preds = self._apply(self.params, jnp.asarray(feats), jnp.asarray(mask_p))
-        self.n_model_calls += B
-        return np.asarray(decode_bw(preds))[:B]
+            self.stats.n_model_calls += B
+            decoded = np.asarray(preds)[:B]
+            self.stats.infer_seconds += time.time() - t1
+            return decoded
+        t0 = time.time()
+        featurize = (
+            feat_lib.featurize_batch if self.vectorized
+            else feat_lib.featurize_batch_loop
+        )
+        feats, mask = featurize(
+            self.cluster, self.tables, subsets, host_norm=self.host_norm
+        )
+        self.stats.featurize_seconds += time.time() - t0
+        return self._apply_model(feats, mask)
+
+    def _apply_model(self, feats: np.ndarray, mask: np.ndarray) -> np.ndarray:
+        """Bucket + pad + jitted apply, shared by the batch and fused-round
+        paths so the two produce identical floats for identical batches."""
+        t1 = time.time()
+        B = feats.shape[0]
+        if self.bucket_shapes:
+            used = int(mask.sum(axis=1).max()) if B else 1
+            H = _round_up_pow2(max(used, 1))
+            if H < feats.shape[1]:
+                feats = feats[:, :H]
+                mask = mask[:, :H]
+        Bp = _round_up_pow2(max(B, 1))
+        feats = np.pad(feats, ((0, Bp - B), (0, 0), (0, 0)))
+        mask_p = np.pad(mask, ((0, Bp - B), (0, 0)))
+        mask_p[B:, 0] = 1.0  # keep padded rows non-degenerate
+        preds = self._apply(self.params, jnp.asarray(feats), jnp.asarray(mask_p))
+        self.stats.n_model_calls += B
+        decoded = np.asarray(preds)[:B]
+        self.stats.infer_seconds += time.time() - t1
+        return decoded
 
 
 # ---------------------------------------------------------------------------
@@ -326,6 +442,8 @@ class ContendedSurrogatePredictor:
         max_tokens: Optional[int] = None,
         include_contenders: bool = True,
         host_norm: bool = True,
+        vectorized: bool = True,
+        bucket_shapes: bool = True,
     ):
         self.cluster = cluster
         self.tables = tables
@@ -333,9 +451,26 @@ class ContendedSurrogatePredictor:
         self.max_tokens = max_tokens or feat_lib.default_max_tokens(cluster)
         self.include_contenders = include_contenders
         self.host_norm = host_norm
-        self.n_model_calls = 0
-        self.predict_seconds = 0.0
-        self._apply = jax.jit(apply_contended)
+        self.vectorized = vectorized
+        self.bucket_shapes = bucket_shapes
+        self.stats = PredictorStats()
+        self._apply = _apply_contended_bw
+
+    @property
+    def n_model_calls(self) -> int:
+        return self.stats.n_model_calls
+
+    @n_model_calls.setter
+    def n_model_calls(self, v: int) -> None:
+        self.stats.n_model_calls = v
+
+    @property
+    def predict_seconds(self) -> float:
+        return self.stats.predict_seconds
+
+    @predict_seconds.setter
+    def predict_seconds(self, v: float) -> None:
+        self.stats.predict_seconds = v
 
     def predict(self, subsets: Sequence[Sequence[int]], ledger) -> np.ndarray:
         """Contended B̂ for a batch of allocations against one live ledger."""
@@ -356,22 +491,37 @@ class ContendedSurrogatePredictor:
                 model_idx.append(i)
                 model_pairs.append((s, ledger))
         if model_pairs:
+            tf = time.time()
             B = len(model_pairs)
             Bp = _round_up_pow2(B)
-            feats, mask = feat_lib.featurize_contended_batch(
+            featurize = (
+                feat_lib.featurize_contended_batch if self.vectorized
+                else feat_lib.featurize_contended_batch_loop
+            )
+            feats, mask = featurize(
                 self.cluster, self.tables, model_pairs,
                 max_tokens=self.max_tokens,
                 include_contenders=self.include_contenders,
                 host_norm=self.host_norm,
             )
+            if self.bucket_shapes:
+                used = int(mask.sum(axis=1).max())
+                T = _round_up_pow2(max(used, 1))
+                if T < feats.shape[1]:
+                    feats = feats[:, :T]
+                    mask = mask[:, :T]
             feats = np.pad(feats, ((0, Bp - B), (0, 0), (0, 0)))
             mask_p = np.pad(mask, ((0, Bp - B), (0, 0)))
             mask_p[B:, 0] = 1.0
+            self.stats.featurize_seconds += time.time() - tf
+            ti = time.time()
             preds = self._apply(
                 self.params, jnp.asarray(feats), jnp.asarray(mask_p)
             )
-            self.n_model_calls += B
-            for i, p in zip(model_idx, np.asarray(decode_bw(preds))[:B]):
+            self.stats.n_model_calls += B
+            decoded = np.asarray(preds)[:B]
+            self.stats.infer_seconds += time.time() - ti
+            for i, p in zip(model_idx, decoded):
                 out[i] = p
-        self.predict_seconds += time.time() - t0
+        self.stats.predict_seconds += time.time() - t0
         return out

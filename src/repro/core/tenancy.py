@@ -79,8 +79,18 @@ class JobLedger:
     Invariants (enforced on every mutation):
       * live allocations are pairwise GPU-disjoint;
       * ``available() == all_gpus - union(live allocations)``;
-      * ``release(admit(j, S).job_id)`` restores the exact prior state.
+      * ``release(admit(j, S).job_id)`` restores the exact prior state
+        (except the :attr:`version` counter, which only ever grows).
+
+    ``version`` is a monotonic counter bumped by every successful admit and
+    release — the cache-invalidation token of the dispatch fast path
+    (:mod:`repro.core.predict_cache`): any memo keyed by ``(subset,
+    version)`` is automatically stale the moment occupancy changes.  ``uid``
+    distinguishes ledger *instances* (scratch copies start their own version
+    space), so version-keyed entries from different ledgers never collide.
     """
+
+    _next_uid = 0
 
     def __init__(self, cluster: Cluster):
         self.cluster = cluster
@@ -90,6 +100,14 @@ class JobLedger:
         self._host_jobs: Dict[int, Set[str]] = {
             h.host_id: set() for h in cluster.hosts
         }
+        self._version = 0
+        self.uid = JobLedger._next_uid
+        JobLedger._next_uid += 1
+
+    @property
+    def version(self) -> int:
+        """Monotonic occupancy version: bumped on every admit/release."""
+        return self._version
 
     # -- lifecycle ----------------------------------------------------------
 
@@ -116,6 +134,7 @@ class JobLedger:
             self._owner[g] = job_id
         for hid in host_ids:
             self._host_jobs[hid].add(job_id)
+        self._version += 1
         return alloc
 
     def release(self, job_id: str) -> Allocation:
@@ -127,6 +146,7 @@ class JobLedger:
             del self._owner[g]
         for hid in alloc.host_ids:
             self._host_jobs[hid].discard(job_id)
+        self._version += 1
         return alloc
 
     # -- queries ------------------------------------------------------------

@@ -1,0 +1,513 @@
+"""Dispatch fast path (ISSUE 5): bit-identity, cache invalidation, perms.
+
+The load-bearing guarantees:
+
+* the vectorized featurizers and batched analytic caps are **bit-identical**
+  (exact array equality) to the legacy loop implementations;
+* with the prediction cache and every vectorized path enabled (the new
+  defaults), searches and pinned scheduler-trace replays select
+  **byte-identical subsets** vs the all-off pre-PR configuration;
+* the ledger version counter bumps on every admit/release and versioned
+  cache entries invalidate by construction (property-based, hypothesis with
+  seeded fallback);
+* the lazy distinct-multiset-permutation generator equals the old
+  ``sorted(set(itertools.permutations(...)))`` on small inputs and respects
+  ``max_assignments`` without enumeration on large ones.
+"""
+
+import itertools
+import time
+
+import jax
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    from _hypothesis_fallback import given, settings, st
+
+    HAVE_HYPOTHESIS = False
+
+import repro.core as core
+from repro.core import contention as ct
+from repro.core import features as feat
+from repro.core import search
+from repro.core import surrogate as surr
+from repro.core.predict_cache import (
+    GradingCache,
+    PredictionCache,
+    PredictorStats,
+)
+from repro.core.search import _distinct_permutations, balanced_count_assignments
+from repro.core.tenancy import JobLedger
+
+
+@pytest.fixture(scope="module", params=["H100", "Het-4Mix"])
+def stack(request):
+    cl = core.PAPER_CLUSTERS[request.param]()
+    sim = core.BandwidthSimulator(cl)
+    tables = core.IntraHostTables(cl, sim)
+    params = surr.init_hierarchical_params(jax.random.PRNGKey(0))
+    return cl, sim, tables, params
+
+
+def _tenanted_ledger(cl):
+    led = JobLedger(cl)
+    led.admit("a", [0, 1, cl.hosts[1].gpu_ids[0]])
+    led.admit("b", [cl.hosts[1].gpu_ids[1], cl.hosts[-1].gpu_ids[0]])
+    led.admit("s", [cl.hosts[0].gpu_ids[5]])  # single-host: occupancy only
+    return led
+
+
+# ---------------------------------------------------------------------------
+# Vectorized featurization == loop featurization, bit for bit
+# ---------------------------------------------------------------------------
+
+def test_vectorized_featurizers_bit_identical(stack):
+    cl, sim, tables, _ = stack
+    subs = sim.sample_allocations(30, np.random.default_rng(0),
+                                  multi_host_only=False)
+    subs += [[0], [0, 1], list(range(cl.n_gpus))]
+    for hn in (True, False):
+        f1, m1 = feat.featurize_batch_loop(cl, tables, subs, host_norm=hn)
+        f2, m2 = feat.featurize_batch(cl, tables, subs, host_norm=hn)
+        assert np.array_equal(f1, f2) and np.array_equal(m1, m2)
+    led = _tenanted_ledger(cl)
+    busy = led.busy()
+    pairs = [(s, led) for s in subs if busy.isdisjoint(s)]
+    pairs += [(s, None) for s in subs[:5]]
+    pairs += [(s, JobLedger(cl)) for s in subs[:5]]       # empty ledger
+    pairs += [(list(led.allocation("a").gpus), led)]       # self-overlap
+    for inc in (True, False):
+        f1, m1 = feat.featurize_contended_batch_loop(
+            cl, tables, pairs, include_contenders=inc
+        )
+        f2, m2 = feat.featurize_contended_batch(
+            cl, tables, pairs, include_contenders=inc
+        )
+        assert np.array_equal(f1, f2) and np.array_equal(m1, m2)
+    # truncation parity under a tight token budget
+    f1, m1 = feat.featurize_contended_batch_loop(
+        cl, tables, pairs, max_tokens=cl.n_hosts
+    )
+    f2, m2 = feat.featurize_contended_batch(
+        cl, tables, pairs, max_tokens=cl.n_hosts
+    )
+    assert np.array_equal(f1, f2) and np.array_equal(m1, m2)
+
+
+def test_featurize_children_bit_identical(stack):
+    cl, sim, tables, _ = stack
+    rng = np.random.default_rng(1)
+    for _ in range(5):
+        k = int(rng.integers(2, cl.n_gpus + 1))
+        parent = sorted(rng.choice(cl.n_gpus, size=k, replace=False).tolist())
+        kids = [parent[:i] + parent[i + 1:] for i in range(len(parent))]
+        f1, m1 = feat.featurize_batch_loop(cl, tables, kids)
+        f2, m2 = feat.featurize_children(cl, tables, parent)
+        assert np.array_equal(f1, f2) and np.array_equal(m1, m2)
+
+
+def test_featurize_one_bounds_check(stack):
+    """A subset spanning more hosts than max_hosts raises the descriptive
+    ValueError (used to die with a bare IndexError)."""
+    cl, sim, tables, _ = stack
+    spread = [h.gpu_ids[0] for h in cl.hosts]  # one GPU per host
+    with pytest.raises(ValueError, match="spans"):
+        feat.featurize_one(cl, tables, spread, max_hosts=cl.n_hosts - 1)
+    with pytest.raises(ValueError, match="spans"):
+        feat.featurize_batch(cl, tables, [spread], max_hosts=cl.n_hosts - 1)
+    with pytest.raises(ValueError, match="spans"):
+        feat.featurize_contended_one(
+            cl, tables, spread, None, max_tokens=cl.n_hosts - 1
+        )
+
+
+# ---------------------------------------------------------------------------
+# Batched analytic caps == scalar caps, bit for bit
+# ---------------------------------------------------------------------------
+
+def test_batched_caps_bit_identical(stack):
+    cl, sim, tables, _ = stack
+    led = _tenanted_ledger(cl)
+    rng = np.random.default_rng(2)
+    free = sorted(set(range(cl.n_gpus)) - led.busy())
+    subs = [[free[0]]]
+    for _ in range(40):
+        k = int(rng.integers(1, min(12, len(free)) + 1))
+        subs.append(sorted(rng.choice(free, size=k, replace=False).tolist()))
+    subs.append(list(led.allocation("a").gpus))  # re-grading a live job
+    cross = led.cross_jobs_by_host()
+    loop = np.asarray([ct._cap_from_snapshot(cl, cross, s) for s in subs])
+    vec = ct._caps_from_snapshot_batched(cl, cross, subs)
+    assert np.array_equal(loop, vec)
+
+
+def test_contention_wrapper_vectorized_equals_loop(stack):
+    cl, sim, tables, _ = stack
+    led = _tenanted_ledger(cl)
+    gt = core.GroundTruthPredictor(sim)
+    free = sorted(set(range(cl.n_gpus)) - led.busy())
+    rng = np.random.default_rng(3)
+    subs = [sorted(rng.choice(free, size=6, replace=False).tolist())
+            for _ in range(20)]
+    fast = core.ContentionAwarePredictor(cl, gt, led)
+    slow = core.ContentionAwarePredictor(cl, gt, led, vectorized=False)
+    np.testing.assert_array_equal(fast.predict(subs), slow.predict(subs))
+    assert fast.n_capped == slow.n_capped
+
+
+# ---------------------------------------------------------------------------
+# Ledger version counter + cache invalidation (property-based)
+# ---------------------------------------------------------------------------
+
+def _check_version_and_invalidation(seed: int) -> None:
+    cl = core.h100_cluster()
+    sim = core.BandwidthSimulator(cl)
+    led = JobLedger(cl)
+    gt = core.GroundTruthPredictor(sim)
+    wrapped = core.ContentionAwarePredictor(cl, gt, led)
+    cache = PredictionCache(led)
+    cached = cache.wrap(wrapped, mode="analytic")
+    fresh = core.ContentionAwarePredictor(
+        cl, core.GroundTruthPredictor(sim), led
+    )
+    rng = np.random.default_rng(seed)
+    live = []
+    cand = [0, 1, 8, 9, 16, 17]
+    last_version = led.version
+    for step in range(12):
+        if live and (len(live) > 3 or rng.random() < 0.4):
+            led.release(live.pop(int(rng.integers(len(live)))))
+        else:
+            free = sorted(set(range(cl.n_gpus)) - led.busy() - set(cand))
+            k = int(rng.integers(1, 5))
+            gpus = sorted(rng.choice(free, size=min(k, len(free)),
+                                     replace=False).tolist())
+            jid = f"j{step}"
+            led.admit(jid, gpus)
+            live.append(jid)
+        # ANY admit/release bumps the version...
+        assert led.version > last_version
+        last_version = led.version
+        # ...and the versioned cache serves the current-occupancy value
+        # (twice: the second call must be a hit with the same answer)
+        v1 = cached.predict([cand])
+        v2 = cached.predict([cand])
+        want = fresh.predict([cand])
+        np.testing.assert_array_equal(v1, want)
+        np.testing.assert_array_equal(v2, want)
+    assert cache.stats.cache_hits > 0
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**32 - 1))
+def test_property_cache_invalidation(seed):
+    _check_version_and_invalidation(seed)
+
+
+@pytest.mark.skipif(HAVE_HYPOTHESIS, reason="hypothesis drives this instead")
+def test_seeded_cache_invalidation():
+    for seed in (0, 1, 7, 1234):
+        _check_version_and_invalidation(seed)
+
+
+def test_release_restores_state_but_not_version():
+    cl = core.h100_cluster()
+    led = JobLedger(cl)
+    v0 = led.version
+    led.admit("j", [0, 1])
+    led.release("j")
+    assert led.available() == cl.all_gpus()
+    assert led.version == v0 + 2  # monotonic: restores never rewind it
+
+
+def test_grading_cache_matches_sim():
+    cl = core.h100_cluster()
+    sim = core.BandwidthSimulator(cl)
+    led = JobLedger(cl)
+    led.admit("a", [4, 5, 12, 13])
+    gc = GradingCache(sim)
+    for s in ([0, 1, 8, 9], [0, 1, 2, 3], [16, 17, 24, 25]):
+        assert gc.true_bandwidth(s, ledger=led) == \
+            sim.true_bandwidth(s, ledger=led)
+        assert gc.true_bandwidth(s) == sim.true_bandwidth(s)
+    before = gc.true_bandwidth([0, 1, 8, 9], ledger=led)
+    led.admit("b", [2, 3, 10, 11])  # version bump: entry must not be served
+    after = gc.true_bandwidth([0, 1, 8, 9], ledger=led)
+    assert after == sim.true_bandwidth([0, 1, 8, 9], ledger=led)
+    assert after < before
+    assert gc.stats.cache_hits > 0
+
+
+# ---------------------------------------------------------------------------
+# Golden bit-identity: cache on/off, batched vs sequential PTS, trace replay
+# ---------------------------------------------------------------------------
+
+class _PredictOnly:
+    """Strips the fused-children protocol off a predictor: pts_search then
+    takes the sequential per-round batch path (the pre-PR shape)."""
+
+    def __init__(self, base):
+        self.base = base
+
+    def predict(self, subsets):
+        return self.base.predict(subsets)
+
+
+def test_batched_pts_round_identical(stack):
+    cl, sim, tables, params = stack
+    pred = core.SurrogatePredictor(cl, tables, params)
+    rng = np.random.default_rng(4)
+    for k in (3, 6, 10):
+        avail = sorted(
+            rng.choice(cl.n_gpus, size=min(cl.n_gpus, 14), replace=False)
+            .tolist()
+        )
+        fused = search.pts_search(cl, tables, pred, avail, k)
+        seq = search.pts_search(cl, tables, _PredictOnly(pred), avail, k)
+        assert fused.subset == seq.subset
+        assert fused.predicted_bw == seq.predicted_bw
+
+
+def test_predict_children_matches_predict(stack):
+    cl, sim, tables, params = stack
+    pred = core.SurrogatePredictor(cl, tables, params)
+    rng = np.random.default_rng(5)
+    parent = sorted(rng.choice(cl.n_gpus, size=12, replace=False).tolist())
+    kids = [parent[:i] + parent[i + 1:] for i in range(len(parent))]
+    np.testing.assert_array_equal(
+        pred.predict_children(parent), pred.predict(kids)
+    )
+    # through the contention wrapper, against a live ledger
+    led = JobLedger(cl)
+    led.admit("t", [g for g in range(cl.n_gpus) if g not in parent][:4])
+    wrapped = core.ContentionAwarePredictor(cl, pred, led)
+    np.testing.assert_array_equal(
+        wrapped.predict_children(parent), wrapped.predict(kids)
+    )
+
+
+def test_cache_on_off_identical_hybrid_search(stack):
+    cl, sim, tables, params = stack
+    rng = np.random.default_rng(6)
+    for factory in (
+        lambda: core.SurrogatePredictor(cl, tables, params),
+        lambda: core.GroundTruthPredictor(sim),
+    ):
+        for k in (4, 9):
+            avail = sorted(
+                rng.choice(cl.n_gpus, size=min(cl.n_gpus, 20),
+                           replace=False).tolist()
+            )
+            led = JobLedger(cl)
+            led.admit("t", [g for g in range(cl.n_gpus)
+                            if g not in avail][:3])
+            plain = core.cached_contention_predictor(
+                cl, factory(), led, use_cache=False
+            )
+            cached = core.cached_contention_predictor(cl, factory(), led)
+            r1 = core.hybrid_search(cl, tables, plain, avail, k)
+            r2 = core.hybrid_search(cl, tables, cached, avail, k)
+            assert r1.subset == r2.subset
+            assert r1.predicted_bw == r2.predicted_bw
+
+
+def _fast_dispatcher(cl, tables, sim, params, fast):
+    pred = core.SurrogatePredictor(
+        cl, tables, params, vectorized=fast, bucket_shapes=fast
+    )
+    disp = core.BandPilotDispatcher(cl, tables, pred, cache=fast)
+    if not fast:
+        disp.contention_predictor.vectorized = False
+    return disp
+
+
+def test_trace_replay_golden_fast_vs_slow(stack):
+    """THE acceptance golden: a pinned fifo scheduler trace selects
+    byte-identical subsets with the fast path enabled (the new defaults)
+    vs fully disabled (the pre-PR configuration)."""
+    cl, sim, tables, params = stack
+    trace = core.poisson_trace(
+        cl, 14, np.random.default_rng(7),
+        mean_interarrival=1.0, mean_duration=6.0,
+        k_choices=range(4, cl.n_gpus // 2 + 1),
+    )
+    logs = {}
+    recs = {}
+    for fast in (True, False):
+        disp = _fast_dispatcher(cl, tables, sim, params, fast)
+        log = []
+        orig = core.BandPilotDispatcher.dispatch
+
+        def wrapped(self, avail, k, rng=None, _log=log):
+            s = orig(self, avail, k, rng=rng)
+            _log.append(tuple(s))
+            return s
+
+        disp.dispatch = wrapped.__get__(disp)
+        sched = core.AdmissionScheduler(cl, sim, tables, disp)
+        recs[fast] = sched.run(trace)
+        logs[fast] = log
+    assert logs[True] == logs[False]
+    for a, b in zip(recs[True], recs[False]):
+        assert (a.job_id, a.t_admit, a.bw, a.gbe) == \
+            (b.job_id, b.t_admit, b.bw, b.gbe)
+
+
+@pytest.mark.slow
+def test_trace_replay_golden_learned_mode(stack):
+    """Fast-vs-slow byte identity for the learned-contention configuration
+    (contended featurizer + learned degradation on the hot path)."""
+    cl, sim, tables, params = stack
+    cparams = surr.init_contended_params(params)
+    trace = core.poisson_trace(
+        cl, 10, np.random.default_rng(9), mean_duration=6.0,
+        k_choices=range(4, cl.n_gpus // 2 + 1),
+    )
+    logs = {}
+    for fast in (True, False):
+        pred = core.SurrogatePredictor(
+            cl, tables, params, vectorized=fast, bucket_shapes=fast
+        )
+        cpred = core.ContendedSurrogatePredictor(
+            cl, tables, cparams, vectorized=fast, bucket_shapes=fast
+        )
+        disp = core.BandPilotDispatcher(
+            cl, tables, pred, cache=fast,
+            contention_mode="learned", contended_predictor=cpred,
+        )
+        if not fast:
+            disp.contention_predictor.vectorized = False
+        log = []
+        orig = core.BandPilotDispatcher.dispatch
+
+        def wrapped(self, avail, k, rng=None, _log=log):
+            s = orig(self, avail, k, rng=rng)
+            _log.append(tuple(s))
+            return s
+
+        disp.dispatch = wrapped.__get__(disp)
+        core.AdmissionScheduler(cl, sim, tables, disp).run(trace)
+        logs[fast] = log
+    assert logs[True] == logs[False]
+
+
+# ---------------------------------------------------------------------------
+# Lazy distinct-multiset-permutation generator
+# ---------------------------------------------------------------------------
+
+def _check_perms(items):
+    want = sorted(set(itertools.permutations(items)))
+    got = list(_distinct_permutations(items))
+    assert got == want
+
+
+def test_distinct_permutations_small_cases():
+    for items in ([1], [1, 1], [1, 2], [2, 1, 1], [3, 2, 2, 1],
+                  [0, 0, 1, 1], [1, 2, 3]):
+        _check_perms(items)
+
+
+@settings(max_examples=40, deadline=None)
+@given(items=st.lists(st.integers(min_value=0, max_value=3),
+                      min_size=1, max_size=7))
+def test_property_distinct_permutations(items):
+    _check_perms(items)
+
+
+@pytest.mark.skipif(HAVE_HYPOTHESIS, reason="hypothesis drives this instead")
+def test_seeded_distinct_permutations():
+    rng = np.random.default_rng(0)
+    for _ in range(30):
+        m = int(rng.integers(1, 8))
+        _check_perms(rng.integers(0, 4, size=m).tolist())
+
+
+def test_balanced_counts_large_m_respects_cap_lazily():
+    """k=64 over 32 2-GPU hosts (m=32): the old implementation materialized
+    32! permutations and never returned; the lazy generator must honour the
+    cap quickly."""
+    t0 = time.time()
+    out = balanced_count_assignments([2] * 32, 48, max_assignments=16)
+    assert time.time() - t0 < 5.0
+    assert 0 < len(out) <= 16
+    for counts in out:
+        assert sum(counts) == 48
+        assert all(c <= 2 for c in counts)
+    # and the exact-fit case: one distinct permutation, returned instantly
+    out = balanced_count_assignments([2] * 32, 64)
+    assert out == [tuple([2] * 32)]
+
+
+def test_balanced_counts_matches_old_implementation():
+    """Bit-identity of the output stream vs the eager reference on sizes
+    the old code could handle."""
+    def old(capacities, k, max_assignments=16):
+        m = len(capacities)
+        base, rem = divmod(k, m)
+        shape = [base + 1] * rem + [base] * (m - rem)
+        out, seen = [], set()
+        for perm in sorted(set(itertools.permutations(shape))):
+            counts = list(perm)
+            overflow = 0
+            for i in range(m):
+                if counts[i] > capacities[i]:
+                    overflow += counts[i] - capacities[i]
+                    counts[i] = capacities[i]
+            while overflow > 0:
+                heads = [(capacities[i] - counts[i], i) for i in range(m)]
+                heads.sort(reverse=True)
+                if heads[0][0] <= 0:
+                    break
+                counts[heads[0][1]] += 1
+                overflow -= 1
+            if overflow > 0:
+                continue
+            t = tuple(counts)
+            if t not in seen:
+                seen.add(t)
+                out.append(t)
+            if len(out) >= max_assignments:
+                break
+        return out
+
+    rng = np.random.default_rng(3)
+    for _ in range(40):
+        m = int(rng.integers(1, 7))
+        caps = rng.integers(1, 9, size=m).tolist()
+        k = int(rng.integers(1, sum(caps) + 1))
+        assert balanced_count_assignments(caps, k) == old(caps, k)
+
+
+# ---------------------------------------------------------------------------
+# Unified instrumentation
+# ---------------------------------------------------------------------------
+
+def test_predictor_stats_unified(stack):
+    cl, sim, tables, params = stack
+    pred = core.SurrogatePredictor(cl, tables, params)
+    disp = core.BandPilotDispatcher(cl, tables, pred)
+    disp.admit("a", 12)  # k > 8: past the single-host shortcut, so the
+    disp.admit("b", 10)  # Stage-2 model actually runs
+
+    st_ = disp.predictor_stats()
+    assert st_.n_model_calls > 0
+    assert st_.predict_seconds > 0.0
+    assert st_.featurize_seconds >= 0.0
+    assert st_.infer_seconds > 0.0
+    assert st_.cache_hits + st_.cache_misses > 0
+    # legacy attribute names stay readable AND writable (benchmarks reset)
+    pred.predict_seconds = 0.0
+    assert pred.stats.predict_seconds == 0.0
+    pred.n_model_calls = 0
+    assert pred.stats.n_model_calls == 0
+    wrapper = disp.contention_predictor
+    wrapper.predict_seconds = 0.0
+    assert wrapper.stats.wrapper_seconds == 0.0
+    assert PredictorStats.merged(st_, st_).n_model_calls == \
+        2 * st_.n_model_calls
+    assert 0.0 <= st_.hit_rate <= 1.0
