@@ -1,32 +1,46 @@
-"""Dispatch fast path (ISSUE 5): end-to-end admissions/sec, before vs after.
+"""Dispatch throughput (ISSUE 5 + 6): admissions/sec, three-way.
 
 Replays pinned scheduler traces (H100 + Het-4Mix; fifo/batched x
-analytic/learned x defrag on/off) through BandPilot twice per
+analytic/learned x defrag on/off) through BandPilot three times per
 configuration:
 
-* **before** — the pre-PR dispatch path: per-candidate loop featurizers,
-  per-candidate analytic caps, sequential PTS rounds, no prediction cache,
-  JIT shapes always padded to ``cluster.n_hosts`` tokens;
-* **after** — the fast path defaults: vectorized featurization, fused PTS
-  rounds, batched caps, ledger-versioned prediction cache, bucketed JIT
-  shapes.
+* **before** — the pre-PR-5 dispatch path: per-candidate loop
+  featurizers, per-candidate analytic caps, sequential PTS rounds, no
+  prediction cache, JIT shapes always padded to ``cluster.n_hosts``
+  tokens;
+* **scanoff** — the ISSUE-5 fast path: vectorized featurization, fused
+  host PTS rounds, batched caps, ledger-versioned prediction cache,
+  bucketed JIT shapes — but the on-device descent disabled
+  (``use_scan=False``);
+* **scanon** — the full ISSUE-6 path: whole PTS descents run as one
+  fused on-device ``lax.scan`` through AOT-compiled executables.
 
-Both sides replay with oracle grading off (``AdmissionScheduler(grade=
-False)``): the exact-Oracle baseline is evaluation apparatus, identical on
-both sides, and a production dispatcher never runs it — admissions/sec
-must measure the dispatch path.  The chosen subsets are asserted identical
-between the two sides on every configuration (the bit-identity contract),
-and the per-phase breakdown (featurize / infer / contention-wrap / other)
-is reported for each.
+All sides replay with oracle grading off (``AdmissionScheduler(grade=
+False)``): the exact-Oracle baseline is evaluation apparatus, identical
+on every side, and a production dispatcher never runs it.  The chosen
+subsets are asserted identical across all three sides on every
+configuration (the bit-identity contract), and the per-phase breakdown
+(featurize / infer / scan / contention-wrap / other) is reported.
+
+Cold start vs warm latency: the scan executables are AOT-compiled at
+dispatcher construction (``aot_warm``), so the compile spike lands
+before the first admission.  ``dispatch_aot_warm_{cluster}`` reports
+that one-time cost next to the warm per-round descent latency; the
+executables are process-wide and shared across same-shaped clusters, so
+the second cluster's row shows the (near-zero) shared-cache cost.
 
 Rows:
   dispatch_tput_{cluster}_{policy}_{mode}[_defrag] — us per admission
-    (after side), derived = before/after admissions/sec + speedup +
-    both breakdowns + identical-subsets flag
-  dispatch_tput_target — the pinned headline config (H100 fifo analytic)
-    speedup vs the >=5x target
-  dispatch_latency_guard — worst-case hybrid-search latency (after side)
-    vs the Fig. 8 250 ms envelope (threshold via BENCH_SEARCH_LATENCY_MS)
+    (scanon side), notes = all three admissions/sec + scan and total
+    speedups + identical-subsets flag + per-phase breakdowns
+  dispatch_aot_warm_{cluster} — one-time AOT compile seconds vs warm
+    per-round scan latency
+  dispatch_tput_target — the pinned headline config (H100 fifo
+    analytic) total speedup vs the >=5x target; when the XLA-CPU
+    compute bound keeps the headline below target, the row documents
+    the measured ceiling with the per-phase breakdown instead
+  dispatch_latency_guard — worst-case hybrid-search latency (scanon
+    side) vs the Fig. 8 envelope (threshold via BENCH_SEARCH_LATENCY_MS)
 """
 
 from __future__ import annotations
@@ -42,7 +56,7 @@ from benchmarks.common import csv_row, get_context
 
 CLUSTERS = ("H100", "Het-4Mix")
 N_JOBS = int(os.environ.get("BENCH_TRACE_JOBS", "50"))
-LATENCY_MS = float(os.environ.get("BENCH_SEARCH_LATENCY_MS", "250"))
+LATENCY_MS = float(os.environ.get("BENCH_SEARCH_LATENCY_MS", "150"))
 TARGET_SPEEDUP = 5.0
 PINNED = ("H100", "fifo", "analytic", False)  # the headline config
 
@@ -54,6 +68,8 @@ CONFIGS = (
     ("fifo", 0.0, "analytic", True),
 )
 
+SIDES = ("scanon", "scanoff", "before")
+
 
 def _trace(cluster):
     return core.poisson_trace(
@@ -63,10 +79,12 @@ def _trace(cluster):
     )
 
 
-def _dispatcher(ctx, mode, fast):
+def _dispatcher(ctx, mode, side):
+    fast = side != "before"
+    use_scan = side == "scanon"
     pred = core.SurrogatePredictor(
         ctx.cluster, ctx.tables, ctx.params,
-        vectorized=fast, bucket_shapes=fast,
+        vectorized=fast, bucket_shapes=fast, use_scan=use_scan,
     )
     kw = {}
     if mode == "learned":
@@ -82,16 +100,16 @@ def _dispatcher(ctx, mode, fast):
             ),
         )
     disp = core.BandPilotDispatcher(
-        ctx.cluster, ctx.tables, pred, cache=fast, **kw
+        ctx.cluster, ctx.tables, pred, cache=fast, aot_warm=use_scan, **kw
     )
     if not fast:
         disp.contention_predictor.vectorized = False
     return disp
 
 
-def _replay(ctx, trace, policy, window, mode, defrag, fast):
+def _replay(ctx, trace, policy, window, mode, defrag, side):
     """-> (seconds, chosen subsets, stats, worst hybrid-search seconds)."""
-    disp = _dispatcher(ctx, mode, fast)
+    disp = _dispatcher(ctx, mode, side)
     chosen = []
     worst = [0.0]
     orig = core.BandPilotDispatcher.dispatch
@@ -120,9 +138,10 @@ def _replay(ctx, trace, policy, window, mode, defrag, fast):
 
 def _breakdown(dt, st):
     other = max(dt - st.featurize_seconds - st.infer_seconds
-                - st.wrapper_seconds, 0.0)
+                - st.scan_seconds - st.wrapper_seconds, 0.0)
     return (
         f"feat={st.featurize_seconds:.2f}s;infer={st.infer_seconds:.2f}s;"
+        f"scan={st.scan_seconds:.2f}s/{st.n_scan_steps}r;"
         f"wrap={st.wrapper_seconds:.2f}s;other={other:.2f}s;"
         f"hits={st.cache_hits};misses={st.cache_misses}"
     )
@@ -130,54 +149,83 @@ def _breakdown(dt, st):
 
 def run() -> list:
     rows = []
-    pinned_speedup = None
-    first_speedup = None
+    pinned = None
+    first = None
     worst_latency = 0.0
     for name in CLUSTERS:
         ctx = get_context(name)
+        # one-time AOT warm-up cost, paid at dispatcher construction (the
+        # compiled executables are process-wide: the second same-shaped
+        # cluster finds them in the cache)
+        aot = _dispatcher(ctx, "analytic", "scanon").aot_warm_seconds
         trace = _trace(ctx.cluster)
+        warm_scan_stats = None
         for policy, window, mode, defrag in CONFIGS:
-            # full unmeasured replay per side first: JIT compilation of
-            # every (B, H) shape bucket the trace exercises must land
-            # outside the timed window (it is a once-per-process cost, not
-            # a per-admission one)
-            _replay(ctx, trace, policy, window, mode, defrag, fast=True)
-            _replay(ctx, trace, policy, window, mode, defrag, fast=False)
-            dt_a, sub_a, st_a, worst_a = _replay(
-                ctx, trace, policy, window, mode, defrag, fast=True
-            )
-            dt_b, sub_b, st_b, _ = _replay(
-                ctx, trace, policy, window, mode, defrag, fast=False
-            )
-            identical = sub_a == sub_b
+            timed = {}
+            for side in SIDES:
+                # full unmeasured replay first: JIT compilation of every
+                # (B, H) shape bucket the trace exercises must land outside
+                # the timed window (once-per-process, not per-admission)
+                _replay(ctx, trace, policy, window, mode, defrag, side)
+                timed[side] = _replay(
+                    ctx, trace, policy, window, mode, defrag, side
+                )
+            dt_on, sub_on, st_on, worst_on = timed["scanon"]
+            dt_off, sub_off, st_off, _ = timed["scanoff"]
+            dt_b, sub_b, st_b, _ = timed["before"]
+            identical = sub_on == sub_off == sub_b
             assert identical, (
-                f"fast path changed subset selection: {name} {policy} {mode}"
+                f"scan/fast path changed subset selection: "
+                f"{name} {policy} {mode}"
             )
-            worst_latency = max(worst_latency, worst_a)
-            speedup = dt_b / dt_a if dt_a > 0 else float("inf")
+            if warm_scan_stats is None and st_on.n_scan_steps:
+                warm_scan_stats = st_on
+            worst_latency = max(worst_latency, worst_on)
+            sp_scan = dt_off / dt_on if dt_on > 0 else float("inf")
+            sp_total = dt_b / dt_on if dt_on > 0 else float("inf")
             tag = f"{policy}_{mode}" + ("_defrag" if defrag else "")
             if (name, policy, mode, defrag) == PINNED:
-                pinned_speedup = speedup
-            if first_speedup is None:
-                first_speedup = speedup
+                pinned = (sp_total, dt_on, st_on)
+            if first is None:
+                first = (sp_total, dt_on, st_on)
             rows.append(csv_row(
                 f"dispatch_tput_{name}_{tag}",
-                1e6 * dt_a / len(trace),
-                f"after={len(trace) / dt_a:.1f}adm/s;"
+                1e6 * dt_on / len(trace),
+                f"scanon={len(trace) / dt_on:.1f}adm/s;"
+                f"scanoff={len(trace) / dt_off:.1f}adm/s;"
                 f"before={len(trace) / dt_b:.1f}adm/s;"
-                f"speedup={speedup:.2f}x;identical={identical};"
-                f"after[{_breakdown(dt_a, st_a)}];"
+                f"speedup_scan={sp_scan:.2f}x;"
+                f"speedup_total={sp_total:.2f}x;identical={identical};"
+                f"scanon[{_breakdown(dt_on, st_on)}];"
                 f"before[{_breakdown(dt_b, st_b)}]",
             ))
+        wst = warm_scan_stats
+        warm_ms = (
+            1e3 * wst.scan_seconds / max(wst.n_scan_steps, 1)
+            if wst is not None else float("nan")
+        )
+        rows.append(csv_row(
+            f"dispatch_aot_warm_{name}", 1e6 * aot,
+            f"compile={aot:.2f}s;warm_ms_per_round={warm_ms:.2f};"
+            f"shared_cache={aot < 0.1}",
+        ))
     # a CI smoke override may run a config subset without the pinned one:
     # fall back to the first measured config rather than crash
-    headline = pinned_speedup if pinned_speedup is not None else first_speedup
-    rows.append(csv_row(
-        "dispatch_tput_target", 0.0,
+    headline, dt_on, st_on = pinned if pinned is not None else first
+    met = headline >= TARGET_SPEEDUP
+    note = (
         f"pinned=H100/fifo/analytic;speedup={headline:.2f}x;"
-        f"target={TARGET_SPEEDUP:.0f}x;"
-        f"met={headline >= TARGET_SPEEDUP}",
-    ))
+        f"target={TARGET_SPEEDUP:.0f}x;met={met}"
+    )
+    if not met:
+        # acceptance escape hatch: on a 1-vCPU XLA-CPU host the descent is
+        # compute-bound (the Transformer flops dominate, not dispatch
+        # overhead) — document the measured ceiling with the breakdown
+        note += (
+            f";ceiling_documented=True;"
+            f"scanon_breakdown[{_breakdown(dt_on, st_on)}]"
+        )
+    rows.append(csv_row("dispatch_tput_target", 0.0, note))
     rows.append(csv_row(
         "dispatch_latency_guard", 1e6 * worst_latency,
         f"worst_search_ms={1e3 * worst_latency:.1f};"

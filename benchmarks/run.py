@@ -42,7 +42,7 @@ BENCHES = [
     ("issue2_scheduler_policies", bench_scheduler.run),
     ("issue3_learned_contention", bench_learned_contention.run),
     ("issue4_defrag", bench_defrag.run),
-    ("issue5_dispatch_throughput", bench_dispatch_throughput.run),
+    ("issue6_dispatch_throughput", bench_dispatch_throughput.run),
 ]
 
 

@@ -30,10 +30,11 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core import features as feat_lib
 from repro.core.bandwidth_sim import (
     INTER_EFF,
     _jitter,
@@ -275,6 +276,8 @@ class ContentionAwarePredictor:
         self._jitter_cache: Dict = {}
         self._snap_version: Optional[int] = None
         self._snap: Optional[_SnapshotArrays] = None
+        self._cap_tab: Optional[np.ndarray] = None
+        self._cap_tab_version: Optional[Tuple[int, int]] = None
 
     # legacy instrumentation names
     @property
@@ -326,6 +329,78 @@ class ContentionAwarePredictor:
             )
             self._snap_version = v
         return self._snap
+
+    # fused on-device descent ------------------------------------------------
+
+    def eliminate_to(self, parent: Sequence[int], k: int):
+        """Run a whole PTS descent on-device *through* the contention cap.
+
+        For a PTS parent of free GPUs, every child is GPU-disjoint from
+        every live job, so the analytic cap collapses to a pure function of
+        the child's per-host count vector — one float32 table over the
+        count lattice (built per ledger version, microseconds of numpy)
+        that the scan body gathers alongside the isolated score.  Returns
+        the base predictor's :class:`~repro.core.surrogate.ScanResult` or
+        None (caller falls back to the host loop): learned mode under a
+        contended ledger, non-vectorized wrappers, cap-incompatible bases,
+        and parents overlapping live jobs all decline."""
+        base_elim = getattr(self.base, "eliminate_to", None)
+        if base_elim is None:
+            return None
+        if len(self.ledger) == 0:
+            return base_elim(parent, k)  # exact pass-through, like _degrade
+        if not self.ledger.busy().isdisjoint(parent):
+            return None  # cap depends on disjointness: not table-gatherable
+        snap = self._snapshot()
+        if snap.touch.shape[0] == 0:
+            # no cross-host tenants: both modes leave candidates untouched
+            return base_elim(parent, k)
+        if self.mode != "analytic" or not self.vectorized:
+            return None
+        tables = getattr(self.base, "tables", None)
+        if tables is None:
+            return None
+        dt = feat_lib.device_tables(self.cluster, tables)
+        res = base_elim(parent, k, caps=self._cap_table(dt, snap))
+        if res is not None:
+            self.stats.n_capped += res.n_capped
+        return res
+
+    def _cap_table(
+        self, dt: "feat_lib.DeviceTables", snap: _SnapshotArrays
+    ) -> np.ndarray:
+        """The analytic cap tabulated over the per-host count lattice, for
+        GPU-disjoint candidates against this ledger version.  The same
+        float64 program as :func:`_caps_from_snapshot_batched` with
+        ``disjoint == 1`` (so ``c_h = 1 + cross-jobs touching h``),
+        evaluated per lattice point and cast to float32 once — a device
+        gather lands on exactly ``np.float32(host-path cap)``."""
+        v = (self.ledger.uid, self.ledger.version)
+        if self._cap_tab_version != v or self._cap_tab is None:
+            lat = dt.cap_lattice()
+            c = 1 + snap.touch.sum(axis=0)                  # [n_hosts]
+            per_host = np.where(
+                lat.part, snap.rail_bw[None, :] / c[None, :], np.inf
+            )
+            rail = per_host.min(axis=1)
+            min_counts = np.where(
+                lat.part, lat.counts, np.iinfo(np.int64).max
+            ).min(axis=1)
+            active = (lat.n_part > 1) & ((c[None, :] > 1) & lat.part).any(
+                axis=1
+            )
+            caps = np.full((lat.counts.shape[0],), np.inf, np.float64)
+            idx = np.nonzero(active)[0]
+            if len(idx):
+                ks = lat.ks[idx]
+                inter = (
+                    rail[idx] * min_counts[idx]
+                    * (2.0 * (ks - 1) / ks) * INTER_EFF
+                )
+                caps[idx] = inter * lat.jitter[idx]
+            self._cap_tab = caps.astype(np.float32)
+            self._cap_tab_version = v
+        return self._cap_tab
 
     def _degrade(
         self, subsets: Sequence[Subset], iso: np.ndarray

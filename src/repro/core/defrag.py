@@ -55,6 +55,7 @@ relocation with the no-harm check, restoring the ledger exactly).
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from typing import Callable, List, Optional, Sequence, Tuple
 
@@ -419,13 +420,18 @@ def hybrid_proposer(
     use_cache: bool = True,
     vectorized: bool = True,
     stats_sink=None,
+    batcher=None,
 ) -> Proposer:
     """A :data:`Proposer` that re-places jobs exactly the way BandPilot
     admits them: hybrid search under the contention-aware predictor bound
     to the (scratch) ledger, with the fragmentation tie-break applied.
     The per-proposal predictor is wrapped in a ledger-versioned prediction
     cache (pass the dispatcher's cached ``base_predictor`` to also share
-    the isolated memo across trials)."""
+    the isolated memo across trials).  ``batcher`` (an
+    :class:`~repro.core.predict_cache.InferenceBatcher`) registers the
+    proposal search as a batch worker so its surrogate applies can fuse
+    with concurrent searches; value-neutral — single-worker batches pass
+    straight through."""
     from repro.core.predict_cache import cached_contention_predictor
 
     def propose(ledger: JobLedger, avail: Sequence[int], k: int) -> Subset:
@@ -442,9 +448,11 @@ def hybrid_proposer(
             make_frag_penalty(cluster, ledger, frag_weight)
             if frag_weight > 0 else None
         )
-        return search.hybrid_search(
-            cluster, tables, pred, avail, k, frag_penalty=penalty
-        ).subset
+        ctx = batcher.worker() if batcher is not None else contextlib.nullcontext()
+        with ctx:
+            return search.hybrid_search(
+                cluster, tables, pred, avail, k, frag_penalty=penalty
+            ).subset
 
     return propose
 
@@ -460,6 +468,7 @@ def consolidation_proposer(
     use_cache: bool = True,
     vectorized: bool = True,
     stats_sink=None,
+    batcher=None,
 ) -> ProposalFan:
     """Best-fit candidate slots for a defrag mover, cheapest real estate
     first.
@@ -482,6 +491,7 @@ def consolidation_proposer(
             contention_mode=contention_mode, contended=contended,
             frag_weight=frag_weight, use_cache=use_cache,
             vectorized=vectorized, stats_sink=stats_sink,
+            batcher=batcher,
         )
         if base_predictor is not None else None
     )

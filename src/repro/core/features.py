@@ -54,7 +54,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.bandwidth_sim import BW_SCALE
+from repro.core.bandwidth_sim import BW_SCALE, _jitter
 from repro.core.cluster import Cluster
 from repro.core.intra_host import IntraHostTables
 from repro.core.tenancy import JobLedger
@@ -536,10 +536,12 @@ def _featurize_contended_group(
             led = _LedgerArrays(cluster, arrays, ledger)
             if len(arrays.ledger_cache) >= arrays.max_ledger_entries:
                 # oldest-first eviction (insertion order): single-use
-                # ledgers from dataset generation must not accumulate
+                # ledgers from dataset generation must not accumulate.
+                # pop() tolerates a concurrent joint-order thread having
+                # already evicted the same uid.
                 for uid in list(arrays.ledger_cache)[
                         : arrays.max_ledger_entries // 2]:
-                    del arrays.ledger_cache[uid]
+                    arrays.ledger_cache.pop(uid, None)
             arrays.ledger_cache[ledger.uid] = (ledger.version, led)
         M = np.zeros((B, cluster.n_gpus), np.int64)
         M[rows, flat] = 1
@@ -650,6 +652,122 @@ def featurize_contended_batch_loop(
             include_contenders=include_contenders, host_norm=host_norm,
         )
     return feats, mask
+
+
+# ---------------------------------------------------------------------------
+# Device tables: the on-device elimination scan's gather substrate
+# ---------------------------------------------------------------------------
+
+class _CapLattice:
+    """Geometry of the per-host GPU-count lattice the analytic contention
+    cap is tabulated over (see :class:`DeviceTables`)."""
+
+    def __init__(self, counts, part, n_part, ks, jitter):
+        self.counts = counts    # [L, H_all] int64 per-host count vectors
+        self.part = part        # [L, H_all] bool  count > 0
+        self.n_part = n_part    # [L] participating-host count
+        self.ks = ks            # [L] subset size
+        self.jitter = jitter    # [L] deterministic fabric jitter factor
+
+
+class DeviceTables:
+    """Float32 gather tables for the fused on-device PTS scan.
+
+    The scan body re-expresses :func:`featurize_children` as pure gathers:
+    channels 0 and 4 of a token depend only on ``(host, local bitmask)``, so
+    both are precomputed here as ``[H_all, 2**max_g]`` tables — evaluated in
+    the *same float64 program* as :func:`_isolated_channels` and cast to
+    float32 once, so a device gather lands on exactly
+    ``np.float32(host-path value)``.  ``stage1`` is the raw Stage-1 lookup
+    (the single-host dispatch branch).
+
+    For the analytic contention cap, observe that once the candidate is
+    GPU-disjoint from every live job (always true for PTS over free GPUs),
+    the cap depends only on the candidate's per-host GPU-count vector.
+    Those vectors live on a mixed-radix lattice (radix ``n_gpus_h + 1`` per
+    host, |L| = 6561 on the paper's 4x8 clusters), so any ledger's cap
+    function is a ``[L]`` table built in microseconds of numpy
+    (:meth:`cap_lattice` holds the ledger-independent geometry and the
+    per-point fabric jitter, computed once per cluster).
+    """
+
+    def __init__(self, cluster: Cluster, tables: IntraHostTables):
+        self.cluster = cluster
+        arrays = host_arrays(cluster, tables)
+        self.arrays = arrays
+        n_hosts = cluster.n_hosts
+        max_g = arrays.max_host_gpus
+        W = 1 << max_g
+        self.mask_size = W
+        with np.errstate(invalid="ignore"):
+            log_intra = np.log1p(arrays.intra_bw)          # [H, W], NaN at 0
+            self.tok0 = (log_intra / _LOG_SCALE).astype(np.float32)
+            pop = np.asarray(
+                [bin(m).count("1") for m in range(W)], np.int64
+            )
+            safe = np.minimum(pop, max_g)
+            self.tok4 = (
+                (log_intra - arrays.log_rail[:, safe]) / _LOG_SCALE
+            ).astype(np.float32)
+        self.tok4_zero = np.zeros_like(self.tok4)          # host_norm=False
+        self.stage1 = arrays.intra_bw.astype(np.float32)   # [H, W]
+        self.rail_bw = arrays.nic_rail_bw                  # [H] float64
+        radix = arrays.host_n_gpus + 1
+        strides = np.ones((n_hosts,), np.int64)
+        for h in range(1, n_hosts):
+            strides[h] = strides[h - 1] * radix[h - 1]
+        self.strides = strides
+        self.lattice_size = int(strides[-1] * radix[-1])
+        self.n_gpus_f = np.float32(max(cluster.n_gpus, 1))
+        self._lattice: Optional[_CapLattice] = None
+        self._caps_inf: Optional[np.ndarray] = None
+
+    def cap_lattice(self) -> _CapLattice:
+        """Lazy per-cluster lattice geometry + per-point fabric jitter.
+
+        The jitter key of an inter-host candidate is its sorted
+        ``(host, count)`` participation tuple — a pure function of the
+        lattice point and the cluster name, never of the ledger — so it is
+        evaluated once here and reused by every per-ledger cap table."""
+        if self._lattice is None:
+            L = self.lattice_size
+            n_hosts = len(self.strides)
+            radix = self.arrays.host_n_gpus + 1
+            idx = np.arange(L, dtype=np.int64)
+            counts = np.stack(
+                [(idx // self.strides[h]) % radix[h] for h in range(n_hosts)],
+                axis=1,
+            )
+            part = counts > 0
+            n_part = part.sum(axis=1)
+            ks = counts.sum(axis=1)
+            jitter = np.ones((L,), np.float64)
+            name = self.cluster.name
+            for i in np.nonzero(n_part > 1)[0]:
+                key = tuple(
+                    (int(h), int(counts[i, h]))
+                    for h in np.nonzero(part[i])[0]
+                )
+                jitter[i] = _jitter(name, "inter", key)
+            self._lattice = _CapLattice(counts, part, n_part, ks, jitter)
+        return self._lattice
+
+    def caps_inf(self) -> np.ndarray:
+        """The capless (isolated / empty-ledger) cap table: all +inf."""
+        if self._caps_inf is None:
+            self._caps_inf = np.full(
+                (self.lattice_size,), np.inf, np.float32
+            )
+        return self._caps_inf
+
+
+def device_tables(cluster: Cluster, tables: IntraHostTables) -> DeviceTables:
+    """The (cached) :class:`DeviceTables` of one tables instance."""
+    dt = getattr(tables, "_device_tables", None)
+    if dt is None or dt.cluster is not cluster:
+        dt = DeviceTables(cluster, tables)
+        tables._device_tables = dt
+    return dt
 
 
 def featurize_gpu_ids(

@@ -24,13 +24,30 @@ in the stack carries (``.stats``): model calls, cumulative predict time,
 its featurize/inference split, contention-wrapper overhead, degradation and
 cache-hit counters.  Legacy attribute names (``n_model_calls``,
 ``predict_seconds``, ``n_capped``) remain readable/writable properties on
-the predictors themselves.
+the predictors themselves.  The fused on-device elimination path
+(``SurrogatePredictor.eliminate_to``) cannot split featurize from inference
+per round — the whole descent is one device call — so it reports a single
+``scan_seconds`` bucket plus the device-step count, and bumps *neither*
+``n_model_calls`` nor the featurize/infer split (no double-counting when
+``collect_stats`` merges a chain).
+
+This module is also home to :class:`InferenceBatcher`, the cross-search
+apply fuser: threads running concurrent hybrid searches (joint batched
+placement order-candidates, defrag trial moves) register with
+``with batcher.worker():`` and their surrogate applies are padded and fused
+into one shared jitted call — the same continuous-batching trick serving
+engines use.  Fusion is value-neutral: the Transformer is row- and
+pad-independent (regression-pinned in ``tests/test_ondevice_scan.py``), so
+batched outputs are bit-identical to per-search applies.
 """
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
-from typing import Dict, Optional, Sequence, Tuple
+import threading
+from collections import OrderedDict
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -43,6 +60,8 @@ class PredictorStats:
     predict_seconds: float = 0.0  # total wall time inside predict()
     featurize_seconds: float = 0.0  # ... spent building token batches
     infer_seconds: float = 0.0      # ... spent in jitted model applies
+    scan_seconds: float = 0.0     # wall time inside fused on-device descents
+    n_scan_steps: int = 0         # elimination rounds executed on-device
     wrapper_seconds: float = 0.0    # contention-wrap overhead (excl. base)
     n_capped: int = 0             # candidates whose estimate was degraded
     cache_hits: int = 0
@@ -87,6 +106,50 @@ def collect_stats(*predictors) -> PredictorStats:
 _UNVERSIONED = -1
 
 
+class LruDict(OrderedDict):
+    """Bounded dict with least-recently-used eviction.
+
+    Reads (``get`` / ``[]``) refresh recency; inserts past ``max_entries``
+    evict the least-recently-used entry.  Eviction only forgets memoized
+    values — every value is a pure function of its key — so capping a cache
+    can never change what a lookup-or-recompute path returns, only how often
+    it recomputes (property-tested in ``tests/test_ondevice_scan.py``).
+    Individual operations are single C-level calls (GIL-atomic), which is
+    all the concurrent joint-order threads need from the shared lifetime
+    memo.
+    """
+
+    def __init__(self, max_entries: int):
+        super().__init__()
+        self.max_entries = int(max_entries)
+
+    def __getitem__(self, key):
+        val = super().__getitem__(key)
+        try:
+            self.move_to_end(key)
+        except KeyError:
+            pass  # concurrently evicted between the two calls
+        return val
+
+    def get(self, key, default=None):
+        try:
+            return self[key]
+        except KeyError:
+            return default
+
+    def __setitem__(self, key, value):
+        super().__setitem__(key, value)
+        try:
+            self.move_to_end(key)
+        except KeyError:
+            pass
+        while len(self) > self.max_entries:
+            try:
+                self.popitem(last=False)
+            except KeyError:
+                break
+
+
 class PredictionCache:
     """Memo of predictor outputs keyed by ``(subset, ledger version, mode)``.
 
@@ -101,7 +164,7 @@ class PredictionCache:
     def __init__(self, ledger=None, max_entries: int = 1 << 18):
         self.ledger = ledger
         self.max_entries = max_entries
-        self._static: Dict[Tuple, float] = {}
+        self._static: Dict[Tuple, float] = LruDict(max_entries)
         self._window: Dict[Tuple, float] = {}
         self._window_version = _UNVERSIONED
         self.stats = PredictorStats()  # aggregate hit/miss across wrappers
@@ -123,10 +186,7 @@ class PredictionCache:
 
     def store_for(self, versioned: bool) -> Dict[Tuple, float]:
         if not versioned:
-            if len(self._static) >= self.max_entries:
-                # oldest-first eviction: drop the first-inserted half
-                for key in list(self._static)[: self.max_entries // 2]:
-                    del self._static[key]
+            # the lifetime memo self-bounds: LruDict evicts on insert
             return self._static
         v = self.version()
         if v != self._window_version:
@@ -262,7 +322,7 @@ class GradingCache:
     def __init__(self, sim, max_entries: int = 1 << 17):
         self.sim = sim
         self.max_entries = max_entries
-        self._memo: Dict[Tuple, float] = {}
+        self._memo: Dict[Tuple, float] = LruDict(max_entries)
         self.stats = PredictorStats()
 
     def true_bandwidth(self, subset, ledger=None) -> float:
@@ -274,10 +334,137 @@ class GradingCache:
         if val is None:
             self.stats.cache_misses += 1
             val = self.sim.true_bandwidth(subset, ledger=ledger)
-            if len(self._memo) >= self.max_entries:
-                for k in list(self._memo)[: self.max_entries // 2]:
-                    del self._memo[k]
             self._memo[key] = val
         else:
             self.stats.cache_hits += 1
         return val
+
+
+# ---------------------------------------------------------------------------
+# Cross-search inference batching
+# ---------------------------------------------------------------------------
+
+_TLS = threading.local()
+
+
+def active_batcher() -> Optional["InferenceBatcher"]:
+    """The :class:`InferenceBatcher` the calling thread registered with (via
+    ``batcher.worker()``), or None.  Consulted by the surrogate apply paths
+    so batching needs no plumbing through the predictor protocol."""
+    return getattr(_TLS, "batcher", None)
+
+
+class _PendingApply:
+    __slots__ = ("key", "fn", "params", "feats", "mask", "out", "done")
+
+    def __init__(self, fn, params, feats, mask):
+        self.key = (id(fn), id(params))
+        self.fn = fn
+        self.params = params
+        self.feats = feats
+        self.mask = mask
+        self.out = None
+        self.done = False
+
+
+def _round_up_pow2(n: int) -> int:
+    return 1 << max(int(n) - 1, 0).bit_length()
+
+
+class InferenceBatcher:
+    """Fuses surrogate applies from concurrent searches into shared calls.
+
+    Worker threads (one per joint-order candidate, or the single defrag
+    proposal thread) register with ``with batcher.worker():``.  Inside the
+    block every jitted apply routes through :meth:`apply`, which parks the
+    request until each registered worker has one pending — or a short
+    timeout fires, so a worker stuck featurizing never stalls the others —
+    then pads all same-model requests into ONE fused apply and hands every
+    caller its own rows back.
+
+    Value-neutrality: requests are grouped by ``(model fn, params)``; token
+    dims are zero-padded to the group maximum and the batch dim to a power
+    of two with sentinel rows (``mask[:, 0] = 1``), exactly the padding the
+    un-batched apply path performs.  The Transformer is row-independent and
+    pad-independent (regression-pinned), so whichever requests happen to fuse,
+    every caller receives bit-identical outputs to a solo apply.  Timing
+    variation can change *grouping*, never *values*.
+    """
+
+    def __init__(self, wait_timeout: float = 0.005):
+        self.wait_timeout = wait_timeout
+        self._cv = threading.Condition()
+        self._workers = 0
+        self._pending: List[_PendingApply] = []
+        self.n_requests = 0
+        self.n_fused_applies = 0
+
+    @contextlib.contextmanager
+    def worker(self):
+        prev = getattr(_TLS, "batcher", None)
+        _TLS.batcher = self
+        with self._cv:
+            self._workers += 1
+        try:
+            yield self
+        finally:
+            _TLS.batcher = prev
+            with self._cv:
+                self._workers -= 1
+                # a departing worker may be the one a barrier was waiting
+                # on: wake parked requests so they flush without it
+                self._cv.notify_all()
+
+    def apply(self, fn, params, feats: np.ndarray, mask: np.ndarray):
+        """Submit one ``fn(params, feats, mask)`` apply; blocks until the
+        fused call containing it completes.  Returns exactly ``len(feats)``
+        decoded rows."""
+        entry = _PendingApply(fn, params, feats, mask)
+        with self._cv:
+            self._pending.append(entry)
+            self.n_requests += 1
+            while not entry.done:
+                if len(self._pending) >= max(self._workers, 1):
+                    self._flush_locked()
+                else:
+                    self._cv.wait(self.wait_timeout)
+                    if not entry.done:
+                        # timeout or a worker departed: flush what we have
+                        self._flush_locked()
+        return entry.out
+
+    def _flush_locked(self) -> None:
+        pending, self._pending = self._pending, []
+        groups: Dict[Tuple[int, int], List[_PendingApply]] = {}
+        for e in pending:
+            groups.setdefault(e.key, []).append(e)
+        for entries in groups.values():
+            self._fuse(entries)
+        self.n_fused_applies += len(groups)
+        self._cv.notify_all()
+
+    @staticmethod
+    def _fuse(entries: List[_PendingApply]) -> None:
+        import jax.numpy as jnp  # deferred: keep module import jax-free
+
+        fn, params = entries[0].fn, entries[0].params
+        T = max(e.feats.shape[1] for e in entries)
+        B = sum(e.feats.shape[0] for e in entries)
+        Bp = _round_up_pow2(max(B, 1))
+        F = entries[0].feats.shape[2]
+        feats = np.zeros((Bp, T, F), entries[0].feats.dtype)
+        mask = np.zeros((Bp, T), entries[0].mask.dtype)
+        mask[B:, 0] = 1.0  # sentinel rows, same as the solo apply path
+        off = 0
+        for e in entries:
+            b, t = e.feats.shape[:2]
+            feats[off:off + b, :t] = e.feats
+            mask[off:off + b, :t] = e.mask
+            off += b
+        out = np.asarray(fn(params, jnp.asarray(feats), jnp.asarray(mask)))
+        off = 0
+        for e in entries:
+            b = e.feats.shape[0]
+            e.out = out[off:off + b]
+            e.done = True
+            off += b

@@ -59,7 +59,7 @@ from repro.core.defrag import (  # shared migration economics (moved there)
     migration_cost,
 )
 from repro.core.intra_host import IntraHostTables
-from repro.core.predict_cache import GradingCache
+from repro.core.predict_cache import GradingCache, InferenceBatcher
 from repro.core.tenancy import Allocation, JobLedger
 
 Subset = List[int]
@@ -206,6 +206,9 @@ class SchedulerConfig:
     migration_cost_per_gpu: float = 2.0  # GB/s of degraded-bw gain per moved GPU
     defrag: bool = False             # background + make-room consolidation
     defrag_config: Optional[DefragConfig] = None  # knobs; defaults when None
+    batch_applies: bool = False      # fuse surrogate applies across the
+    # concurrent scratch searches of one joint plan (batched policy) into
+    # shared device calls; value-neutral (padding identity), default off
 
     def __post_init__(self):
         if self.policy not in POLICIES:
@@ -285,6 +288,10 @@ class AdmissionScheduler:
         self._seq = 0
         self._batch_id = -1
         self._batch_close = float("-inf")
+        # Cross-search inference batcher: shared by every scratch search this
+        # scheduler spawns (joint orders, defrag proposals) so concurrent
+        # searches fuse their surrogate applies into one padded device call.
+        self._batcher = InferenceBatcher() if self.config.batch_applies else None
 
     # -- public -------------------------------------------------------------
 
@@ -678,6 +685,7 @@ class AdmissionScheduler:
             ),
             vectorized=getattr(wrapper, "vectorized", True),
             stats_sink=wrapper.stats if wrapper is not None else None,
+            batcher=self._batcher,
         )
 
     def _defrag_proposer(self) -> defrag_mod.ProposalFan:

@@ -20,6 +20,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+import threading
 import time
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -266,6 +267,25 @@ def pts_search(
             _, hid, _ = single
             s_curr = sorted(by_host[hid])
 
+    # Fused on-device descent: the whole elimination |S| -> k as ONE device
+    # call (``SurrogatePredictor.eliminate_to``; the contention wrapper
+    # threads the analytic cap through as a lattice table).  The frag
+    # penalty is host-side per-round arithmetic, so penalized searches stay
+    # on the host loop; any configuration the scan declines (learned
+    # contention, oversized parents, non-surrogate predictors, ...) falls
+    # through to the loop below unchanged.
+    if (
+        frag_penalty is None
+        and len(s_curr) > k
+        and hasattr(predictor, "eliminate_to")
+    ):
+        res = predictor.eliminate_to(s_curr, k)
+        if res is not None:
+            n0 = len(s_curr)
+            s_curr = list(res.subset)
+            # the descent scored every remove-one child of every round
+            n_cands += (n0 * (n0 + 1) - k * (k + 1)) // 2
+
     # Iterative elimination |S| -> k, one GPU at a time.  Each round is ONE
     # fused featurize+predict call when the predictor has an incremental
     # child path (predict_children: the child batch is the parent's token
@@ -372,6 +392,7 @@ def joint_hybrid_search(
     use_cache: bool = True,
     vectorized: bool = True,
     stats_sink=None,
+    batcher=None,
 ) -> JointResult:
     """Place a batch of ``(job_id, k)`` requests *jointly* against a ledger.
 
@@ -404,9 +425,21 @@ def joint_hybrid_search(
     cached *base* ``predictor`` (the dispatcher's ledger-independent
     isolated memo) to additionally share the expensive isolated inference
     across candidate orders.
+
+    ``batcher`` (an :class:`~repro.core.predict_cache.InferenceBatcher`)
+    runs the candidate orders on concurrent worker threads whose surrogate
+    applies are padded and fused into shared device calls.  Each order's
+    search is a pure function of the (immutable) real ledger, so the orders
+    are independent; the winner is still reduced in the original ``orders``
+    sequence with the same strict ``>`` comparison, and fusion itself is
+    value-neutral (pad/row-independence is regression-pinned), so the
+    chosen plan is byte-identical to the sequential path.
     """
     from repro.core.defrag import make_frag_penalty
-    from repro.core.predict_cache import cached_contention_predictor
+    from repro.core.predict_cache import (
+        PredictorStats,
+        cached_contention_predictor,
+    )
 
     if not requests:
         raise ValueError("joint_hybrid_search needs >=1 request")
@@ -418,14 +451,17 @@ def joint_hybrid_search(
     t0 = time.time()
     if len(requests) == 1:
         orders = orders[:1]
-    best: Optional[JointResult] = None
+    uniq: List[str] = []
     tried = set()
     for order in orders:
-        seq = _ordered_requests(requests, order)
-        key = tuple(r[0] for r in seq)
+        key = tuple(r[0] for r in _ordered_requests(requests, order))
         if key in tried:
             continue  # two orders coincide (e.g. batch already size-sorted)
         tried.add(key)
+        uniq.append(order)
+
+    def _run_order(order: str, sink) -> JointResult:
+        seq = _ordered_requests(requests, order)
         scratch = JobLedger(cluster)
         for a in ledger.jobs():
             scratch.admit(a.job_id, a.gpus)
@@ -434,7 +470,7 @@ def joint_hybrid_search(
                 cluster, predictor, scratch,
                 mode=contention_mode, contended=contended,
                 use_cache=use_cache, vectorized=vectorized,
-                stats_sink=stats_sink,
+                stats_sink=sink,
             )
             if contention_aware else predictor
         )
@@ -465,9 +501,47 @@ def joint_hybrid_search(
         )
         for p, bw in zip(placements, finals):
             p.predicted_bw = float(bw)
-        total = float(finals.sum())
-        if best is None or total > best.total_predicted_bw:
-            best = JointResult(placements, order, total, 0.0)
+        return JointResult(placements, order, float(finals.sum()), 0.0)
+
+    if batcher is not None and len(uniq) > 1:
+        # one worker thread per order; per-thread stats sinks (merged after
+        # the join) keep the shared counters race-free
+        sinks = [PredictorStats() for _ in uniq]
+        results: List[Optional[JointResult]] = [None] * len(uniq)
+        errs: List[Optional[BaseException]] = [None] * len(uniq)
+
+        def _worker(i: int, order: str) -> None:
+            try:
+                with batcher.worker():
+                    results[i] = _run_order(order, sinks[i])
+            except BaseException as e:
+                errs[i] = e
+
+        threads = [
+            threading.Thread(
+                target=_worker, args=(i, o), name=f"joint-order-{o}"
+            )
+            for i, o in enumerate(uniq)
+        ]
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join()
+        for e in errs:
+            if e is not None:
+                raise e
+        if stats_sink is not None:
+            merged = PredictorStats.merged(stats_sink, *sinks)
+            for f in dataclasses.fields(PredictorStats):
+                setattr(stats_sink, f.name, getattr(merged, f.name))
+        candidates = results
+    else:
+        candidates = [_run_order(o, stats_sink) for o in uniq]
+
+    best: Optional[JointResult] = None
+    for cand in candidates:
+        if best is None or cand.total_predicted_bw > best.total_predicted_bw:
+            best = cand
     assert best is not None
     best.seconds = time.time() - t0
     return best

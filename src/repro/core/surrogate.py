@@ -23,6 +23,7 @@ is trivially checkpointable and shardable with the rest of the framework.
 
 from __future__ import annotations
 
+import dataclasses
 import functools
 import time
 from typing import Any, Dict, List, Optional, Sequence, Tuple
@@ -30,12 +31,13 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax import lax
 
 from repro.core import features as feat_lib
 from repro.core.bandwidth_sim import BW_SCALE
 from repro.core.cluster import Cluster
 from repro.core.intra_host import IntraHostTables
-from repro.core.predict_cache import PredictorStats
+from repro.core.predict_cache import PredictorStats, active_batcher
 
 PyTree = Any
 
@@ -249,6 +251,184 @@ def _round_up_pow2(n: int) -> int:
     return p
 
 
+# ---------------------------------------------------------------------------
+# Fused on-device elimination scan: the whole PTS descent as ONE device call
+# ---------------------------------------------------------------------------
+#
+# The host PTS loop pays one featurize + one jitted apply + one host<->device
+# round-trip per elimination round.  The scan below moves the entire descent
+# |S0| -> k into a single XLA program: a ``lax.scan`` whose body re-expresses
+# the per-round child patching of ``features.featurize_children`` as pure
+# gathers over precomputed per-(host, bitmask) tables
+# (:class:`features.DeviceTables`), dispatches Stage-1 single-host children
+# to an exact table lookup, runs the Stage-2 Transformer apply on the rest,
+# applies the (tabulated) analytic contention cap, and takes the per-round
+# argmax — so one device call replaces |S0|-k applies.  This is the
+# ``predict_children_scan`` of the ISSUE, surfaced as
+# ``SurrogatePredictor.eliminate_to`` (a whole descent, not one round).
+#
+# Identity contract: every per-round device score equals
+# ``np.float32(host-path float64 score)`` *by construction* — the channel
+# tables are the host's float64 programs cast once, the small-integer ratio
+# channels are exactly representable, min is monotone under the f32 cast,
+# and the model apply embedded in the scan is bitwise identical to the
+# standalone jitted apply (row/pad/position independence is regression-
+# pinned in ``tests/test_ondevice_scan.py``, which also audits every round
+# of real descents against the host loop).  The per-round *argmax* over f32
+# scores matching the host's argmax over f64 scores is an empirical
+# contract (a near-tie collapsing under the cast could differ) enforced by
+# the pinned trace goldens and the audit tests; ``pts_search`` keeps the
+# host loop as the documented fallback for any configuration the scan
+# declines.
+
+SCAN_MIN_SLOTS = 8    # slot-bucket floor: descent buckets are {8, 16, 32, 64}
+SCAN_MAX_SLOTS = 64   # largest parent the scan path accepts
+_SCAN_MAX_HOST_GPUS = 16   # gather tables are [H, 2**max_g]: bound them
+_SCAN_MAX_LATTICE = 1 << 16  # cap-table bound (paper clusters: 9**4 = 6561)
+
+
+@dataclasses.dataclass
+class ScanResult:
+    """One whole on-device elimination descent ``|S0| -> k``.
+
+    ``scores``/``sels``/``elims`` expose every round's internal state so the
+    audit tests can compare each round against the host loop; ``sels[r]``
+    marks the slots still live *entering* round ``r`` (slot i = the i-th
+    element of the sorted parent), and ``scores[r]`` holds the f32 child
+    scores at those slots (padding / eliminated slots carry mirror-parent
+    garbage and are never selected)."""
+
+    subset: List[int]          # the surviving k GPUs, ascending
+    n_rounds: int              # active elimination rounds (= |S0| - k)
+    n_capped: int              # live children whose cap bound (f32 compare)
+    scores: np.ndarray         # [R, N0b] float32 per-round child scores
+    sels: np.ndarray           # [R, N0b] bool pre-round live slots
+    elims: np.ndarray          # [R] int32 slot eliminated per round
+
+
+def _pts_scan(params, tok0, tok4, stage1, cap_tab, strides, slot_host,
+              slot_bit, sel0, bits0, counts0, k, n_gpus_f):
+    """The fused descent: traced once per (N0b, H, W, L) shape bucket.
+
+    All tables and scalars are runtime arguments, so one compiled
+    executable serves every cluster/ledger/k sharing the bucket shapes.
+    Fixed trip count ``N0b - 1`` with a ``lax.cond`` gate: rounds after the
+    descent reaches ``k`` are no-ops (carry passes through unchanged).
+    """
+    N0b = slot_host.shape[0]
+    H = bits0.shape[0]
+    harange = jnp.arange(H, dtype=jnp.int32)
+    # per-slot one-hot host row / local bit, for child patching + elimination
+    host_oh = (slot_host[:, None] == harange[None, :]).astype(jnp.int32)
+    sub_bits = host_oh * slot_bit[:, None]
+    slot_idx = jnp.arange(N0b)
+
+    def do_round(carry):
+        sel, bits, counts, n = carry
+        # child i = parent minus slot i.  Eliminated/padded slots mirror the
+        # parent itself (valid tokens, no NaN enters the model) and are
+        # excluded from the argmax below.
+        bits_c = jnp.where(sel[:, None], bits[None, :] - sub_bits,
+                           bits[None, :])
+        counts_c = jnp.where(sel[:, None], counts[None, :] - host_oh,
+                             counts[None, :])
+        part = counts_c > 0
+        kc = (n - 1).astype(jnp.float32)
+        cf = counts_c.astype(jnp.float32)
+        # the five isolated channels of features._isolated_channels, as
+        # where-gated gathers (never multiply-by-mask: NaN-safe)
+        ch0 = jnp.where(part, tok0[harange[None, :], bits_c], 0.0)
+        ch1 = jnp.where(part, cf / 8.0, 0.0)
+        ch2 = jnp.where(part, cf / kc, 0.0)
+        ch3 = jnp.where(part, kc / n_gpus_f, 0.0)
+        ch4 = jnp.where(part, tok4[harange[None, :], bits_c], 0.0)
+        feats = jnp.stack([ch0, ch1, ch2, ch3, ch4], axis=-1)
+        # pack participating tokens into the leading slots, hosts ascending
+        # (the order features._pack_tokens scatters into)
+        order = jnp.argsort(
+            jnp.logical_not(part).astype(jnp.int32), axis=1, stable=True
+        )
+        feats_p = jnp.take_along_axis(feats, order[..., None], axis=1)
+        mask = jnp.take_along_axis(part, order, axis=1).astype(jnp.float32)
+        bw = decode_bw(apply_hierarchical(params, feats_p, mask))
+        # Stage-1 dispatch: single-host children read the exact lookup
+        h_star = jnp.argmax(part, axis=1)
+        s1 = stage1[h_star, bits_c[slot_idx, h_star]]
+        n_part = part.sum(axis=1)
+        iso = jnp.where(n_part == 1, s1, bw)
+        # analytic contention cap: one gather on the count-vector lattice
+        cap = cap_tab[(counts_c * strides[None, :]).sum(axis=1)]
+        score = jnp.minimum(iso, cap)
+        n_capped = ((cap < iso) & sel).sum().astype(jnp.int32)
+        elim = jnp.argmax(jnp.where(sel, score, -jnp.inf))
+        oh = (harange == slot_host[elim]).astype(jnp.int32)
+        new_carry = (
+            sel.at[elim].set(False),
+            bits - oh * slot_bit[elim],
+            counts - oh,
+            n - 1,
+        )
+        return new_carry, (score, sel, elim.astype(jnp.int32),
+                           jnp.bool_(True), n_capped)
+
+    def skip_round(carry):
+        ys = (
+            jnp.zeros((N0b,), jnp.float32),
+            jnp.zeros((N0b,), bool),
+            jnp.int32(0),
+            jnp.bool_(False),
+            jnp.int32(0),
+        )
+        return carry, ys
+
+    def body(carry, _):
+        return lax.cond(carry[3] > k, do_round, skip_round, carry)
+
+    carry0 = (sel0, bits0, counts0, sel0.sum().astype(jnp.int32))
+    _, ys = lax.scan(body, carry0, None, length=N0b - 1)
+    return ys
+
+
+# (N0b, H_all, 2**max_g, lattice_size) -> AOT-compiled executable.  Tables
+# and scalars are runtime args, so e.g. H100 and Het-4Mix (both 4x8) share
+# every bucket's executable — and so do every ledger state and every k.
+_SCAN_COMPILED: Dict[Tuple[int, int, int, int], Any] = {}
+
+_pts_scan_jit = jax.jit(_pts_scan)
+
+
+def _scan_args(params, dt, cap_tab, slot_host, slot_bit, sel0, bits0,
+               counts0, k, host_norm):
+    """Build a descent's argument tuple — ONE code path used at both AOT
+    lower time and call time, so avals (shape/dtype/weak_type) always match
+    the compiled executable's signature."""
+    tok4 = dt.tok4 if host_norm else dt.tok4_zero
+    return (
+        params,
+        jnp.asarray(dt.tok0),
+        jnp.asarray(tok4),
+        jnp.asarray(dt.stage1),
+        jnp.asarray(cap_tab),
+        jnp.asarray(dt.strides.astype(np.int32)),
+        jnp.asarray(slot_host),
+        jnp.asarray(slot_bit),
+        jnp.asarray(sel0),
+        jnp.asarray(bits0),
+        jnp.asarray(counts0),
+        jnp.int32(k),
+        jnp.float32(dt.n_gpus_f),
+    )
+
+
+def _compiled_scan(key: Tuple[int, int, int, int], args):
+    """Fetch (or AOT lower+compile) the executable for one shape bucket."""
+    exe = _SCAN_COMPILED.get(key)
+    if exe is None:
+        exe = _pts_scan_jit.lower(*args).compile()
+        _SCAN_COMPILED[key] = exe
+    return exe
+
+
 class SurrogatePredictor:
     """Deployable B̂(S): Stage-1 exact lookup for single-host allocations,
     Stage-2 Transformer for multi-host ones (Fig. 4).
@@ -261,6 +441,11 @@ class SurrogatePredictor:
     pinned trace goldens select identical subsets (``tests/test_fast_path``).
     ``vectorized=False`` falls back to the legacy per-candidate loop
     featurizer (the throughput bench's before-side).
+
+    ``eliminate_to`` runs a whole PTS elimination descent as one fused
+    on-device ``lax.scan`` (``use_scan=False`` disables it — the scan-off
+    side of the throughput bench and the trace goldens); ``warm_scan``
+    AOT-compiles the descent executables ahead of the first admission.
     """
 
     def __init__(
@@ -273,6 +458,7 @@ class SurrogatePredictor:
         host_norm: bool = True,
         vectorized: bool = True,
         bucket_shapes: bool = True,
+        use_scan: bool = True,
     ):
         self.cluster = cluster
         self.tables = tables
@@ -281,6 +467,7 @@ class SurrogatePredictor:
         self.host_norm = host_norm
         self.vectorized = vectorized
         self.bucket_shapes = bucket_shapes
+        self.use_scan = use_scan
         self.max_k = max_k or cluster.n_gpus
         self.stats = PredictorStats()  # instrumentation for Fig. 8
         self._apply = _apply_naive_bw if naive else _apply_hierarchical_bw
@@ -368,6 +555,128 @@ class SurrogatePredictor:
         self.stats.predict_seconds += time.time() - t0
         return out
 
+    # fused on-device descent --------------------------------------------
+
+    def _scan_envelope(self):
+        """The (arrays, device tables) pair when this predictor/cluster is
+        inside the scan envelope, else None."""
+        if self.naive or not self.vectorized or not self.use_scan:
+            return None
+        arrays = feat_lib.host_arrays(self.cluster, self.tables)
+        if arrays.max_host_gpus > _SCAN_MAX_HOST_GPUS:
+            return None
+        dt = feat_lib.device_tables(self.cluster, self.tables)
+        if dt.lattice_size > _SCAN_MAX_LATTICE:
+            return None
+        return arrays, dt
+
+    def eliminate_to(
+        self,
+        parent: Sequence[int],
+        k: int,
+        caps: Optional[np.ndarray] = None,
+    ) -> Optional[ScanResult]:
+        """Run the whole PTS elimination descent ``|parent| -> k`` as one
+        fused on-device ``lax.scan`` (see the module section above).
+
+        ``caps`` is a float32 ``[lattice_size]`` analytic-cap table (the
+        contention wrapper builds one per ledger version); None means
+        uncapped (isolated scoring).  Returns a :class:`ScanResult`, or
+        None when the configuration is outside the scan envelope — the
+        caller falls back to the host loop, which is always correct."""
+        env = self._scan_envelope()
+        if env is None:
+            return None
+        arrays, dt = env
+        parent = sorted(parent)
+        n0 = len(parent)
+        if k < 1 or n0 <= k:
+            return None
+        if len(self.cluster.partition_by_host(parent)) < 2:
+            return None  # single-host descent: Stage-1 host loop is exact
+        N0b = max(_round_up_pow2(n0), SCAN_MIN_SLOTS)
+        if N0b > SCAN_MAX_SLOTS:
+            return None
+        t0 = time.time()
+        if caps is None:
+            caps = dt.caps_inf()
+        slot_host = np.zeros((N0b,), np.int32)
+        slot_bit = np.zeros((N0b,), np.int32)
+        slot_host[:n0] = arrays.gpu_host[parent]
+        slot_bit[:n0] = arrays.gpu_bit[parent]
+        sel0 = np.zeros((N0b,), bool)
+        sel0[:n0] = True
+        pbits, pcounts, _, _, _ = feat_lib._batch_bits_counts(
+            arrays, [parent]
+        )
+        bits0 = pbits[0].astype(np.int32)
+        counts0 = pcounts[0].astype(np.int32)
+        H = bits0.shape[0]
+        args = _scan_args(self.params, dt, caps, slot_host, slot_bit,
+                          sel0, bits0, counts0, k, self.host_norm)
+        exe = _compiled_scan((N0b, H, dt.mask_size, caps.shape[0]), args)
+        ys = exe(*args)
+        scores = np.asarray(ys[0])
+        sels = np.asarray(ys[1])
+        elims = np.asarray(ys[2])
+        actives = np.asarray(ys[3])
+        capped = np.asarray(ys[4])
+        R = int(actives.sum())
+        sel = sel0.copy()
+        for r in range(R):
+            sel[elims[r]] = False
+        subset = [parent[i] for i in np.nonzero(sel[:n0])[0]]
+        if R != n0 - k or len(subset) != k:
+            return None  # never expected; host loop is the safe fallback
+        self.stats.scan_seconds += time.time() - t0
+        self.stats.n_scan_steps += R
+        return ScanResult(
+            subset=subset,
+            n_rounds=R,
+            n_capped=int(capped[:R].sum()),
+            scores=scores[:R],
+            sels=sels[:R],
+            elims=elims[:R],
+        )
+
+    def warm_scan(self, buckets: Optional[Sequence[int]] = None) -> float:
+        """AOT-compile (lower + compile, no execution) the descent
+        executables for the cluster's slot buckets, so the first admission
+        carries no compile spike.  Returns seconds spent; 0.0 when every
+        bucket was already compiled (the executables are process-wide and
+        shared across same-shaped clusters)."""
+        env = self._scan_envelope()
+        if env is None:
+            return 0.0
+        _, dt = env
+        if buckets is None:
+            top = min(
+                max(_round_up_pow2(self.cluster.n_gpus), SCAN_MIN_SLOTS),
+                SCAN_MAX_SLOTS,
+            )
+            buckets = []
+            b = SCAN_MIN_SLOTS
+            while b <= top:
+                buckets.append(b)
+                b *= 2
+        spent = 0.0
+        H = self.cluster.n_hosts
+        caps = dt.caps_inf()
+        for N0b in buckets:
+            key = (N0b, H, dt.mask_size, caps.shape[0])
+            if key in _SCAN_COMPILED:
+                continue
+            args = _scan_args(
+                self.params, dt, caps,
+                np.zeros((N0b,), np.int32), np.ones((N0b,), np.int32),
+                np.ones((N0b,), bool), np.zeros((H,), np.int32),
+                np.zeros((H,), np.int32), 1, self.host_norm,
+            )
+            t0 = time.time()
+            _compiled_scan(key, args)
+            spent += time.time() - t0
+        return spent
+
     def _predict_model(self, subsets: Sequence[Sequence[int]]) -> np.ndarray:
         if self.naive:
             t0 = time.time()
@@ -406,6 +715,14 @@ class SurrogatePredictor:
             if H < feats.shape[1]:
                 feats = feats[:, :H]
                 mask = mask[:, :H]
+        batcher = active_batcher()
+        if batcher is not None:
+            # cross-search fusion: the batcher performs the same B padding
+            # (value-neutral), possibly alongside other searches' requests
+            decoded = batcher.apply(self._apply, self.params, feats, mask)
+            self.stats.n_model_calls += B
+            self.stats.infer_seconds += time.time() - t1
+            return decoded
         Bp = _round_up_pow2(max(B, 1))
         feats = np.pad(feats, ((0, Bp - B), (0, 0), (0, 0)))
         mask_p = np.pad(mask, ((0, Bp - B), (0, 0)))
@@ -510,16 +827,20 @@ class ContendedSurrogatePredictor:
                 if T < feats.shape[1]:
                     feats = feats[:, :T]
                     mask = mask[:, :T]
-            feats = np.pad(feats, ((0, Bp - B), (0, 0), (0, 0)))
-            mask_p = np.pad(mask, ((0, Bp - B), (0, 0)))
-            mask_p[B:, 0] = 1.0
             self.stats.featurize_seconds += time.time() - tf
             ti = time.time()
-            preds = self._apply(
-                self.params, jnp.asarray(feats), jnp.asarray(mask_p)
-            )
+            batcher = active_batcher()
+            if batcher is not None:
+                decoded = batcher.apply(self._apply, self.params, feats, mask)
+            else:
+                feats = np.pad(feats, ((0, Bp - B), (0, 0), (0, 0)))
+                mask_p = np.pad(mask, ((0, Bp - B), (0, 0)))
+                mask_p[B:, 0] = 1.0
+                preds = self._apply(
+                    self.params, jnp.asarray(feats), jnp.asarray(mask_p)
+                )
+                decoded = np.asarray(preds)[:B]
             self.stats.n_model_calls += B
-            decoded = np.asarray(preds)[:B]
             self.stats.infer_seconds += time.time() - ti
             for i, p in zip(model_idx, decoded):
                 out[i] = p
