@@ -1,0 +1,273 @@
+"""Concurrent-admission control plane (ISSUE 7): CAS throughput + recovery.
+
+Drives wave-shaped admission storms through
+:class:`repro.core.controlplane.AdmissionControlPlane` on H100 and
+compares against the plain serialized ``dispatcher.admit`` loop: each
+wave submits ~30 GPUs worth of k in {2..6} jobs through ``admit_many``
+(every member searches against the same pinned ledger snapshot, so
+waves maximize CAS contention), asserts the committed placements are
+pairwise disjoint (the zero-double-allocation invariant), then releases
+everything and starts the next wave.  Worker counts 1/4/8 are timed as
+the best of ``BENCH_CPLANE_REPS`` repetitions after one untimed
+warm-up pass per side (JIT shape compiles are process-wide and must not
+land in a timed window; min-of-reps filters scheduler-quantum stalls a
+shared 1-core runner inflicts on any single rep).
+
+Scaling honesty: admission staging is GIL-bound Python around
+GIL-releasing XLA applies.  On a multi-core host the w4/w1 ratio
+reflects genuine overlap; on a 1-vCPU host there is no second core to
+overlap onto and the ratio hovers at ~1x (conflict retries are the only
+added work).  When the measured scaling misses the >1x target the
+``cplane_scaling`` row documents that ceiling rather than hiding it,
+mirroring ``dispatch_tput_target``.
+
+Recovery: synthetic admit/release/migrate streams of increasing length
+are journaled and replayed through ``replay_journal``; every replay is
+asserted bit-identical (allocations + version counter) to the live
+ledger that wrote the journal before its timing is reported.
+
+Rows:
+  cplane_tput_serial      — us per admission, plain dispatcher.admit loop
+  cplane_tput_w{N}        — us per admission at N workers, notes = adm/s
+                            + conflict/validated/serialized/parked counts
+  cplane_scaling          — w4/w1 and w4/serial ratios, target >1x w4/w1,
+                            zero-double-alloc flag, ceiling note when the
+                            1-core GIL bound keeps the ratio at ~1x
+  cplane_journal          — w4 with write-ahead journal attached: percent
+                            overhead vs journal-off, replay checked
+                            version-identical
+  cplane_recovery         — replay_journal events/sec at each stream
+                            length in BENCH_CPLANE_JOURNAL_EVENTS
+"""
+
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+
+import numpy as np
+
+import repro.core as core
+from repro.core.controlplane import (
+    AdmissionControlPlane,
+    LedgerJournal,
+    replay_journal,
+)
+from repro.core.tenancy import JobLedger
+from benchmarks.common import csv_row, get_context
+
+N_WAVES = int(os.environ.get("BENCH_CPLANE_WAVES", "6"))
+N_REPS = int(os.environ.get("BENCH_CPLANE_REPS", "3"))
+JOURNAL_EVENTS = tuple(
+    int(s) for s in
+    os.environ.get("BENCH_CPLANE_JOURNAL_EVENTS", "200,800,3200").split(",")
+)
+WORKERS = (1, 4, 8)
+WAVE_GPU_CAP = 30  # of H100's 32: near-full waves force real contention
+
+
+def _waves(rng):
+    waves = []
+    for _ in range(N_WAVES):
+        wave, total = [], 0
+        while True:
+            k = int(rng.integers(2, 7))
+            if total + k > WAVE_GPU_CAP:
+                break
+            wave.append(k)
+            total += k
+        waves.append(wave)
+    return waves
+
+
+def _dispatcher(ctx):
+    pred = core.SurrogatePredictor(ctx.cluster, ctx.tables, ctx.params)
+    return core.BandPilotDispatcher(
+        ctx.cluster, ctx.tables, pred, aot_warm=False
+    )
+
+
+def _assert_disjoint(outcomes):
+    taken = set()
+    for out in outcomes:
+        gpus = set(out.alloc.gpus)
+        assert not (gpus & taken), (
+            f"double allocation: {out.job_id} overlaps {gpus & taken}"
+        )
+        taken |= gpus
+
+
+def _run_serial(ctx, waves):
+    disp = _dispatcher(ctx)
+    t0 = time.time()
+    for wi, wave in enumerate(waves):
+        ids = [f"s{wi}-{i}" for i in range(len(wave))]
+        for jid, k in zip(ids, wave):
+            disp.admit(jid, k)
+        for jid in ids:
+            disp.release(jid)
+    return time.time() - t0, None
+
+
+def _run_cplane(ctx, waves, n_workers, journal=None):
+    disp = _dispatcher(ctx)
+    cp = AdmissionControlPlane(disp, n_workers=n_workers, journal=journal)
+    t0 = time.time()
+    for wi, wave in enumerate(waves):
+        outs = cp.admit_many(
+            [(f"c{wi}-{i}", k, "") for i, k in enumerate(wave)],
+            timeout=300,
+        )
+        assert all(o is not None and o.admitted for o in outs)
+        _assert_disjoint(outs)
+        for out in outs:
+            cp.release(out.job_id)
+    dt = time.time() - t0
+    assert len(cp.ledger) == 0, "ledger failed to drain"
+    stats = cp.stats.as_dict()
+    version = cp.ledger.version
+    cp.shutdown()
+    return dt, (stats, version)
+
+
+def _best_run(fn, *args, **kw):
+    """Best-of-reps: a shared 1-core box can stall any single rep for
+    whole scheduler quanta, and min() is the standard de-noiser for
+    throughput microbenches (median still admits one stall at reps=2)."""
+    times, last = [], None
+    for _ in range(N_REPS):
+        dt, extra = fn(*args, **kw)
+        times.append(dt)
+        last = extra
+    return min(times), last
+
+
+def _synthetic_journal(cluster, path, n_events, rng):
+    """Journal ``n_events`` random admit/release/migrate ops; return the
+    live ledger they produced (the replay oracle)."""
+    ledger = JobLedger(cluster)
+    ledger.attach_journal(LedgerJournal(path))
+    live, uid = [], 0
+    while ledger.version < n_events:
+        free = sorted(ledger.available())
+        op = int(rng.integers(3))
+        if live and (op == 0 or not free):
+            ledger.release(live.pop(int(rng.integers(len(live)))))
+        elif live and op == 1 and len(free) >= 2:
+            jid = live[int(rng.integers(len(live)))]
+            k = len(ledger.allocation(jid).gpus)
+            if len(free) >= k:
+                pick = rng.choice(len(free), size=k, replace=False)
+                ledger.migrate(jid, [free[i] for i in pick])
+        elif free:
+            k = min(int(rng.integers(1, 5)), len(free))
+            pick = rng.choice(len(free), size=k, replace=False)
+            jid = f"j{uid}"
+            uid += 1
+            ledger.admit(jid, [free[i] for i in pick])
+            live.append(jid)
+    ledger.journal.close()
+    return ledger
+
+
+def _ledger_state(ledger):
+    return (
+        sorted((a.job_id, tuple(a.gpus)) for a in ledger.jobs()),
+        ledger.version,
+    )
+
+
+def run() -> list:
+    rows = []
+    ctx = get_context("H100")
+    waves = _waves(np.random.default_rng(5))
+    n_jobs = sum(len(w) for w in waves)
+
+    # untimed warm-up of every side: JIT shape buckets are compiled
+    # process-wide, and racing searches reach shapes serial replay never
+    # touches — both must land before any timed window
+    _run_serial(ctx, waves)
+    for w in WORKERS:
+        _run_cplane(ctx, waves, w)
+
+    dt_serial, _ = _best_run(_run_serial, ctx, waves)
+    rows.append(csv_row(
+        "cplane_tput_serial", 1e6 * dt_serial / n_jobs,
+        f"adm_per_s={n_jobs / dt_serial:.1f};jobs={n_jobs};waves={N_WAVES}",
+    ))
+
+    tput = {}
+    for w in WORKERS:
+        dt, (stats, _) = _best_run(_run_cplane, ctx, waves, w)
+        tput[w] = n_jobs / dt
+        rows.append(csv_row(
+            f"cplane_tput_w{w}", 1e6 * dt / n_jobs,
+            f"adm_per_s={tput[w]:.1f};"
+            f"cas_commits={stats['n_cas_commits']};"
+            f"conflicts={stats['n_conflicts']};"
+            f"validated={stats['n_validated']};"
+            f"serialized={stats['n_serialized']};"
+            f"parked={stats['n_parked']}",
+        ))
+
+    sc_14 = tput[4] / tput[1]
+    sc_vs_serial = tput[4] / (n_jobs / dt_serial)
+    met = sc_14 > 1.0
+    note = (
+        f"scaling_w1_to_w4={sc_14:.2f}x;vs_serial={sc_vs_serial:.2f}x;"
+        f"target=>1x;met={met};zero_double_alloc=True"
+    )
+    if not met:
+        # acceptance escape hatch: staging is GIL-bound Python — without a
+        # second core to overlap the GIL-releasing XLA applies onto, w4 adds
+        # only conflict-retry work over w1; document the ceiling instead
+        note += f";ceiling_documented=True;cores={os.cpu_count()}"
+    rows.append(csv_row("cplane_scaling", 0.0, note))
+
+    with tempfile.TemporaryDirectory() as tmp:
+        # warm the journaled config too — racing commit orders reach JIT
+        # shapes the journal-off warm-up may never have compiled
+        _run_cplane(ctx, waves, 4, journal=os.path.join(tmp, "warm.journal"))
+        # single rep: the journal is append-only, so a second rep on the
+        # same path would replay to the concatenation of both runs
+        jpath = os.path.join(tmp, "admissions.journal")
+        dt_j, (_, version) = _run_cplane(ctx, waves, 4, journal=jpath)
+        replayed = replay_journal(jpath, ctx.cluster)
+        assert len(replayed) == 0 and replayed.version == version, (
+            "journal replay diverged from the live ledger"
+        )
+        overhead = 100.0 * (dt_j - (n_jobs / tput[4])) / (n_jobs / tput[4])
+        rows.append(csv_row(
+            "cplane_journal", 1e6 * dt_j / n_jobs,
+            f"adm_per_s={n_jobs / dt_j:.1f};"
+            f"overhead_vs_nojournal={overhead:.1f}%;"
+            f"replay_version_identical=True",
+        ))
+
+        notes = []
+        us_per_event = float("nan")
+        for n_events in JOURNAL_EVENTS:
+            path = os.path.join(tmp, f"recovery_{n_events}.journal")
+            oracle = _synthetic_journal(
+                ctx.cluster, path, n_events, np.random.default_rng(n_events)
+            )
+            t0 = time.time()
+            rebuilt = replay_journal(path, ctx.cluster)
+            dt = time.time() - t0
+            assert _ledger_state(rebuilt) == _ledger_state(oracle), (
+                f"recovery replay diverged at {n_events} events"
+            )
+            n = rebuilt.version  # events actually journaled
+            notes.append(f"{n}ev={n / dt:.0f}ev/s")
+            us_per_event = 1e6 * dt / n
+        rows.append(csv_row(
+            "cplane_recovery", us_per_event,
+            ";".join(notes) + ";bit_identical=True",
+        ))
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(row)

@@ -27,6 +27,7 @@ from benchmarks import (
     bench_learned_contention,
     bench_defrag,
     bench_dispatch_throughput,
+    bench_controlplane,
 )
 
 BENCHES = [
@@ -43,6 +44,7 @@ BENCHES = [
     ("issue3_learned_contention", bench_learned_contention.run),
     ("issue4_defrag", bench_defrag.run),
     ("issue6_dispatch_throughput", bench_dispatch_throughput.run),
+    ("issue7_controlplane", bench_controlplane.run),
 ]
 
 

@@ -33,6 +33,12 @@ Public surface:
     PredictorStats / cached_contention_predictor, features.featurize_batch
     (vectorized) / featurize_children (incremental PTS rounds),
     BandPilotDispatcher(cache=True), JobLedger.version
+  Concurrent-admission control plane (CAS admissions, journal, QoS):
+    controlplane.AdmissionControlPlane / AdmissionOutcome / TenantPolicy,
+    LedgerJournal / read_journal / replay_journal, JobLedger.admit_if /
+    migrate / get, CapacityError / InvalidPlacementError / VersionConflict,
+    SchedulerConfig(tenant_policies=..., concurrent_workers=...,
+    journal_path=...)
 """
 
 from repro.core.bandwidth_sim import BW_SCALE, BandwidthSimulator
@@ -91,6 +97,16 @@ from repro.core.dispatcher import (
     replay_trace,
     summarize,
 )
+from repro.core.controlplane import (
+    AdmissionControlPlane,
+    AdmissionOutcome,
+    ControlPlaneStats,
+    JournalEvent,
+    LedgerJournal,
+    TenantPolicy,
+    read_journal,
+    replay_journal,
+)
 from repro.core.intra_host import IntraHostTables
 from repro.core.predict_cache import (
     CachedPredictor,
@@ -111,7 +127,13 @@ from repro.core.scheduler import (
     poisson_trace,
     summarize_trace,
 )
-from repro.core.tenancy import Allocation, JobLedger
+from repro.core.tenancy import (
+    Allocation,
+    CapacityError,
+    InvalidPlacementError,
+    JobLedger,
+    VersionConflict,
+)
 from repro.core.search import (
     eha_search,
     hybrid_search,
@@ -155,6 +177,17 @@ __all__ = [
     "summarize",
     "Allocation",
     "JobLedger",
+    "CapacityError",
+    "InvalidPlacementError",
+    "VersionConflict",
+    "AdmissionControlPlane",
+    "AdmissionOutcome",
+    "ControlPlaneStats",
+    "JournalEvent",
+    "LedgerJournal",
+    "TenantPolicy",
+    "read_journal",
+    "replay_journal",
     "ContentionAwarePredictor",
     "MergeView",
     "contended_inter_cap",

@@ -682,5 +682,6 @@ def apply_plan(ledger: JobLedger, plan: DefragPlan) -> None:
     disjointness, so a stale plan raises rather than corrupts.
     """
     for mv in plan.moves:
-        ledger.release(mv.job_id)
-        ledger.admit(mv.job_id, mv.new_gpus)
+        # one atomic journal event per move (version bumps by 2, identical
+        # to the release+admit pair this replaces)
+        ledger.migrate(mv.job_id, mv.new_gpus)

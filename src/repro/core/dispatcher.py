@@ -48,7 +48,12 @@ from repro.core.scheduler import (  # re-exported: the public trace surface
     summarize_trace,
 )
 from repro.core.surrogate import SurrogatePredictor
-from repro.core.tenancy import Allocation, JobLedger
+from repro.core.tenancy import (  # typed admit errors re-exported here
+    Allocation,
+    CapacityError,
+    InvalidPlacementError,
+    JobLedger,
+)
 
 Subset = List[int]
 
@@ -56,6 +61,7 @@ __all__ = [  # keeps `from repro.core.dispatcher import TraceJob, ...` valid
     "AdmissionScheduler", "SchedulerConfig", "TenantRecord", "TraceJob",
     "poisson_trace", "summarize_trace", "replay_trace",
     "BandPilotDispatcher", "BaselineDispatcher", "DispatcherService",
+    "CapacityError", "InvalidPlacementError",
     "GroundTruthPredictor", "EvalRecord", "evaluate_dispatchers",
     "summarize", "gbe_by_k", "bw_loss_by_k", "compare_contention_awareness",
 ]
@@ -121,24 +127,38 @@ class DispatcherService:
         a no-op sink otherwise.  Returns the job's allocation, or None for
         a stale report (job already released — an ordinary race between a
         job's last measurement and its departure; the sample is dropped
-        because its co-tenant context is gone)."""
-        if job_id not in self.ledger:
-            return None
-        alloc = self.ledger.allocation(job_id)
-        if self.harvester is not None:
-            self.harvester.observe(self.ledger, alloc.gpus, bw)
+        because its co-tenant context is gone).
+
+        The lookup is a single atomic ``ledger.get`` — the historical
+        ``in`` + ``allocation()`` pair was a TOCTOU that turns into a real
+        KeyError once releases commit concurrently — and the harvest runs
+        under the ledger lock so the co-tenant snapshot it records belongs
+        to the same version as the allocation it saw."""
+        with self.ledger.lock:
+            alloc = self.ledger.get(job_id)
+            if alloc is None:
+                return None
+            if self.harvester is not None:
+                self.harvester.observe(self.ledger, alloc.gpus, bw)
         return alloc
 
     def admit(self, job_id: str, k: int, rng=None) -> Allocation:
-        """Place a k-GPU job on currently-free GPUs and record it live."""
+        """Place a k-GPU job on currently-free GPUs and record it live.
+
+        Raises :class:`CapacityError` (queueable: retry at the next
+        release) when too few GPUs are free, and
+        :class:`InvalidPlacementError` (a policy bug: crash loudly, never
+        queue) when the policy returns a subset violating the request.
+        Both subclass ValueError, so legacy catch sites keep working.
+        """
         avail = self.ledger.available()
         if k > len(avail):
-            raise ValueError(
+            raise CapacityError(
                 f"admit({job_id!r}, k={k}): only {len(avail)} GPUs free"
             )
         subset = self.dispatch(avail, k, rng=rng)
         if len(subset) != k or not set(subset) <= set(avail):
-            raise ValueError(
+            raise InvalidPlacementError(
                 f"{self.name} returned an invalid allocation for k={k}: "
                 f"{subset}"
             )

@@ -114,40 +114,44 @@ class LruDict(OrderedDict):
     values — every value is a pure function of its key — so capping a cache
     can never change what a lookup-or-recompute path returns, only how often
     it recomputes (property-tested in ``tests/test_ondevice_scan.py``).
-    Individual operations are single C-level calls (GIL-atomic), which is
-    all the concurrent joint-order threads need from the shared lifetime
-    memo.
+
+    Every operation is a read-modify-write *pair* (lookup + move_to_end,
+    insert + evict), so GIL atomicity of the individual C calls is not
+    enough once admissions overlap: interleaved pairs can corrupt the
+    recency order (move_to_end on a concurrently evicted key) or evict the
+    entry another thread just promoted.  A reentrant lock makes each
+    operation atomic — it is uncontended in the serial paths and the
+    hammer test in ``tests/test_controlplane.py`` pins the concurrent
+    behaviour.
     """
 
     def __init__(self, max_entries: int):
         super().__init__()
         self.max_entries = int(max_entries)
+        self._lock = threading.RLock()  # get() re-enters via __getitem__
 
     def __getitem__(self, key):
-        val = super().__getitem__(key)
-        try:
+        with self._lock:
+            val = super().__getitem__(key)
             self.move_to_end(key)
-        except KeyError:
-            pass  # concurrently evicted between the two calls
-        return val
+            return val
 
     def get(self, key, default=None):
-        try:
-            return self[key]
-        except KeyError:
-            return default
+        with self._lock:
+            try:
+                return self[key]
+            except KeyError:
+                return default
 
     def __setitem__(self, key, value):
-        super().__setitem__(key, value)
-        try:
+        with self._lock:
+            super().__setitem__(key, value)
             self.move_to_end(key)
-        except KeyError:
-            pass
-        while len(self) > self.max_entries:
-            try:
-                self.popitem(last=False)
-            except KeyError:
-                break
+            # evict with del, not popitem(): OrderedDict.popitem re-enters
+            # the subclass __getitem__ after unlinking the key, which would
+            # trip the recency refresh on a half-removed entry
+            while len(self) > self.max_entries:
+                del self[next(iter(self))]
 
 
 class PredictionCache:
@@ -190,7 +194,10 @@ class PredictionCache:
             return self._static
         v = self.version()
         if v != self._window_version:
-            # occupancy changed: every outstanding versioned entry is stale
+            # occupancy changed: clear for memory hygiene.  Correctness no
+            # longer depends on this — entry keys carry the version (see
+            # CachedPredictor._lookup), so a racing clear/insert can only
+            # leave an unreachable entry behind, never serve a stale one.
             self._window.clear()
             self._window_version = v
         return self._window
@@ -219,7 +226,14 @@ class CachedPredictor:
 
     def _lookup(self, subsets: Sequence[Sequence[int]]):
         store = self.cache.store_for(self.versioned)
-        keys = [(tuple(s), self.mode) for s in subsets]
+        # the ledger version is part of the KEY, not just the window-clear
+        # trigger: a worker that looked up at version v, computed through
+        # the base predictor while another thread committed (bumping the
+        # version and clearing the window), then stored its result, writes
+        # an entry reachable only by v-keyed lookups — a cross-version hit
+        # is impossible by construction, not just by clearing discipline
+        v = self.cache.version() if self.versioned else _UNVERSIONED
+        keys = [(tuple(s), self.mode, v) for s in subsets]
         out = np.empty((len(subsets),), np.float64)
         miss = []
         for i, key in enumerate(keys):

@@ -54,13 +54,14 @@ import numpy as np
 from repro.core import baselines, defrag as defrag_mod, search
 from repro.core.bandwidth_sim import BandwidthSimulator
 from repro.core.cluster import Cluster
+from repro.core.controlplane import TenantPolicy  # per-tenant QoS rows
 from repro.core.defrag import (  # shared migration economics (moved there)
     DefragConfig,
     migration_cost,
 )
 from repro.core.intra_host import IntraHostTables
 from repro.core.predict_cache import GradingCache, InferenceBatcher
-from repro.core.tenancy import Allocation, JobLedger
+from repro.core.tenancy import Allocation, InvalidPlacementError, JobLedger
 
 Subset = List[int]
 
@@ -73,12 +74,17 @@ POLICIES = ("fifo", "backfill", "batched")
 
 @dataclasses.dataclass(frozen=True)
 class TraceJob:
-    """One job of a tenancy trace: arrives, holds k GPUs, departs."""
+    """One job of a tenancy trace: arrives, holds k GPUs, departs.
+
+    ``tenant`` attributes the job to a QoS policy row
+    (``SchedulerConfig(tenant_policies=...)``); the default "" tenant has
+    no policy, so legacy traces behave exactly as before."""
 
     job_id: str
     arrival: float
     duration: float
     k: int
+    tenant: str = ""
 
 
 @dataclasses.dataclass
@@ -209,6 +215,15 @@ class SchedulerConfig:
     batch_applies: bool = False      # fuse surrogate applies across the
     # concurrent scratch searches of one joint plan (batched policy) into
     # shared device calls; value-neutral (padding identity), default off
+    # -- ISSUE 7: control-plane integration (all default-off) ---------------
+    tenant_policies: Optional[Dict[str, TenantPolicy]] = None  # QoS rows:
+    # max_concurrent gates admission, max_queued rejects at enqueue,
+    # priority_boost reorders backfill/batched candidates
+    concurrent_workers: int = 0      # >0: fifo admissions go through the
+    # AdmissionControlPlane with this many staging workers (opt-in; serial
+    # replay is byte-identical at 0)
+    journal_path: Optional[str] = None  # write-ahead ledger journal file;
+    # journaling never changes placements (regression-pinned)
 
     def __post_init__(self):
         if self.policy not in POLICIES:
@@ -219,6 +234,13 @@ class SchedulerConfig:
             raise ValueError("batch_window must be >= 0")
         if self.aging_limit < 1:
             raise ValueError("aging_limit must be >= 1")
+        if self.concurrent_workers < 0:
+            raise ValueError("concurrent_workers must be >= 0")
+        if self.concurrent_workers > 0 and self.policy != "fifo":
+            raise ValueError(
+                "concurrent admission is only defined for the fifo policy "
+                "(backfill/batched drain logic is inherently sequential)"
+            )
         if self.defrag:
             # within one scheduler there is ONE migration price: redispatch
             # and defrag moves must never charge different costs per GPU
@@ -279,6 +301,7 @@ class AdmissionScheduler:
         self.grade = grade
         self.records: List[TenantRecord] = []
         self.migrations: List[MigrationEvent] = []
+        self.rejected: List[TraceJob] = []     # dropped by tenant max_queued
         self._defrag_spent = 0                 # moves charged to the budget
         self._last_defrag = float("-inf")      # last background pass time
         self._rec_by_job: Dict[str, TenantRecord] = {}
@@ -292,6 +315,29 @@ class AdmissionScheduler:
         # scheduler spawns (joint orders, defrag proposals) so concurrent
         # searches fuse their surrogate applies into one padded device call.
         self._batcher = InferenceBatcher() if self.config.batch_applies else None
+        # Tenant QoS accounting (live-job counts per tenant, job -> tenant)
+        self._tenant_live: Dict[str, int] = {}
+        self._job_tenant: Dict[str, str] = {}
+        # Opt-in concurrent fifo admission: eligible queue prefixes are
+        # admitted as a group through the control plane (staged searches
+        # overlap, commits CAS on the ledger version).  journal_path alone
+        # attaches a write-ahead journal to the serial path.
+        self._cplane = None
+        if self.config.concurrent_workers > 0:
+            from repro.core.controlplane import AdmissionControlPlane
+
+            self._cplane = AdmissionControlPlane(
+                dispatcher,
+                n_workers=self.config.concurrent_workers,
+                journal=self.config.journal_path,
+                rng=rng,
+            )
+        elif self.config.journal_path is not None:
+            from repro.core.controlplane import LedgerJournal
+
+            dispatcher.ledger.attach_journal(
+                LedgerJournal(self.config.journal_path)
+            )
 
     # -- public -------------------------------------------------------------
 
@@ -320,10 +366,14 @@ class AdmissionScheduler:
                     f"{self.cluster.n_gpus}-GPU cluster"
                 )
         self._durations = {j.job_id: j.duration for j in trace}
-        for job in sorted(trace, key=lambda j: j.arrival):
-            self._release_until(job.arrival)
-            self._on_arrival(job)
-        self._release_until(float("inf"))
+        try:
+            for job in sorted(trace, key=lambda j: j.arrival):
+                self._release_until(job.arrival)
+                self._on_arrival(job)
+            self._release_until(float("inf"))
+        finally:
+            if self._cplane is not None:
+                self._cplane.shutdown()
         if self._waiting or len(ledger) != 0:
             raise RuntimeError(
                 f"replay did not drain: {len(self._waiting)} jobs still "
@@ -336,7 +386,13 @@ class AdmissionScheduler:
     def _release_until(self, horizon: float) -> None:
         while self._departures and self._departures[0][0] <= horizon:
             t_end, _, job_id = heapq.heappop(self._departures)
-            self.dispatcher.release(job_id)
+            if self._cplane is not None:
+                self._cplane.release(job_id)  # keeps its tenant counts live
+            else:
+                self.dispatcher.release(job_id)
+            tenant = self._job_tenant.pop(job_id, None)
+            if tenant is not None:
+                self._tenant_live[tenant] -= 1
             self._drain(t_end)
             if self.config.redispatch:
                 self._maybe_redispatch(t_end)
@@ -346,10 +402,24 @@ class AdmissionScheduler:
     def _on_arrival(self, job: TraceJob) -> None:
         ledger = self.dispatcher.ledger
         fits = job.k <= ledger.n_free()
-        if not self._waiting and fits:
+        if not self._waiting and fits and self._tenant_ok(job.tenant):
             # spare capacity, empty queue: no policy holds the job back
-            self._admit_via_dispatcher(job, job.arrival)
+            if self._cplane is not None:
+                # concurrent mode admits through the control plane; the
+                # singleton group keeps one code path
+                self._enqueue(job)
+                self._drain(job.arrival)
+            else:
+                self._admit_via_dispatcher(job, job.arrival)
             return
+        pol = self._policy_for(job.tenant)
+        if pol is not None and pol.max_queued is not None:
+            waiting = sum(
+                1 for e in self._waiting if e.job.tenant == job.tenant
+            )
+            if waiting >= pol.max_queued:
+                self.rejected.append(job)  # over the tenant's queue cap
+                return
         self._enqueue(job)
         if self.config.policy != "fifo":
             # backfill/batched may admit at arrival time (fifo never does:
@@ -379,13 +449,92 @@ class AdmissionScheduler:
         else:
             self._drain_batched(t)
 
+    # -- tenant QoS ---------------------------------------------------------
+
+    def _policy_for(self, tenant: str) -> Optional[TenantPolicy]:
+        return (self.config.tenant_policies or {}).get(tenant)
+
+    def _tenant_ok(self, tenant: str, staged: Optional[Dict] = None) -> bool:
+        """May this tenant take one more live job right now?  ``staged``
+        adds not-yet-committed same-drain admissions to the live count."""
+        pol = self._policy_for(tenant)
+        if pol is None or pol.max_concurrent is None:
+            return True
+        live = self._tenant_live.get(tenant, 0)
+        if staged:
+            live += staged.get(tenant, 0)
+        return live < pol.max_concurrent
+
+    def _boost(self, tenant: str) -> int:
+        pol = self._policy_for(tenant)
+        return pol.priority_boost if pol is not None else 0
+
     # -- policies -----------------------------------------------------------
 
     def _drain_fifo(self, t: float) -> None:
+        if self._cplane is not None:
+            self._drain_fifo_concurrent(t)
+            return
         ledger = self.dispatcher.ledger
         while (self._waiting
-               and self._waiting[0].job.k <= ledger.n_free()):
+               and self._waiting[0].job.k <= ledger.n_free()
+               and self._tenant_ok(self._waiting[0].job.tenant)):
             self._admit_via_dispatcher(self._waiting.popleft().job, t)
+
+    def _drain_fifo_concurrent(self, t: float) -> None:
+        """Admit the maximal fitting+eligible queue prefix as one group
+        through the control plane: every member's search is staged against
+        a ledger snapshot concurrently, commits CAS on the version.
+
+        Grading replicates the serial protocol exactly: members are graded
+        in commit order against an incrementally rebuilt clone (pre-group
+        state + members committed before it), with the exact-Oracle
+        baseline computed against that same view pre-admit — so a group
+        whose commits land in queue order with the serial placements grades
+        byte-identically to the serial drain.  Opt-in — the serial fifo
+        path is untouched with 0 workers.
+        """
+        ledger = self.dispatcher.ledger
+        free = ledger.n_free()
+        staged: Dict[str, int] = {}
+        group: List[TraceJob] = []
+        for entry in self._waiting:  # strictly the queue prefix (fifo)
+            job = entry.job
+            if job.k > free or not self._tenant_ok(job.tenant, staged):
+                break
+            group.append(job)
+            free -= job.k
+            staged[job.tenant] = staged.get(job.tenant, 0) + 1
+        if not group:
+            return
+        outcomes = self._cplane.admit_many(
+            [(j.job_id, j.k, j.tenant) for j in group]
+        )
+        by_id = {j.job_id: j for j in group}
+        # Rewind to pre-group state and replay the commits one by one so
+        # each member is graded in the context the serial drain would have
+        # given it (earlier commits live, later ones absent).
+        view = ledger.clone()
+        for out in outcomes:
+            view.release(out.job_id)
+        for out in sorted(outcomes, key=lambda o: o.committed_version):
+            job = by_id[out.job_id]
+            if self.grade:
+                _, opt_bw = baselines.oracle_dispatch(
+                    self.cluster, self.sim, self.tables, view.available(),
+                    job.k, ledger=view,
+                )
+            else:
+                opt_bw = float("nan")
+            n_live = len(view)
+            view.admit(out.job_id, out.alloc.gpus)
+            self._grade(
+                job, t, out.alloc, opt_bw,
+                n_live=n_live, overtakes=0, batch_size=len(group),
+                ledger=view,
+            )
+        for _ in group:
+            self._waiting.popleft()
 
     def _shadow(self, head_k: int, t: float) -> Tuple[float, int]:
         """EASY-backfill reservation for a blocked head: the earliest time
@@ -418,20 +567,34 @@ class AdmissionScheduler:
         while self._waiting:
             free = ledger.n_free()
             head = self._waiting[0]
-            if head.job.k <= free:
+            if head.job.k <= free and self._tenant_ok(head.job.tenant):
                 self._waiting.popleft()
                 self._admit_via_dispatcher(head.job, t)
                 continue
             if head.overtaken >= limit:
                 return  # head aged out: queue is frozen until it admits
+            # a tenant-capped head that fits capacity-wise reserves from
+            # now (shadow_t = t): backfillers may only use spare capacity
             shadow_t, extra = self._shadow(head.job.k, t)
+            # fence: only entries before the first aged-out one may pass;
+            # priority boosts reorder candidates within that prefix (with
+            # no boosts the order is untouched — first fit by index)
+            fence = len(self._waiting)
+            for i in range(1, len(self._waiting)):
+                if self._waiting[i].overtaken >= limit:
+                    fence = i
+                    break
+            candidates = list(range(1, fence))
+            if any(self._boost(self._waiting[i].job.tenant)
+                   for i in candidates):
+                candidates.sort(key=lambda i: (
+                    -self._boost(self._waiting[i].job.tenant), i
+                ))
             pick = None
-            for i, entry in enumerate(self._waiting):
-                if i == 0:
-                    continue
-                if entry.overtaken >= limit:
-                    break  # fence: nothing behind an aged-out job may pass
-                fits_now = entry.job.k <= free
+            for i in candidates:
+                entry = self._waiting[i]
+                fits_now = (entry.job.k <= free
+                            and self._tenant_ok(entry.job.tenant))
                 respects_reservation = (
                     t + entry.job.duration <= shadow_t + 1e-9
                     or entry.job.k <= extra
@@ -464,13 +627,25 @@ class AdmissionScheduler:
                 if e.batch == head_batch
             ]
             free = ledger.n_free()
+            # selection order: arrival, unless priority boosts are in play
+            # (boost affects WHO is selected; placement order is the joint
+            # plan's concern, and admission below stays index-sorted)
+            sel_order = members
+            if any(self._boost(e.job.tenant) for _, e in members):
+                sel_order = sorted(members, key=lambda ie: (
+                    -self._boost(ie[1].job.tenant), ie[0]
+                ))
+            staged: Dict[str, int] = {}
             selected: List[Tuple[int, _QueueEntry]] = []
-            for i, e in members:  # arrival order, first-fit
-                if e.job.k <= free:
+            for i, e in sel_order:  # first-fit under capacity + tenant caps
+                if (e.job.k <= free
+                        and self._tenant_ok(e.job.tenant, staged)):
                     selected.append((i, e))
                     free -= e.job.k
+                    staged[e.job.tenant] = staged.get(e.job.tenant, 0) + 1
             if not selected:
                 return
+            selected.sort(key=lambda ie: ie[0])
             sel_idx = {i for i, _ in selected}
             # overtakes: unselected earlier entries (head-batch mates — the
             # head batch is always a prefix of the arrival-ordered queue)
@@ -564,7 +739,7 @@ class AdmissionScheduler:
         ledger = self.dispatcher.ledger
         avail = ledger.available()
         if len(subset) != job.k or not set(subset) <= set(avail):
-            raise ValueError(
+            raise InvalidPlacementError(  # a planner bug: crash, never queue
                 f"joint plan produced an invalid allocation for "
                 f"{job.job_id!r}: {subset}"
             )
@@ -581,9 +756,13 @@ class AdmissionScheduler:
 
     def _grade(
         self, job: TraceJob, t: float, alloc: Allocation, opt_bw: float,
-        n_live: int, overtakes: int, batch_size: int,
+        n_live: int, overtakes: int, batch_size: int, ledger=None,
     ) -> None:
-        ledger = self.dispatcher.ledger
+        # ledger override: the concurrent fifo drain grades each group
+        # member against a rebuilt "commits before me" view, not the live
+        # (post-group) ledger — see _drain_fifo_concurrent.
+        if ledger is None:
+            ledger = self.dispatcher.ledger
         # post-admit grading sees the pre-admit contention: contends()
         # self-excludes the job's own (GPU-overlapping) ledger entry
         bw = self.grading_cache.true_bandwidth(alloc.gpus, ledger=ledger)
@@ -604,6 +783,10 @@ class AdmissionScheduler:
         )
         self.records.append(rec)
         self._rec_by_job[job.job_id] = rec
+        self._tenant_live[job.tenant] = (
+            self._tenant_live.get(job.tenant, 0) + 1
+        )
+        self._job_tenant[job.job_id] = job.tenant
         heapq.heappush(
             self._departures, (t + job.duration, self._seq, job.job_id)
         )
@@ -635,8 +818,9 @@ class AdmissionScheduler:
                 best = ev
         if best is None:
             return
-        ledger.release(best.job_id)
-        ledger.admit(best.job_id, best.new_gpus)
+        # single atomic move: one journal event, version bumps by 2 —
+        # identical ledger state to the release+admit pair this replaces
+        ledger.migrate(best.job_id, best.new_gpus)
         self.migrations.append(MigrationEvent(
             t, best.job_id, best.old_gpus, best.new_gpus,
             best.old_bw, best.new_bw, best.cost,

@@ -21,9 +21,40 @@ Terminology used throughout the contention stack:
 from __future__ import annotations
 
 import dataclasses
+import threading
 from typing import Dict, Iterator, List, Optional, Sequence, Set, Tuple
 
 from repro.core.cluster import Cluster
+
+_UID_LOCK = threading.Lock()  # guards the class-level uid counter
+
+
+class CapacityError(ValueError):
+    """An admission cannot be satisfied right now: not enough free GPUs.
+
+    Expected under load — the control plane / scheduler queues the request
+    and retries at the next release.  Subclasses :class:`ValueError` so
+    legacy ``except ValueError`` call sites keep working.
+    """
+
+
+class InvalidPlacementError(ValueError):
+    """A placement policy returned a subset that violates its request
+    (wrong size, busy or out-of-range GPUs) — a programmer error, never an
+    operational condition.  Callers must crash loudly, not queue."""
+
+
+class VersionConflict(RuntimeError):
+    """A compare-and-swap admission lost the race: the ledger version moved
+    past the one the placement was staged against.  The worker re-searches
+    against a fresh snapshot (see :mod:`repro.core.controlplane`)."""
+
+    def __init__(self, staged: int, actual: int):
+        super().__init__(
+            f"ledger version moved: staged against v{staged}, now v{actual}"
+        )
+        self.staged = staged
+        self.actual = actual
 
 
 @dataclasses.dataclass(frozen=True)
@@ -88,6 +119,18 @@ class JobLedger:
     version)`` is automatically stale the moment occupancy changes.  ``uid``
     distinguishes ledger *instances* (scratch copies start their own version
     space), so version-keyed entries from different ledgers never collide.
+
+    Since ISSUE 7 the version counter is also the **CAS token** of the
+    concurrent-admission control plane: :meth:`admit_if` commits a staged
+    placement only when the version still equals the one its search was
+    pinned against (raising :class:`VersionConflict` otherwise), and every
+    mutation runs under :attr:`lock` so overlapping workers serialize only
+    their cheap commits, never their searches.  When a
+    :class:`~repro.core.controlplane.LedgerJournal` is attached, every
+    mutation is serialized to the journal *before* the in-memory change
+    (write-ahead), so :func:`~repro.core.controlplane.replay_journal`
+    rebuilds a bit-identical ledger — same allocations, same version
+    counter — after a crash at any point.
     """
 
     _next_uid = 0
@@ -101,8 +144,13 @@ class JobLedger:
             h.host_id: set() for h in cluster.hosts
         }
         self._version = 0
-        self.uid = JobLedger._next_uid
-        JobLedger._next_uid += 1
+        # Reentrant: admit_if/migrate call admit/release while holding it,
+        # and compound read-harvest sequences (report_bandwidth) nest too.
+        self.lock = threading.RLock()
+        self.journal = None  # controlplane.LedgerJournal (write-ahead sink)
+        with _UID_LOCK:
+            self.uid = JobLedger._next_uid
+            JobLedger._next_uid += 1
 
     @property
     def version(self) -> int:
@@ -111,43 +159,130 @@ class JobLedger:
 
     # -- lifecycle ----------------------------------------------------------
 
+    def attach_journal(self, journal, recovered: bool = False) -> None:
+        """Attach a write-ahead journal sink: every subsequent mutation is
+        serialized to it before the in-memory change.  Requires a fresh
+        (empty, version-0) ledger unless ``recovered=True`` — the recovery
+        flow re-attaches a journal whose tail already describes the current
+        state (see :func:`~repro.core.controlplane.replay_journal`)."""
+        if not recovered and (self._jobs or self._version != 0):
+            raise ValueError(
+                "journal must be attached to a fresh ledger (or pass "
+                "recovered=True after replay_journal)"
+            )
+        self.journal = journal
+
     def admit(self, job_id: str, gpus: Sequence[int]) -> Allocation:
         """Record ``job_id`` as live on ``gpus``.  Returns the allocation."""
-        if job_id in self._jobs:
-            raise ValueError(f"job {job_id!r} is already live")
-        subset = tuple(sorted(gpus))
-        if len(subset) == 0:
-            raise ValueError("empty allocation")
-        if len(set(subset)) != len(subset):
-            raise ValueError(f"duplicate GPU ids in allocation: {gpus}")
-        for g in subset:
-            if g < 0 or g >= self.cluster.n_gpus:
-                raise ValueError(f"GPU id {g} outside cluster")
-            if g in self._owner:
-                raise ValueError(
-                    f"GPU {g} is busy (held by job {self._owner[g]!r})"
+        with self.lock:
+            if job_id in self._jobs:
+                raise ValueError(f"job {job_id!r} is already live")
+            subset = tuple(sorted(gpus))
+            if len(subset) == 0:
+                raise InvalidPlacementError("empty allocation")
+            if len(set(subset)) != len(subset):
+                raise InvalidPlacementError(
+                    f"duplicate GPU ids in allocation: {gpus}"
                 )
-        host_ids = tuple(sorted(self.cluster.partition_by_host(subset)))
-        alloc = Allocation(job_id, subset, host_ids)
-        self._jobs[job_id] = alloc
-        for g in subset:
-            self._owner[g] = job_id
-        for hid in host_ids:
-            self._host_jobs[hid].add(job_id)
-        self._version += 1
-        return alloc
+            for g in subset:
+                if g < 0 or g >= self.cluster.n_gpus:
+                    raise InvalidPlacementError(f"GPU id {g} outside cluster")
+                if g in self._owner:
+                    raise ValueError(
+                        f"GPU {g} is busy (held by job {self._owner[g]!r})"
+                    )
+            if self.journal is not None:  # write-ahead: validated, not applied
+                self.journal.record("admit", job_id=job_id, gpus=list(subset))
+            host_ids = tuple(sorted(self.cluster.partition_by_host(subset)))
+            alloc = Allocation(job_id, subset, host_ids)
+            self._jobs[job_id] = alloc
+            for g in subset:
+                self._owner[g] = job_id
+            for hid in host_ids:
+                self._host_jobs[hid].add(job_id)
+            self._version += 1
+            return alloc
+
+    def admit_if(
+        self, job_id: str, gpus: Sequence[int], version: int
+    ) -> Allocation:
+        """Compare-and-swap admission: admit ``job_id`` on ``gpus`` only if
+        the ledger version still equals ``version`` (the version the
+        placement's search was staged against), else raise
+        :class:`VersionConflict` without mutating anything.  The concurrent
+        control plane's commit primitive: searches overlap freely, commits
+        serialize on :attr:`lock`, and a lost race is detected here."""
+        with self.lock:
+            if self._version != version:
+                raise VersionConflict(version, self._version)
+            return self.admit(job_id, gpus)
 
     def release(self, job_id: str) -> Allocation:
         """Remove a live job, returning its (now freed) allocation."""
-        alloc = self._jobs.pop(job_id, None)
-        if alloc is None:
-            raise KeyError(f"job {job_id!r} is not live")
-        for g in alloc.gpus:
-            del self._owner[g]
-        for hid in alloc.host_ids:
-            self._host_jobs[hid].discard(job_id)
-        self._version += 1
-        return alloc
+        with self.lock:
+            alloc = self._jobs.get(job_id)
+            if alloc is None:
+                raise KeyError(f"job {job_id!r} is not live")
+            if self.journal is not None:
+                self.journal.record("release", job_id=job_id)
+            del self._jobs[job_id]
+            for g in alloc.gpus:
+                del self._owner[g]
+            for hid in alloc.host_ids:
+                self._host_jobs[hid].discard(job_id)
+            self._version += 1
+            return alloc
+
+    def migrate(self, job_id: str, gpus: Sequence[int]) -> Allocation:
+        """Re-place a live job onto ``gpus`` (which may overlap its current
+        allocation) as one atomic release+admit — version bumps by exactly
+        2, identical to the manual pair, but the journal records a single
+        ``migrate`` event.  Fully validated before anything is journaled or
+        mutated, so a failing move leaves ledger and journal untouched."""
+        with self.lock:
+            old = self._jobs.get(job_id)
+            if old is None:
+                raise KeyError(f"job {job_id!r} is not live")
+            subset = tuple(sorted(gpus))
+            if len(subset) == 0:
+                raise InvalidPlacementError("empty migration target")
+            if len(set(subset)) != len(subset):
+                raise InvalidPlacementError(
+                    f"duplicate GPU ids in migration target: {gpus}"
+                )
+            for g in subset:
+                if g < 0 or g >= self.cluster.n_gpus:
+                    raise InvalidPlacementError(f"GPU id {g} outside cluster")
+                owner = self._owner.get(g)
+                if owner is not None and owner != job_id:
+                    raise ValueError(
+                        f"GPU {g} is busy (held by job {owner!r})"
+                    )
+            if self.journal is not None:
+                self.journal.record(
+                    "migrate", job_id=job_id, gpus=list(subset)
+                )
+            journal, self.journal = self.journal, None
+            try:  # inner ops validated above: cannot fail, never journaled
+                self.release(job_id)
+                return self.admit(job_id, subset)
+            finally:
+                self.journal = journal
+
+    def clone(self) -> "JobLedger":
+        """Snapshot copy for staged (optimistic) searches: same occupancy,
+        same ``version`` value — "searched at version v" is meaningful
+        against the parent — but a fresh ``uid`` (its own cache-key space)
+        and no journal.  O(live jobs); never aliases parent state."""
+        with self.lock:
+            other = JobLedger(self.cluster)
+            other._jobs = dict(self._jobs)
+            other._owner = dict(self._owner)
+            other._host_jobs = {
+                hid: set(ids) for hid, ids in self._host_jobs.items()
+            }
+            other._version = self._version
+            return other
 
     # -- queries ------------------------------------------------------------
 
@@ -162,6 +297,13 @@ class JobLedger:
 
     def allocation(self, job_id: str) -> Allocation:
         return self._jobs[job_id]
+
+    def get(self, job_id: str) -> Optional[Allocation]:
+        """Atomic lookup: the job's allocation, or None if not live.  THE
+        stale-report-safe entry point — one GIL-atomic read instead of the
+        ``in`` + ``allocation()`` TOCTOU pair, which races with concurrent
+        releases (the allocation can vanish between the two calls)."""
+        return self._jobs.get(job_id)
 
     def busy(self) -> Set[int]:
         return set(self._owner)

@@ -1,0 +1,848 @@
+"""Concurrent-admission control plane (ISSUE 7): CAS, journal, tenant QoS.
+
+Covers the tentpole and its satellites:
+  * journal format + crash recovery — random admit/release/migrate streams
+    replay bit-identically (allocations, version counter, fragmentation);
+    truncation at *any* byte offset and single-byte corruption recover
+    exactly the durable prefix; a torn tail is truncated on reopen and the
+    sequence resumes;
+  * CAS admission — ``admit_if`` commits at the staged version or raises
+    ``VersionConflict`` without mutating; ``migrate`` is one journal event
+    and exactly +2 versions, with full validation before any effect;
+  * typed admission errors — ``CapacityError`` (queueable) vs
+    ``InvalidPlacementError`` (a bug: crash loudly), both ValueError
+    subclasses so legacy handlers still catch them;
+  * ``report_bandwidth`` atomicity — a released job yields None, never a
+    torn read of a half-released allocation;
+  * the control plane proper — parallel admissions never double-allocate a
+    GPU, stats buckets partition admissions, tenant caps park/reject;
+  * scheduler integration — the fifo golden is unchanged with journaling
+    ON, a 1-worker concurrent run replays the serial records exactly, and
+    tenant policies gate/reorder the queue policies;
+  * LruDict thread-safety and version-keyed prediction-cache lookups.
+"""
+
+import os
+import threading
+import time
+
+import numpy as np
+import pytest
+
+import repro.core as core
+from repro.core.controlplane import (
+    AdmissionControlPlane,
+    JOURNAL_OPS,
+    LedgerJournal,
+    TenantPolicy,
+    _encode_event,
+    _scan,
+    read_journal,
+    replay_journal,
+)
+from repro.core.predict_cache import LruDict, PredictionCache
+from repro.core.scheduler import AdmissionScheduler, SchedulerConfig, TraceJob
+from repro.core.tenancy import (
+    CapacityError,
+    InvalidPlacementError,
+    JobLedger,
+    VersionConflict,
+)
+from test_tenancy_properties import check_invariants
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:
+    from _hypothesis_fallback import given, settings, st
+
+
+@pytest.fixture(scope="module")
+def mix():
+    return core.het_4mix_cluster()
+
+
+@pytest.fixture(scope="module")
+def h100():
+    cl = core.h100_cluster()
+    sim = core.BandwidthSimulator(cl)
+    tables = core.IntraHostTables(cl, sim)
+    return cl, sim, tables
+
+
+def _state(ledger: JobLedger):
+    """The bit-identity triple recovery must reproduce."""
+    return (
+        {a.job_id: a.gpus for a in ledger.jobs()},
+        ledger.version,
+        ledger.fragmentation(),
+    )
+
+
+def _apply_random_ops(ledger: JobLedger, ops, k_sizes) -> None:
+    """Drive admit/release/migrate from two integer streams (any streams
+    are valid; invalid choices degrade to admits like the tenancy tests)."""
+    nid = 0
+    for op, kz in zip(ops, k_sizes):
+        live = sorted(a.job_id for a in ledger.jobs())
+        avail = sorted(ledger.available())
+        if op % 3 == 1 and live:        # release
+            ledger.release(live[kz % len(live)])
+        elif op % 3 == 2 and live:      # migrate (may overlap own gpus)
+            jid = live[kz % len(live)]
+            pool = sorted(avail + list(ledger.allocation(jid).gpus))
+            k = 1 + kz % min(4, len(pool))
+            ledger.migrate(jid, pool[:k])
+        elif avail:                     # admit
+            k = 1 + kz % min(4, len(avail))
+            ledger.admit(f"j{nid}", avail[:k])
+            nid += 1
+
+
+def _random_streams(rng, n):
+    return rng.integers(0, 10, size=n).tolist(), \
+        rng.integers(0, 1000, size=n).tolist()
+
+
+# ---------------------------------------------------------------------------
+# Journal: line format
+# ---------------------------------------------------------------------------
+
+def test_journal_line_format_roundtrip():
+    raw = b"".join([
+        _encode_event(0, "admit", "a", [3, 1, 2]),
+        _encode_event(1, "release", "a"),
+        _encode_event(2, "migrate", "b", [7]),
+    ])
+    events, valid_end = _scan(raw)
+    assert valid_end == len(raw)
+    assert [(e.seq, e.op, e.job_id, e.gpus) for e in events] == [
+        (0, "admit", "a", (3, 1, 2)),
+        (1, "release", "a", None),
+        (2, "migrate", "b", (7,)),
+    ]
+    for op in JOURNAL_OPS:
+        assert op in ("admit", "release", "migrate")
+
+
+def test_scan_rejects_bad_crc_seq_gap_and_unknown_op():
+    good = _encode_event(0, "admit", "a", [0])
+    # flipped payload byte: crc mismatch ends the prefix at record 0
+    bad = bytearray(_encode_event(1, "admit", "b", [1]))
+    bad[3] ^= 0xFF
+    events, valid_end = _scan(good + bytes(bad))
+    assert len(events) == 1 and valid_end == len(good)
+    # sequence gap (0 then 2) ends the prefix after seq 0
+    gap = good + _encode_event(2, "admit", "b", [1])
+    events, _ = _scan(gap)
+    assert [e.seq for e in events] == [0]
+    # an op outside JOURNAL_OPS is torn even with a valid crc
+    weird = _encode_event(0, "admit", "a", [0]).replace(b"admit", b"nukes")
+    assert _scan(weird) == ([], 0)
+
+
+# ---------------------------------------------------------------------------
+# Journal: bit-identical replay (property + seeded fallback)
+# ---------------------------------------------------------------------------
+
+def _roundtrip(cluster, ops, k_sizes, path) -> None:
+    ledger = JobLedger(cluster)
+    with LedgerJournal(path) as journal:
+        ledger.attach_journal(journal)
+        _apply_random_ops(ledger, ops, k_sizes)
+        rebuilt = replay_journal(path, cluster)
+        assert _state(rebuilt) == _state(ledger)
+        check_invariants(cluster, rebuilt)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    ops=st.lists(st.integers(0, 9), min_size=1, max_size=40),
+    k_sizes=st.lists(st.integers(0, 1000), min_size=40, max_size=40),
+)
+def test_replay_bit_identical_random_streams(ops, k_sizes, tmp_path_factory):
+    path = tmp_path_factory.mktemp("journal") / "j.log"
+    _roundtrip(core.het_4mix_cluster(), ops, k_sizes, path)
+
+
+def test_replay_bit_identical_seeded_streams(mix, tmp_path):
+    rng = np.random.default_rng(11)
+    for i in range(12):
+        ops, k_sizes = _random_streams(rng, int(rng.integers(5, 60)))
+        _roundtrip(mix, ops, k_sizes, tmp_path / f"j{i}.log")
+
+
+def test_replay_of_drained_ledger_is_empty_with_matching_version(
+    mix, tmp_path
+):
+    path = tmp_path / "j.log"
+    ledger = JobLedger(mix)
+    ledger.attach_journal(LedgerJournal(path))
+    for i in range(5):
+        ledger.admit(f"j{i}", [2 * i, 2 * i + 1])
+    for i in range(5):
+        ledger.release(f"j{i}")
+    rebuilt = replay_journal(path, mix)
+    assert len(rebuilt) == 0
+    assert rebuilt.version == ledger.version == 10
+
+
+# ---------------------------------------------------------------------------
+# Journal: crash injection (truncation at any offset, byte corruption)
+# ---------------------------------------------------------------------------
+
+def _crash_at(raw, offset, full_events, cluster, path):
+    """Truncate at ``offset``; recovery must yield exactly the durable
+    record prefix (no exception, no partial record applied)."""
+    with open(path, "wb") as fh:
+        fh.write(raw[:offset])
+    events = read_journal(path)
+    assert events == full_events[: len(events)]  # always a prefix
+    # the prefix is exactly the records fully contained in the kept bytes
+    boundaries = []
+    pos = 0
+    for ev in full_events:
+        pos += len(_encode_event(ev.seq, ev.op, ev.job_id, ev.gpus))
+        boundaries.append(pos)
+    expect_n = sum(1 for b in boundaries if b <= offset)
+    assert len(events) == expect_n
+    rebuilt = replay_journal(path, cluster)  # never raises
+    check_invariants(cluster, rebuilt)
+    return rebuilt
+
+
+def _journal_of(cluster, ops, k_sizes, path):
+    ledger = JobLedger(cluster)
+    ledger.attach_journal(LedgerJournal(path))
+    _apply_random_ops(ledger, ops, k_sizes)
+    with open(path, "rb") as fh:
+        raw = fh.read()
+    return ledger, raw, read_journal(path)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    ops=st.lists(st.integers(0, 9), min_size=4, max_size=30),
+    k_sizes=st.lists(st.integers(0, 1000), min_size=30, max_size=30),
+    cut=st.floats(0.0, 1.0),
+)
+def test_crash_truncation_recovers_prefix(ops, k_sizes, cut, tmp_path_factory):
+    tmp = tmp_path_factory.mktemp("crash")
+    cluster = core.het_4mix_cluster()
+    _, raw, full = _journal_of(cluster, ops, k_sizes, tmp / "full.log")
+    _crash_at(raw, int(cut * len(raw)), full, cluster, tmp / "cut.log")
+
+
+def test_crash_truncation_recovers_prefix_seeded(mix, tmp_path):
+    rng = np.random.default_rng(23)
+    ops, k_sizes = _random_streams(rng, 30)
+    ledger, raw, full = _journal_of(mix, ops, k_sizes, tmp_path / "full.log")
+    assert len(full) >= 5
+    offsets = {0, 1, len(raw) - 1, len(raw)} | {
+        int(o) for o in rng.integers(0, len(raw) + 1, size=40)
+    }
+    for offset in sorted(offsets):
+        rebuilt = _crash_at(raw, offset, full, mix, tmp_path / "cut.log")
+        if offset == len(raw):  # clean shutdown: full bit-identity
+            assert _state(rebuilt) == _state(ledger)
+
+
+def test_single_byte_corruption_recovers_exact_prefix(mix, tmp_path):
+    rng = np.random.default_rng(29)
+    ops, k_sizes = _random_streams(rng, 30)
+    _, raw, full = _journal_of(mix, ops, k_sizes, tmp_path / "full.log")
+    boundaries, pos = [], 0
+    for ev in full:
+        pos += len(_encode_event(ev.seq, ev.op, ev.job_id, ev.gpus))
+        boundaries.append(pos)
+    for offset in sorted({int(o) for o in rng.integers(0, len(raw), 25)}):
+        mutated = bytearray(raw)
+        mutated[offset] ^= 0x5A
+        path = tmp_path / "corrupt.log"
+        with open(path, "wb") as fh:
+            fh.write(bytes(mutated))
+        # crc32 detects any single-byte error, so the replayable prefix is
+        # exactly the records before the one containing the flipped byte
+        hit = next(i for i, b in enumerate(boundaries) if offset < b)
+        assert read_journal(path) == full[:hit]
+        check_invariants(mix, replay_journal(path, mix))
+
+
+def test_torn_tail_truncated_on_reopen_and_sequence_resumes(mix, tmp_path):
+    path = tmp_path / "j.log"
+    ledger = JobLedger(mix)
+    journal = LedgerJournal(path)
+    ledger.attach_journal(journal)
+    ledger.admit("a", [0, 1])
+    ledger.admit("b", [2, 3])
+    journal.close()
+    size = os.path.getsize(path)
+    with open(path, "ab") as fh:  # crash mid-write: half a record
+        fh.write(b'{"gpus":[9],"job":"c","op":"admit"')
+    reopened = LedgerJournal(path)  # truncates the torn tail
+    assert os.path.getsize(path) == size
+    recovered = replay_journal(path, mix)
+    assert _state(recovered) == _state(ledger)
+    recovered.attach_journal(reopened, recovered=True)
+    recovered.release("a")  # seq resumes contiguously: the file stays valid
+    events = read_journal(path)
+    assert [(e.seq, e.op) for e in events] == [
+        (0, "admit"), (1, "admit"), (2, "release"),
+    ]
+    assert _state(replay_journal(path, mix)) == _state(recovered)
+
+
+def test_attach_journal_requires_fresh_ledger(mix, tmp_path):
+    ledger = JobLedger(mix)
+    ledger.admit("a", [0])
+    with pytest.raises(ValueError, match="fresh"):
+        ledger.attach_journal(LedgerJournal(tmp_path / "j.log"))
+    ledger.attach_journal(
+        LedgerJournal(tmp_path / "j2.log"), recovered=True
+    )  # the recovery flow opts out explicitly
+
+
+# ---------------------------------------------------------------------------
+# CAS + migrate semantics
+# ---------------------------------------------------------------------------
+
+def test_admit_if_commits_only_at_staged_version(mix):
+    ledger = JobLedger(mix)
+    v = ledger.version
+    ledger.admit_if("a", [0, 1], v)
+    assert ledger.version == v + 1
+    with pytest.raises(VersionConflict) as exc:
+        ledger.admit_if("b", [2, 3], v)
+    assert exc.value.staged == v and exc.value.actual == v + 1
+    assert "b" not in ledger and ledger.version == v + 1  # no mutation
+    ledger.admit_if("b", [2, 3], ledger.version)
+    check_invariants(mix, ledger)
+
+
+def test_migrate_is_atomic_one_event_two_versions(mix, tmp_path):
+    path = tmp_path / "j.log"
+    ledger = JobLedger(mix)
+    ledger.attach_journal(LedgerJournal(path))
+    ledger.admit("a", [0, 1])
+    ledger.admit("b", [4, 5])
+    v = ledger.version
+    ledger.migrate("a", [1, 2])  # overlaps its own allocation: legal
+    assert ledger.version == v + 2
+    assert ledger.allocation("a").gpus == (1, 2)
+    events = read_journal(path)
+    assert [e.op for e in events] == ["admit", "admit", "migrate"]
+    assert _state(replay_journal(path, mix)) == _state(ledger)
+
+
+def test_failed_migrate_leaves_ledger_and_journal_untouched(mix, tmp_path):
+    path = tmp_path / "j.log"
+    ledger = JobLedger(mix)
+    ledger.attach_journal(LedgerJournal(path))
+    ledger.admit("a", [0, 1])
+    ledger.admit("b", [4, 5])
+    before, n_events = _state(ledger), len(read_journal(path))
+    with pytest.raises(ValueError, match="busy"):
+        ledger.migrate("a", [4, 2])  # GPU 4 is b's
+    with pytest.raises(InvalidPlacementError):
+        ledger.migrate("a", [])
+    with pytest.raises(InvalidPlacementError):
+        ledger.migrate("a", [10_000])
+    with pytest.raises(KeyError):
+        ledger.migrate("ghost", [2])
+    assert _state(ledger) == before
+    assert len(read_journal(path)) == n_events  # validated before journaled
+
+
+# ---------------------------------------------------------------------------
+# Typed admission errors + atomic report_bandwidth
+# ---------------------------------------------------------------------------
+
+def test_typed_admit_errors_are_valueerror_subclasses(mix):
+    assert issubclass(CapacityError, ValueError)
+    assert issubclass(InvalidPlacementError, ValueError)
+    svc = core.BaselineDispatcher(mix, "topo")
+    svc.admit("a", mix.n_gpus)  # drain the cluster
+    with pytest.raises(CapacityError, match="free"):
+        svc.admit("b", 1)
+    svc.release("a")
+    with pytest.raises(CapacityError):
+        svc.admit("b", mix.n_gpus + 1)
+    with pytest.raises(InvalidPlacementError):
+        JobLedger(mix).admit("x", [0, 0])
+
+
+class _CountingHarvester:
+    def __init__(self):
+        self.n = 0
+
+    def observe(self, ledger, gpus, bw):
+        self.n += 1
+
+
+def test_report_bandwidth_returns_none_after_release(mix):
+    svc = core.BaselineDispatcher(mix, "topo")
+    svc.harvester = _CountingHarvester()
+    alloc = svc.admit("a", 2)
+    got = svc.report_bandwidth("a", 123.0)
+    assert got is not None and got.gpus == alloc.gpus
+    assert svc.harvester.n == 1
+    svc.release("a")
+    assert svc.report_bandwidth("a", 99.0) is None  # no KeyError, no harvest
+    assert svc.harvester.n == 1
+
+
+# ---------------------------------------------------------------------------
+# Control plane: OCC admission
+# ---------------------------------------------------------------------------
+
+def _wait_for_park(cp, n=1, timeout=5.0):
+    deadline = time.time() + timeout
+    while cp.pending() < n and time.time() < deadline:
+        time.sleep(0.001)
+    assert cp.pending() == n
+
+
+def _outcome_sane(out, max_retries):
+    assert out.admitted
+    assert out.alloc is not None and len(out.alloc.gpus) == out.alloc.k
+    assert out.committed_version > out.staged_version >= 0
+    assert out.retries <= max_retries + 1
+    assert out.seconds >= 0.0
+
+
+def test_parallel_admissions_never_double_allocate(mix):
+    with AdmissionControlPlane(
+        core.BaselineDispatcher(mix, "topo"), n_workers=4
+    ) as cp:
+        outs = cp.admit_many([(f"j{i}", 2, "") for i in range(10)])
+        seen = set()
+        for out in outs:
+            _outcome_sane(out, cp.max_retries)
+            gset = set(out.alloc.gpus)
+            assert not (gset & seen), "GPU double-allocated"
+            seen |= gset
+        check_invariants(mix, cp.ledger)
+        st = cp.stats
+        assert st.n_admitted == 10
+        assert st.n_admitted == (
+            st.n_cas_commits + st.n_validated + st.n_serialized
+        )
+        # committed versions are a contiguous run: one bump per admission
+        versions = sorted(o.committed_version for o in outs)
+        assert versions == list(range(versions[0], versions[0] + 10))
+
+
+def test_control_plane_release_reopens_capacity(mix):
+    with AdmissionControlPlane(
+        core.BaselineDispatcher(mix, "topo"), n_workers=2
+    ) as cp:
+        cp.admit_many([("a", mix.n_gpus, "")])
+        assert cp.ledger.n_free() == 0
+        fut = cp.submit("b", 2)
+        _wait_for_park(cp)
+        assert not fut.done()
+        cp.release("a")  # pumps the parked queue
+        out = fut.result(timeout=10)
+        assert out.admitted and out.parked
+        assert cp.stats.n_parked >= 1
+
+
+def test_submit_rejects_impossible_k(mix):
+    with AdmissionControlPlane(
+        core.BaselineDispatcher(mix, "topo"), n_workers=1
+    ) as cp:
+        with pytest.raises(CapacityError):
+            cp.submit("a", 0)
+        with pytest.raises(CapacityError):
+            cp.submit("a", mix.n_gpus + 1)
+
+
+def test_control_plane_journal_roundtrip(mix, tmp_path):
+    path = tmp_path / "cp.log"
+    with AdmissionControlPlane(
+        core.BaselineDispatcher(mix, "topo"), n_workers=2, journal=path
+    ) as cp:
+        cp.admit_many([(f"j{i}", 2, "") for i in range(6)])
+        for i in range(3):
+            cp.release(f"j{i}")
+        cp.admit_many([("late", 4, "")])
+        live = _state(cp.ledger)
+    assert _state(replay_journal(path, mix)) == live
+
+
+# ---------------------------------------------------------------------------
+# Control plane: tenant QoS
+# ---------------------------------------------------------------------------
+
+def test_tenant_policy_validation():
+    with pytest.raises(ValueError):
+        TenantPolicy(max_concurrent=0)
+    with pytest.raises(ValueError):
+        TenantPolicy(max_queued=-1)
+    pol = TenantPolicy(plan="pro", max_concurrent=2, priority_boost=3)
+    assert pol.max_queued is None and pol.priority_boost == 3
+
+
+def test_max_concurrent_parks_until_release(mix):
+    with AdmissionControlPlane(
+        core.BaselineDispatcher(mix, "topo"), n_workers=2,
+        policies={"t": TenantPolicy(max_concurrent=1)},
+    ) as cp:
+        first = cp.submit("a", 2, tenant="t").result(timeout=10)
+        assert first.admitted
+        fut = cp.submit("b", 2, tenant="t")
+        _wait_for_park(cp)
+        assert not fut.done()  # capped, not capacity-blocked
+        other = cp.submit("c", 2, tenant="u").result(timeout=10)
+        assert other.admitted  # an uncapped tenant sails past the parked one
+        cp.release("a")
+        out = fut.result(timeout=10)
+        assert out.admitted and out.parked
+
+
+def test_max_queued_rejects_outright(mix):
+    with AdmissionControlPlane(
+        core.BaselineDispatcher(mix, "topo"), n_workers=1,
+        policies={"t": TenantPolicy(max_concurrent=1, max_queued=1)},
+    ) as cp:
+        assert cp.submit("a", 2, tenant="t").result(timeout=10).admitted
+        parked = cp.submit("b", 2, tenant="t")  # waits on the cap
+        _wait_for_park(cp)
+        rejected = cp.submit("c", 2, tenant="t").result(timeout=10)
+        assert not rejected.admitted and "queue full" in rejected.reason
+        assert cp.stats.n_rejected == 1
+        cp.release("a")
+        assert parked.result(timeout=10).admitted
+
+
+# ---------------------------------------------------------------------------
+# Control plane: concurrent stress over the real BandPilot search
+# ---------------------------------------------------------------------------
+
+def test_concurrent_bandpilot_stress_waves(h100):
+    """Waves of overlapping staged searches with releases in between: no
+    GPU is ever double-allocated, every placement commits within the retry
+    window, and the stats buckets partition the admissions."""
+    cl, sim, tables = h100
+    disp = core.BandPilotDispatcher(cl, tables, core.GroundTruthPredictor(sim))
+    with AdmissionControlPlane(disp, n_workers=4, max_retries=3) as cp:
+        rng = np.random.default_rng(31)
+        n_total = 0
+        for wave in range(3):
+            ks = rng.integers(2, 6, size=6).tolist()
+            outs = cp.admit_many(
+                [(f"w{wave}-{i}", int(k), "") for i, k in enumerate(ks)],
+                timeout=120,
+            )
+            n_total += len(outs)
+            for out in outs:
+                _outcome_sane(out, cp.max_retries)
+            check_invariants(cl, cp.ledger)
+            live = sorted(a.job_id for a in cp.ledger.jobs())
+            for jid in live[::2]:
+                cp.release(jid)
+            check_invariants(cl, cp.ledger)
+        st = cp.stats
+        assert st.n_admitted == n_total
+        assert st.n_admitted == (
+            st.n_cas_commits + st.n_validated + st.n_serialized
+        )
+
+
+def test_strict_mode_never_validates(mix):
+    with AdmissionControlPlane(
+        core.BaselineDispatcher(mix, "topo"), n_workers=4, strict=True,
+    ) as cp:
+        outs = cp.admit_many([(f"j{i}", 2, "") for i in range(10)])
+        assert all(o.admitted and not o.validated for o in outs)
+        assert cp.stats.n_validated == 0
+
+
+# ---------------------------------------------------------------------------
+# Scheduler integration
+# ---------------------------------------------------------------------------
+
+def _trace20(cl):
+    return core.poisson_trace(
+        cl, 20, np.random.default_rng(7),
+        mean_interarrival=1.0, mean_duration=8.0, k_choices=range(4, 17),
+    )
+
+
+def _run_fifo(cl, sim, tables, grade=True, dispatcher=None, **cfg):
+    disp = dispatcher or core.BaselineDispatcher(cl, "topo")
+    sched = AdmissionScheduler(
+        cl, sim, tables, disp, SchedulerConfig(policy="fifo", **cfg),
+        grade=grade,
+    )
+    records = sched.run(_trace20(cl))
+    return sched, records
+
+
+def _record_key(r):
+    fields = (r.t_admit, r.wait, r.gbe, r.bw, r.isolated_bw, r.optimal_bw)
+    return (r.job_id, r.k, r.n_live, r.n_contended_hosts) + tuple(
+        None if f != f else f for f in fields  # NaN-safe (ungraded runs)
+    )
+
+
+def test_fifo_golden_unchanged_with_journaling_on(h100, tmp_path):
+    """Journaling is write-ahead only: the serial fifo replay reproduces
+    the pinned pre-refactor golden byte-for-byte with the journal ON, and
+    replaying the journal reproduces the final (drained) ledger."""
+    from test_scheduler import _GOLDEN_TOPO, _assert_matches_golden
+
+    cl, sim, tables = h100
+    path = tmp_path / "sched.log"
+    sched, records = _run_fifo(cl, sim, tables, journal_path=str(path))
+    _assert_matches_golden(records, _GOLDEN_TOPO)
+    rebuilt = replay_journal(path, cl)
+    assert len(rebuilt) == 0  # the trace drains
+    assert rebuilt.version == sched.dispatcher.ledger.version == 40
+
+
+def test_one_worker_concurrent_fifo_replays_serial_records(h100):
+    """With one staging worker the group admits sequentially in queue
+    order and every CAS is conflict-free — the records must replicate the
+    serial drain exactly, grading included."""
+    cl, sim, tables = h100
+    _, serial = _run_fifo(cl, sim, tables)
+    sched, conc = _run_fifo(cl, sim, tables, concurrent_workers=1)
+    assert [_record_key(r) for r in conc] == [_record_key(r) for r in serial]
+    assert sched._cplane is not None and sched._cplane.stats.n_conflicts == 0
+
+
+def test_one_worker_concurrent_matches_serial_bandpilot(h100):
+    cl, sim, tables = h100
+
+    def bp():
+        return core.BandPilotDispatcher(
+            cl, tables, core.GroundTruthPredictor(sim)
+        )
+
+    _, serial = _run_fifo(cl, sim, tables, dispatcher=bp())
+    _, conc = _run_fifo(
+        cl, sim, tables, dispatcher=bp(), concurrent_workers=1
+    )
+    assert [_record_key(r) for r in conc] == [_record_key(r) for r in serial]
+
+
+def test_multi_worker_concurrent_fifo_admits_everything(h100):
+    cl, sim, tables = h100
+    sched, records = _run_fifo(
+        cl, sim, tables, grade=False, concurrent_workers=4
+    )
+    assert len(records) == 20
+    assert len(sched.dispatcher.ledger) == 0  # drained
+    st = sched._cplane.stats
+    assert st.n_admitted == 20 and st.n_parked == 0
+
+
+def test_concurrent_workers_require_fifo():
+    with pytest.raises(ValueError, match="fifo"):
+        SchedulerConfig(policy="backfill", concurrent_workers=2)
+    with pytest.raises(ValueError):
+        SchedulerConfig(concurrent_workers=-1)
+
+
+def test_unrelated_tenant_policies_leave_records_unchanged(h100):
+    cl, sim, tables = h100
+    _, base = _run_fifo(cl, sim, tables, grade=False)
+    _, poli = _run_fifo(
+        cl, sim, tables, grade=False,
+        tenant_policies={"someone-else": TenantPolicy(max_concurrent=1)},
+    )
+    assert [_record_key(r) for r in poli] == [_record_key(r) for r in base]
+
+
+# ---------------------------------------------------------------------------
+# Scheduler tenant QoS
+# ---------------------------------------------------------------------------
+
+def _qos_sched(cl, sim, tables, policy, policies):
+    return AdmissionScheduler(
+        cl, sim, tables, core.BaselineDispatcher(cl, "topo"),
+        SchedulerConfig(policy=policy, tenant_policies=policies),
+        grade=False,
+    )
+
+
+def test_fifo_max_concurrent_gates_admission(h100):
+    cl, sim, tables = h100
+    trace = [
+        TraceJob("a", 0.0, 10.0, 4, tenant="t"),
+        TraceJob("b", 0.5, 5.0, 4, tenant="t"),   # capped: waits for a
+        TraceJob("c", 1.0, 5.0, 4, tenant="u"),   # fifo: stuck behind b
+    ]
+    sched = _qos_sched(
+        cl, sim, tables, "fifo", {"t": TenantPolicy(max_concurrent=1)}
+    )
+    by_id = {r.job_id: r for r in sched.run(trace)}
+    assert by_id["a"].t_admit == pytest.approx(0.0)
+    assert by_id["b"].t_admit == pytest.approx(10.0)  # a's departure
+    assert by_id["c"].t_admit == pytest.approx(10.0)
+
+
+def test_backfill_overtakes_tenant_capped_head(h100):
+    cl, sim, tables = h100
+    trace = [
+        TraceJob("a", 0.0, 10.0, 4, tenant="t"),
+        TraceJob("b", 0.5, 5.0, 4, tenant="t"),
+        TraceJob("c", 1.0, 5.0, 4, tenant="u"),
+    ]
+    sched = _qos_sched(
+        cl, sim, tables, "backfill", {"t": TenantPolicy(max_concurrent=1)}
+    )
+    by_id = {r.job_id: r for r in sched.run(trace)}
+    assert by_id["b"].t_admit == pytest.approx(10.0)
+    assert by_id["c"].t_admit == pytest.approx(1.0)  # spare capacity: pass b
+    assert by_id["c"].overtakes == 1
+
+
+def test_max_queued_drops_to_rejected_list(h100):
+    cl, sim, tables = h100
+    trace = [
+        TraceJob("full", 0.0, 20.0, cl.n_gpus),
+        TraceJob("q1", 1.0, 1.0, 4, tenant="t"),
+        TraceJob("q2", 2.0, 1.0, 4, tenant="t"),  # over the queue cap
+        TraceJob("q3", 3.0, 1.0, 4, tenant="t"),
+    ]
+    sched = _qos_sched(
+        cl, sim, tables, "fifo", {"t": TenantPolicy(max_queued=1)}
+    )
+    records = sched.run(trace)
+    assert [r.job_id for r in records] == ["full", "q1"]
+    assert [j.job_id for j in sched.rejected] == ["q2", "q3"]
+
+
+def test_priority_boost_reorders_batched_selection(h100):
+    cl, sim, tables = h100
+    trace = [
+        TraceJob("f1", 0.0, 10.0, 4),
+        TraceJob("f2", 0.0, 20.0, cl.n_gpus - 4),
+        TraceJob("x", 1.0, 5.0, 4, tenant="basic"),
+        TraceJob("y", 1.2, 5.0, 4, tenant="pro"),  # same co-arrival batch
+    ]
+
+    def admit_times(policies):
+        sched = AdmissionScheduler(
+            cl, sim, tables, core.BaselineDispatcher(cl, "topo"),
+            SchedulerConfig(
+                policy="batched", batch_window=1.0, tenant_policies=policies
+            ),
+            grade=False,
+        )
+        return {r.job_id: r.t_admit for r in sched.run(trace)}
+
+    plain = admit_times(None)
+    assert plain["x"] == pytest.approx(10.0)   # arrival order: x first
+    assert plain["y"] == pytest.approx(15.0)   # waits for x's departure
+    boosted = admit_times({"pro": TenantPolicy(priority_boost=5)})
+    assert boosted["y"] == pytest.approx(10.0)  # boost flips the selection
+    assert boosted["x"] == pytest.approx(15.0)
+
+
+# ---------------------------------------------------------------------------
+# LruDict thread-safety + version-keyed prediction cache
+# ---------------------------------------------------------------------------
+
+def test_lrudict_thread_hammer():
+    """N threads of interleaved read-modify-write pairs: no lost linked-list
+    updates (the KeyError crash mode), no wrong values, bound respected."""
+    cache = LruDict(64)
+    errors = []
+
+    def value_of(key):
+        return key[0] * 1000 + key[1]
+
+    def hammer(tid):
+        rng = np.random.default_rng(tid)
+        try:
+            for i in range(3000):
+                key = (tid, int(rng.integers(0, 97)))
+                if i % 3 == 0:
+                    cache[key] = value_of(key)
+                else:
+                    got = cache.get(key)
+                    if got is not None and got != value_of(key):
+                        errors.append((key, got))
+        except BaseException as e:  # noqa: BLE001
+            errors.append(e)
+
+    threads = [threading.Thread(target=hammer, args=(t,)) for t in range(6)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    assert not errors
+    assert len(cache) <= 64
+    for key, val in list(cache.items()):
+        assert val == value_of(key)
+
+
+class _VersionProbe:
+    """Stub predictor whose value IS the ledger version at compute time —
+    a cross-version cache hit is then directly visible in the output."""
+
+    def __init__(self, ledger):
+        self.ledger = ledger
+
+    def predict(self, subsets):
+        return np.full(len(subsets), float(self.ledger.version))
+
+
+def test_version_keyed_lookup_never_serves_stale_window(mix):
+    ledger = JobLedger(mix)
+    cache = PredictionCache(ledger=ledger)
+    cached = cache.wrap(_VersionProbe(ledger), mode="probe")
+    sub = [0, 1]
+    assert cached.predict([sub])[0] == 0.0
+    assert cached.predict([sub])[0] == 0.0          # hit at version 0
+    ledger.admit("a", [4, 5])                       # version moves
+    assert cached.predict([sub])[0] == 1.0          # recompute, not stale
+    ledger.release("a")
+    assert cached.predict([sub])[0] == 2.0
+
+
+def test_version_window_correct_under_concurrent_mutation(mix):
+    """Readers racing a mutator: every returned value was computed no
+    earlier than the version the reader started at (a stale cross-version
+    hit would return an older version number)."""
+    ledger = JobLedger(mix)
+    cache = PredictionCache(ledger=ledger)
+    cached = cache.wrap(_VersionProbe(ledger), mode="probe")
+    stop = threading.Event()
+    errors = []
+
+    def mutate():
+        i = 0
+        while not stop.is_set():
+            ledger.admit(f"m{i}", [0, 1])
+            ledger.release(f"m{i}")
+            i += 1
+
+    def read(tid):
+        rng = np.random.default_rng(tid)
+        try:
+            for _ in range(800):
+                sub = sorted(
+                    int(g) for g in rng.choice(
+                        range(4, mix.n_gpus), size=2, replace=False
+                    )
+                )
+                v0 = ledger.version
+                got = cached.predict([sub])[0]
+                if got < v0:
+                    errors.append((sub, v0, got))
+        except BaseException as e:  # noqa: BLE001
+            errors.append(e)
+
+    mut = threading.Thread(target=mutate)
+    readers = [threading.Thread(target=read, args=(t,)) for t in range(4)]
+    mut.start()
+    for th in readers:
+        th.start()
+    for th in readers:
+        th.join()
+    stop.set()
+    mut.join()
+    assert not errors
