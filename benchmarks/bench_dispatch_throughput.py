@@ -41,6 +41,10 @@ Rows:
     the measured ceiling with the per-phase breakdown instead
   dispatch_latency_guard — worst-case hybrid-search latency (scanon
     side) vs the Fig. 8 envelope (threshold via BENCH_SEARCH_LATENCY_MS)
+  dispatch_trace_overhead — best-of-N replay of the pinned config with
+    the admission tracer installed vs disabled: asserts byte-identical
+    placements and reports the overhead percentage against the
+    BENCH_TRACE_OVERHEAD_PCT guard (default 5; CI asserts ok=True)
 """
 
 from __future__ import annotations
@@ -52,11 +56,14 @@ import numpy as np
 
 import repro.core as core
 from repro.core import surrogate as surr
+from repro.core import telemetry
 from benchmarks.common import csv_row, get_context
 
 CLUSTERS = ("H100", "Het-4Mix")
 N_JOBS = int(os.environ.get("BENCH_TRACE_JOBS", "50"))
 LATENCY_MS = float(os.environ.get("BENCH_SEARCH_LATENCY_MS", "150"))
+OVERHEAD_PCT = float(os.environ.get("BENCH_TRACE_OVERHEAD_PCT", "5"))
+OVERHEAD_REPS = int(os.environ.get("BENCH_TRACE_OVERHEAD_REPS", "3"))
 TARGET_SPEEDUP = 5.0
 PINNED = ("H100", "fifo", "analytic", False)  # the headline config
 
@@ -147,6 +154,44 @@ def _breakdown(dt, st):
     )
 
 
+def _trace_overhead_row():
+    """Tracing-overhead guard on the pinned headline config.
+
+    Best-of-N replays interleave traced and untraced runs (same trace,
+    fresh dispatcher each side) so machine noise hits both sides alike.
+    The placements must be byte-identical — the tracer only records.
+    """
+    name, policy, mode, defrag = PINNED
+    ctx = get_context(name)
+    trace = _trace(ctx.cluster)
+    _replay(ctx, trace, policy, 0.0, mode, defrag, "scanon")  # JIT warm-up
+    best = {"off": float("inf"), "on": float("inf")}
+    subs = {}
+    n_spans = 0
+    for _ in range(max(OVERHEAD_REPS, 1)):
+        dt, sub, _, _ = _replay(ctx, trace, policy, 0.0, mode, defrag,
+                                "scanon")
+        best["off"] = min(best["off"], dt)
+        subs["off"] = sub
+        tracer = telemetry.AdmissionTracer()
+        with telemetry.trace(tracer):
+            dt, sub, _, _ = _replay(ctx, trace, policy, 0.0, mode, defrag,
+                                    "scanon")
+        best["on"] = min(best["on"], dt)
+        subs["on"] = sub
+        n_spans = tracer.n_spans
+    assert subs["on"] == subs["off"], "tracing changed subset selection"
+    pct = 100.0 * (best["on"] - best["off"]) / best["off"]
+    return csv_row(
+        "dispatch_trace_overhead",
+        1e6 * max(best["on"] - best["off"], 0.0) / len(trace),
+        f"traced={best['on'] * 1e3:.1f}ms;untraced={best['off'] * 1e3:.1f}ms;"
+        f"overhead_pct={pct:.2f};threshold_pct={OVERHEAD_PCT:.1f};"
+        f"spans_per_replay={n_spans};identical=True;"
+        f"ok={pct <= OVERHEAD_PCT}",
+    )
+
+
 def run() -> list:
     rows = []
     pinned = None
@@ -232,4 +277,5 @@ def run() -> list:
         f"threshold_ms={LATENCY_MS:.0f};"
         f"ok={1e3 * worst_latency < LATENCY_MS}",
     ))
+    rows.append(_trace_overhead_row())
     return rows

@@ -39,6 +39,11 @@ Public surface:
     migrate / get, CapacityError / InvalidPlacementError / VersionConflict,
     SchedulerConfig(tenant_policies=..., concurrent_workers=...,
     journal_path=...)
+  Observability (admission tracer, metrics registry, drift recorder):
+    telemetry.AdmissionTracer / trace / span, MetricsRegistry /
+    collect_scheduler_metrics / read_metrics_jsonl, DriftMonitor /
+    DriftAlert / DecisionRecord / finetune_on_drift,
+    TelemetryHarvester(drift=...) (see docs/observability.md)
 """
 
 from repro.core.bandwidth_sim import BW_SCALE, BandwidthSimulator
@@ -126,6 +131,17 @@ from repro.core.scheduler import (
     migration_cost,
     poisson_trace,
     summarize_trace,
+)
+from repro.core.telemetry import (
+    AdmissionTracer,
+    DecisionRecord,
+    DriftAlert,
+    DriftMonitor,
+    MetricsRegistry,
+    collect_scheduler_metrics,
+    finetune_on_drift,
+    read_metrics_jsonl,
+    snapshot_digest,
 )
 from repro.core.tenancy import (
     Allocation,
@@ -233,6 +249,15 @@ __all__ = [
     "SurrogatePredictor",
     "ContendedSurrogatePredictor",
     "init_contended_params",
+    "AdmissionTracer",
+    "DecisionRecord",
+    "DriftAlert",
+    "DriftMonitor",
+    "MetricsRegistry",
+    "collect_scheduler_metrics",
+    "finetune_on_drift",
+    "read_metrics_jsonl",
+    "snapshot_digest",
     "ContendedSample",
     "TelemetryHarvester",
     "build_contended_dataset",

@@ -218,24 +218,51 @@ class TelemetryHarvester:
     measurements flow in via ``service.report_bandwidth(job_id, bw)``.
     Keeps at most ``max_samples`` (most recent — telemetry freshness is the
     point of the online loop).
+
+    The harvester is also the drift tap: pass a
+    :class:`~repro.core.telemetry.DriftMonitor` as ``drift=`` and every
+    observation that carries a ``predicted`` B-hat (the scheduler's grading
+    path) or a ``job_id`` with a previously-stamped prediction (the
+    ``report_bandwidth`` path) is forwarded to the monitor — one
+    observation pipeline, two consumers.
     """
 
-    def __init__(self, cluster: Cluster, max_samples: int = 4096):
+    def __init__(
+        self,
+        cluster: Cluster,
+        max_samples: int = 4096,
+        drift: Optional["object"] = None,
+    ):
         self.cluster = cluster
         self.max_samples = max_samples
         self.samples: List[ContendedSample] = []
         self.n_observed = 0  # lifetime count (before the ring-buffer trim)
+        self.drift = drift   # optional repro.core.telemetry.DriftMonitor
 
     def __len__(self) -> int:
         return len(self.samples)
 
     def observe(
-        self, ledger: JobLedger, subset: Sequence[int], bw: float
+        self,
+        ledger: JobLedger,
+        subset: Sequence[int],
+        bw: float,
+        *,
+        job_id: str = "",
+        predicted: Optional[float] = None,
+        tenant: str = "",
+        t: float = 0.0,
+        source: str = "grade",
     ) -> ContendedSample:
         """Record one observation: the co-tenant spec is every live job
         GPU-disjoint from ``subset`` (the job's own ledger entry, when it is
         already admitted, self-excludes by overlap — same predicate as the
-        contended ground truth)."""
+        contended ground truth).
+
+        Keyword-only extras feed the attached drift monitor: ``predicted``
+        is the B-hat the admission committed on (grading path), or None to
+        resolve through the monitor's pending map by ``job_id``
+        (``report_bandwidth`` path)."""
         sset = set(subset)
         cot = tuple(
             a.gpus
@@ -247,6 +274,15 @@ class TelemetryHarvester:
         self.n_observed += 1
         if len(self.samples) > self.max_samples:
             del self.samples[: len(self.samples) - self.max_samples]
+        if self.drift is not None:
+            from repro.core.telemetry import snapshot_digest
+
+            self.drift.observe(
+                float(bw), job_id=job_id, subset=tuple(sorted(subset)),
+                predicted=predicted,
+                digest=snapshot_digest(ledger, subset),
+                tenant=tenant, t=t, source=source,
+            )
         return sample
 
     def triples(self) -> List[Tuple[List[int], Optional[JobLedger], float]]:

@@ -67,6 +67,7 @@ from collections import deque
 from concurrent.futures import Future, ThreadPoolExecutor
 from typing import Dict, List, Optional, Sequence, Tuple
 
+from repro.core import telemetry
 from repro.core.tenancy import (
     Allocation,
     CapacityError,
@@ -298,10 +299,24 @@ class AdmissionOutcome:
     def admitted(self) -> bool:
         return self.status == "admitted"
 
+    def to_dict(self) -> Dict:
+        d = dataclasses.asdict(self)
+        d["alloc"] = list(self.alloc.gpus) if self.alloc is not None else None
+        return d
+
 
 @dataclasses.dataclass
 class ControlPlaneStats:
-    """Aggregate admission-path counters (reported by the bench)."""
+    """Aggregate admission-path counters (reported by the bench).
+
+    Commit kinds partition the admissions:
+    ``n_cas_commits + n_validated + n_serialized == n_admitted`` — the
+    invariant the metrics registry asserts at absorb time
+    (:func:`repro.core.telemetry.absorb_controlplane_stats`).  Reset/merge
+    semantics mirror :class:`~repro.core.predict_cache.PredictorStats`:
+    one stats object per control plane, no nesting, so ``merged`` over
+    *distinct* planes never double-counts.
+    """
 
     n_admitted: int = 0
     n_cas_commits: int = 0       # committed at the staged version (clean CAS)
@@ -313,8 +328,25 @@ class ControlPlaneStats:
     search_seconds: float = 0.0
     commit_seconds: float = 0.0
 
-    def as_dict(self) -> Dict[str, float]:
+    def to_dict(self) -> Dict[str, float]:
         return dataclasses.asdict(self)
+
+    # legacy name (benchmarks/tests predate the unified to_dict convention)
+    def as_dict(self) -> Dict[str, float]:
+        return self.to_dict()
+
+    def reset(self) -> None:
+        for f in dataclasses.fields(self):
+            setattr(self, f.name, f.default)
+
+    @classmethod
+    def merged(cls, *stats: "ControlPlaneStats") -> "ControlPlaneStats":
+        """Field-wise sum over stats of *distinct* control planes."""
+        out = cls()
+        for s in stats:
+            for f in dataclasses.fields(cls):
+                setattr(out, f.name, getattr(out, f.name) + getattr(s, f.name))
+        return out
 
 
 @dataclasses.dataclass
@@ -485,12 +517,15 @@ class AdmissionControlPlane:
             self._parked.append(req)
         with self._stats_lock:
             self.stats.n_parked += 1
+        telemetry.event("cplane.park", job_id=req.job_id, k=req.k)
 
     def _pump(self) -> None:
         """Re-dispatch every parked request: a release may have opened any
         of their gates (re-parking the still-blocked ones is cheap)."""
         with self._state_lock:
             parked, self._parked = list(self._parked), deque()
+        if parked:
+            telemetry.event("cplane.pump", n_requeued=len(parked))
         for req in parked:
             self._pool.submit(self._run_request, req)
 
@@ -528,12 +563,25 @@ class AdmissionControlPlane:
                 self._park(req)
                 return None
             t0 = time.time()
-            subset, predicted = self._search(snapshot, req.k)
+            with telemetry.span(
+                "cplane.stage", job_id=req.job_id, k=req.k,
+                staged_version=snapshot.version, retry=req.retries,
+            ):
+                subset, predicted = self._search(snapshot, req.k)
             with self._stats_lock:
                 self.stats.search_seconds += time.time() - t0
             self._check_placement(subset, snapshot, req)
             t1 = time.time()
-            outcome = self._try_commit(req, subset, predicted, snapshot)
+            with telemetry.span(
+                "cplane.commit", job_id=req.job_id,
+                staged_version=snapshot.version,
+            ) as sp:
+                outcome = self._try_commit(req, subset, predicted, snapshot)
+                if sp:
+                    sp["result"] = (
+                        "conflict" if outcome is None
+                        else "validated" if outcome.validated else "cas"
+                    )
             with self._stats_lock:
                 self.stats.commit_seconds += time.time() - t1
             if outcome is not None:
@@ -579,7 +627,10 @@ class AdmissionControlPlane:
         one can move the state mid-search, so the commit cannot conflict).
         Other workers' searches keep running; only their commits block."""
         ledger = self.ledger
-        with self._serial_lock, ledger.lock:
+        with self._serial_lock, ledger.lock, telemetry.span(
+            "cplane.serialized", job_id=req.job_id, k=req.k,
+            retries=req.retries,
+        ):
             if req.k > ledger.n_free():
                 parked = True
             else:

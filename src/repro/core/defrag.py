@@ -57,7 +57,7 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
-from typing import Callable, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.core import search
 from repro.core.cluster import Cluster
@@ -103,6 +103,9 @@ class FragmentationMetrics:
             f"largest_block={self.largest_free_block} "
             f"stranding={self.stranding:.2f}"
         )
+
+    def to_dict(self) -> Dict[str, float]:
+        return dataclasses.asdict(self)
 
 
 def fragmentation_metrics(

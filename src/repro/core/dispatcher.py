@@ -29,7 +29,7 @@ from typing import Callable, Dict, List, Optional, Sequence
 
 import numpy as np
 
-from repro.core import baselines, search
+from repro.core import baselines, search, telemetry
 from repro.core.bandwidth_sim import BandwidthSimulator
 from repro.core.cluster import Cluster, availability_scenario
 from repro.core.contention import ContentionAwarePredictor
@@ -139,7 +139,12 @@ class DispatcherService:
             if alloc is None:
                 return None
             if self.harvester is not None:
-                self.harvester.observe(self.ledger, alloc.gpus, bw)
+                # job_id lets an attached DriftMonitor pair this realized
+                # measurement with the B-hat stamped at admission
+                self.harvester.observe(
+                    self.ledger, alloc.gpus, bw,
+                    job_id=job_id, source="report",
+                )
         return alloc
 
     def admit(self, job_id: str, k: int, rng=None) -> Allocation:
@@ -272,19 +277,35 @@ class BandPilotDispatcher(DispatcherService):
         )
 
     def dispatch(self, avail: Sequence[int], k: int, rng=None) -> Subset:
-        penalty = None
-        if self.frag_weight > 0:
-            from repro.core.defrag import make_frag_penalty
+        with telemetry.span(
+            "dispatcher.dispatch", k=k, n_avail=len(avail),
+            mode=self.contention_mode if self.contention_aware else "off",
+        ) as sp:
+            before = self.predictor_stats() if sp else None
+            penalty = None
+            if self.frag_weight > 0:
+                from repro.core.defrag import make_frag_penalty
 
-            penalty = make_frag_penalty(
-                self.cluster, self.ledger, self.frag_weight
+                penalty = make_frag_penalty(
+                    self.cluster, self.ledger, self.frag_weight
+                )
+            res = search.hybrid_search(
+                self.cluster, self.tables, self.predictor, avail, k,
+                frag_penalty=penalty,
             )
-        res = search.hybrid_search(
-            self.cluster, self.tables, self.predictor, avail, k,
-            frag_penalty=penalty,
-        )
-        self.last_result = res
-        return res.subset
+            self.last_result = res
+            if sp:
+                after = self.predictor_stats()
+                sp["winner"] = res.winner
+                sp["predicted_bw"] = res.predicted_bw
+                sp["cache_hits"] = after.cache_hits - before.cache_hits
+                sp["cache_misses"] = after.cache_misses - before.cache_misses
+                sp["n_capped"] = after.n_capped - before.n_capped
+                sp["n_model_calls"] = (
+                    after.n_model_calls - before.n_model_calls
+                )
+                sp["n_scan_steps"] = after.n_scan_steps - before.n_scan_steps
+            return res.subset
 
 
 class BaselineDispatcher(DispatcherService):

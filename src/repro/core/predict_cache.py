@@ -71,8 +71,12 @@ class PredictorStats:
         for f in dataclasses.fields(self):
             setattr(self, f.name, f.default)
 
-    def as_dict(self) -> Dict[str, float]:
+    def to_dict(self) -> Dict[str, float]:
         return dataclasses.asdict(self)
+
+    # legacy name (pre-dates the unified to_dict convention across stats)
+    def as_dict(self) -> Dict[str, float]:
+        return self.to_dict()
 
     @property
     def hit_rate(self) -> float:

@@ -46,12 +46,13 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
+import math
 from collections import deque
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core import baselines, defrag as defrag_mod, search
+from repro.core import baselines, defrag as defrag_mod, search, telemetry
 from repro.core.bandwidth_sim import BandwidthSimulator
 from repro.core.cluster import Cluster
 from repro.core.controlplane import TenantPolicy  # per-tenant QoS rows
@@ -111,6 +112,13 @@ class TenantRecord:
     # -- fragmentation state right after this admission (defrag metrics) ----
     stranding: float = 0.0  # fraction of free GPUs on partially-busy hosts
     clean_hosts: int = 0    # fully-free hosts left after this admission
+    # -- observability: the B-hat the search committed on (NaN for baseline
+    #    dispatchers that place without a predictor) — paired with ``bw`` by
+    #    the drift flight recorder (docs/observability.md)
+    predicted_bw: float = float("nan")
+
+    def to_dict(self) -> Dict[str, float]:
+        return dataclasses.asdict(self)
 
 
 def poisson_trace(
@@ -197,6 +205,9 @@ class MigrationEvent:
     new_bw: float    # contention-degraded, after the move
     cost: float      # migration_cost charged against the gain
     kind: str = "redispatch"  # or "defrag" / "make-room" (trigger passes)
+
+    def to_dict(self) -> Dict[str, float]:
+        return dataclasses.asdict(self)
 
 
 # ---------------------------------------------------------------------------
@@ -519,20 +530,25 @@ class AdmissionScheduler:
             view.release(out.job_id)
         for out in sorted(outcomes, key=lambda o: o.committed_version):
             job = by_id[out.job_id]
-            if self.grade:
-                _, opt_bw = baselines.oracle_dispatch(
-                    self.cluster, self.sim, self.tables, view.available(),
-                    job.k, ledger=view,
+            with telemetry.span(
+                "sched.admit", job_id=job.job_id, k=job.k,
+                policy=self.config.policy, path="concurrent",
+            ):
+                if self.grade:
+                    with telemetry.span("sched.oracle", k=job.k):
+                        _, opt_bw = baselines.oracle_dispatch(
+                            self.cluster, self.sim, self.tables,
+                            view.available(), job.k, ledger=view,
+                        )
+                else:
+                    opt_bw = float("nan")
+                n_live = len(view)
+                view.admit(out.job_id, out.alloc.gpus)
+                self._grade(
+                    job, t, out.alloc, opt_bw,
+                    n_live=n_live, overtakes=0, batch_size=len(group),
+                    ledger=view, predicted=out.predicted_bw,
                 )
-            else:
-                opt_bw = float("nan")
-            n_live = len(view)
-            view.admit(out.job_id, out.alloc.gpus)
-            self._grade(
-                job, t, out.alloc, opt_bw,
-                n_live=n_live, overtakes=0, batch_size=len(group),
-                ledger=view,
-            )
         for _ in group:
             self._waiting.popleft()
 
@@ -712,51 +728,74 @@ class AdmissionScheduler:
         by_id = {j.job_id: (j, ov) for j, ov in zip(jobs, overtakes)}
         for p in plan.placements:
             job, ov = by_id[p.job_id]
-            self._admit_planned(job, t, p.subset, overtakes=ov, batch_size=n)
+            self._admit_planned(
+                job, t, p.subset, overtakes=ov, batch_size=n,
+                predicted=p.predicted_bw,
+            )
 
     def _admit_via_dispatcher(
         self, job: TraceJob, t: float, overtakes: int = 0, batch_size: int = 1
     ) -> None:
-        if self.config.defrag:
-            self._maybe_make_room(job.k, t)
-        ledger = self.dispatcher.ledger
-        if self.grade:
-            _, opt_bw = baselines.oracle_dispatch(
-                self.cluster, self.sim, self.tables, ledger.available(),
-                job.k, ledger=ledger,
+        with telemetry.span(
+            "sched.admit", job_id=job.job_id, k=job.k,
+            policy=self.config.policy, path="serial",
+        ):
+            if self.config.defrag:
+                self._maybe_make_room(job.k, t)
+            ledger = self.dispatcher.ledger
+            if self.grade:
+                with telemetry.span("sched.oracle", k=job.k):
+                    _, opt_bw = baselines.oracle_dispatch(
+                        self.cluster, self.sim, self.tables,
+                        ledger.available(), job.k, ledger=ledger,
+                    )
+            else:
+                opt_bw = float("nan")
+            n_live = len(ledger)
+            alloc = self.dispatcher.admit(job.job_id, job.k, rng=self.rng)
+            last = getattr(self.dispatcher, "last_result", None)
+            predicted = last.predicted_bw if last is not None else float("nan")
+            self._grade(
+                job, t, alloc, opt_bw, n_live, overtakes, batch_size,
+                predicted=predicted,
             )
-        else:
-            opt_bw = float("nan")
-        n_live = len(ledger)
-        alloc = self.dispatcher.admit(job.job_id, job.k, rng=self.rng)
-        self._grade(job, t, alloc, opt_bw, n_live, overtakes, batch_size)
 
     def _admit_planned(
         self, job: TraceJob, t: float, subset: Subset,
         overtakes: int = 0, batch_size: int = 1,
+        predicted: float = float("nan"),
     ) -> None:
         """Commit a jointly-planned placement, grading it like any other."""
-        ledger = self.dispatcher.ledger
-        avail = ledger.available()
-        if len(subset) != job.k or not set(subset) <= set(avail):
-            raise InvalidPlacementError(  # a planner bug: crash, never queue
-                f"joint plan produced an invalid allocation for "
-                f"{job.job_id!r}: {subset}"
+        with telemetry.span(
+            "sched.admit", job_id=job.job_id, k=job.k,
+            policy=self.config.policy, path="planned",
+        ):
+            ledger = self.dispatcher.ledger
+            avail = ledger.available()
+            if len(subset) != job.k or not set(subset) <= set(avail):
+                raise InvalidPlacementError(  # planner bug: crash, never queue
+                    f"joint plan produced an invalid allocation for "
+                    f"{job.job_id!r}: {subset}"
+                )
+            if self.grade:
+                with telemetry.span("sched.oracle", k=job.k):
+                    _, opt_bw = baselines.oracle_dispatch(
+                        self.cluster, self.sim, self.tables, avail, job.k,
+                        ledger=ledger,
+                    )
+            else:
+                opt_bw = float("nan")
+            n_live = len(ledger)
+            alloc = ledger.admit(job.job_id, subset)
+            self._grade(
+                job, t, alloc, opt_bw, n_live, overtakes, batch_size,
+                predicted=predicted,
             )
-        if self.grade:
-            _, opt_bw = baselines.oracle_dispatch(
-                self.cluster, self.sim, self.tables, avail, job.k,
-                ledger=ledger,
-            )
-        else:
-            opt_bw = float("nan")
-        n_live = len(ledger)
-        alloc = ledger.admit(job.job_id, subset)
-        self._grade(job, t, alloc, opt_bw, n_live, overtakes, batch_size)
 
     def _grade(
         self, job: TraceJob, t: float, alloc: Allocation, opt_bw: float,
         n_live: int, overtakes: int, batch_size: int, ledger=None,
+        predicted: float = float("nan"),
     ) -> None:
         # ledger override: the concurrent fifo drain grades each group
         # member against a rebuilt "commits before me" view, not the live
@@ -768,7 +807,22 @@ class AdmissionScheduler:
         bw = self.grading_cache.true_bandwidth(alloc.gpus, ledger=ledger)
         iso = self.grading_cache.true_bandwidth(alloc.gpus)
         if self.harvester is not None:
-            self.harvester.observe(ledger, alloc.gpus, bw)
+            drift = getattr(self.harvester, "drift", None)
+            if drift is not None and not math.isnan(predicted):
+                # stamp B-hat for the report_bandwidth pairing path too:
+                # a later realized measurement resolves through this
+                from repro.core.telemetry import snapshot_digest
+
+                drift.note_prediction(
+                    job.job_id, alloc.gpus, predicted,
+                    digest=snapshot_digest(ledger, alloc.gpus),
+                    tenant=job.tenant,
+                )
+            self.harvester.observe(
+                ledger, alloc.gpus, bw,
+                job_id=job.job_id, predicted=predicted,
+                tenant=job.tenant, t=t, source="grade",
+            )
         shared = sum(
             1 for hid in alloc.host_ids
             if ledger.rail_contenders(hid, against=alloc.gpus) > 0
@@ -780,6 +834,7 @@ class AdmissionScheduler:
             policy=self.config.policy, overtakes=overtakes,
             batch_size=batch_size,
             stranding=frag.stranding, clean_hosts=frag.clean_hosts,
+            predicted_bw=predicted,
         )
         self.records.append(rec)
         self._rec_by_job[job.job_id] = rec
@@ -821,6 +876,10 @@ class AdmissionScheduler:
         # single atomic move: one journal event, version bumps by 2 —
         # identical ledger state to the release+admit pair this replaces
         ledger.migrate(best.job_id, best.new_gpus)
+        telemetry.event(
+            "sched.redispatch", job_id=best.job_id,
+            gain=best.new_bw - best.old_bw, cost=best.cost,
+        )
         self.migrations.append(MigrationEvent(
             t, best.job_id, best.old_gpus, best.new_gpus,
             best.old_bw, best.new_bw, best.cost,
@@ -897,13 +956,17 @@ class AdmissionScheduler:
         if remaining <= 0:
             return  # trace-level migration budget exhausted
         ledger = self.dispatcher.ledger
-        plan = defrag_mod.plan_defrag(
-            self.cluster, self.grading_cache, ledger, cfg,
-            self._defrag_proposer(),
-            target_k=target_k,
-            budget=min(cfg.max_moves_per_pass, remaining),
-        )
-        defrag_mod.apply_plan(ledger, plan)
+        with telemetry.span(
+            "sched.defrag", kind=kind, target_k=target_k or 0,
+        ) as sp:
+            plan = defrag_mod.plan_defrag(
+                self.cluster, self.grading_cache, ledger, cfg,
+                self._defrag_proposer(),
+                target_k=target_k,
+                budget=min(cfg.max_moves_per_pass, remaining),
+            )
+            defrag_mod.apply_plan(ledger, plan)
+            sp["moves"] = len(plan.moves)
         for mv in plan.moves:
             self.migrations.append(MigrationEvent(
                 t, mv.job_id, mv.old_gpus, mv.new_gpus,

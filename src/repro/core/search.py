@@ -26,6 +26,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core import telemetry
 from repro.core.cluster import Cluster
 from repro.core.intra_host import IntraHostTables
 from repro.core.tenancy import JobLedger
@@ -169,6 +170,27 @@ def eha_search(
     frag_penalty: FragPenalty = None,
 ) -> SearchResult:
     """Algorithm 1.  Fast constructive search around the equilibrium insight."""
+    with telemetry.span("search.eha", k=k, n_avail=len(avail)) as sp:
+        res = _eha_search(
+            cluster, tables, predictor, avail, k, max_host_combos,
+            frag_penalty,
+        )
+        if sp:
+            sp["n_candidates"] = res.n_candidates
+            sp["predicted_bw"] = res.predicted_bw
+            sp["single_host_shortcut"] = res.n_candidates == 1
+        return res
+
+
+def _eha_search(
+    cluster: Cluster,
+    tables: IntraHostTables,
+    predictor,
+    avail: Sequence[int],
+    k: int,
+    max_host_combos: int = 64,
+    frag_penalty: FragPenalty = None,
+) -> SearchResult:
     t0 = time.time()
     by_host = _available_by_host(cluster, avail)
     n_cands = 0
@@ -251,6 +273,22 @@ def pts_search(
     frag_penalty: FragPenalty = None,
 ) -> SearchResult:
     """Algorithm 2.  Top-down iterative elimination of the bottleneck GPU."""
+    with telemetry.span("search.pts", k=k, n_avail=len(avail)) as sp:
+        res = _pts_search(cluster, tables, predictor, avail, k, frag_penalty)
+        if sp:
+            sp["n_candidates"] = res.n_candidates
+            sp["predicted_bw"] = res.predicted_bw
+        return res
+
+
+def _pts_search(
+    cluster: Cluster,
+    tables: IntraHostTables,
+    predictor,
+    avail: Sequence[int],
+    k: int,
+    frag_penalty: FragPenalty = None,
+) -> SearchResult:
     t0 = time.time()
     by_host = _available_by_host(cluster, avail)
     s_curr: Subset = sorted(avail)
@@ -285,6 +323,7 @@ def pts_search(
             s_curr = list(res.subset)
             # the descent scored every remove-one child of every round
             n_cands += (n0 * (n0 + 1) - k * (k + 1)) // 2
+            telemetry.event("search.pts.fused_scan", steps=n0 - len(s_curr))
 
     # Iterative elimination |S| -> k, one GPU at a time.  Each round is ONE
     # fused featurize+predict call when the predictor has an incremental
@@ -292,6 +331,7 @@ def pts_search(
     # matrix with a patched row per child, deduplicated against the
     # prediction cache); the plain batched predict is the fallback.
     fused = hasattr(predictor, "predict_children")
+    rounds = 0
     while len(s_curr) > k:
         children = [s_curr[:i] + s_curr[i + 1:] for i in range(len(s_curr))]
         if fused:
@@ -299,7 +339,12 @@ def pts_search(
         else:
             preds = predictor.predict(children)
         n_cands += len(children)
+        rounds += 1
         s_curr = children[int(np.argmax(_penalized(preds, children, frag_penalty)))]
+    if rounds:
+        telemetry.event(
+            "search.pts.host_rounds", rounds=rounds, fused_children=fused
+        )
 
     final_bw = float(predictor.predict([s_curr])[0])
     return SearchResult(s_curr, final_bw, time.time() - t0, n_cands + 1)
@@ -503,6 +548,17 @@ def joint_hybrid_search(
             p.predicted_bw = float(bw)
         return JointResult(placements, order, float(finals.sum()), 0.0)
 
+    def _traced_order(order: str, sink) -> JointResult:
+        # one span per candidate order — on the batcher path these run on
+        # worker threads, so each is a root span on its own thread
+        with telemetry.span(
+            "search.joint_order", order=order, n_jobs=len(requests),
+        ) as sp:
+            res = _run_order(order, sink)
+            if sp:
+                sp["total_predicted_bw"] = res.total_predicted_bw
+            return res
+
     if batcher is not None and len(uniq) > 1:
         # one worker thread per order; per-thread stats sinks (merged after
         # the join) keep the shared counters race-free
@@ -513,7 +569,7 @@ def joint_hybrid_search(
         def _worker(i: int, order: str) -> None:
             try:
                 with batcher.worker():
-                    results[i] = _run_order(order, sinks[i])
+                    results[i] = _traced_order(order, sinks[i])
             except BaseException as e:
                 errs[i] = e
 
@@ -536,7 +592,7 @@ def joint_hybrid_search(
                 setattr(stats_sink, f.name, getattr(merged, f.name))
         candidates = results
     else:
-        candidates = [_run_order(o, stats_sink) for o in uniq]
+        candidates = [_traced_order(o, stats_sink) for o in uniq]
 
     best: Optional[JointResult] = None
     for cand in candidates:

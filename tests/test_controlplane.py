@@ -374,7 +374,7 @@ class _CountingHarvester:
     def __init__(self):
         self.n = 0
 
-    def observe(self, ledger, gpus, bw):
+    def observe(self, ledger, gpus, bw, **kw):
         self.n += 1
 
 
