@@ -45,24 +45,35 @@ Rows:
     the admission tracer installed vs disabled: asserts byte-identical
     placements and reports the overhead percentage against the
     BENCH_TRACE_OVERHEAD_PCT guard (default 5; CI asserts ok=True)
+  dispatch_forensics_overhead — the same interleaved best-of-N protocol
+    with dossier capture (forensics.DossierRecorder) installed vs
+    disabled: byte-identical placements, overhead vs the
+    BENCH_FORENSICS_OVERHEAD_PCT guard (default 5; CI 25)
+  dispatch_regret_summary — per-tenant regret ledger from a graded
+    capture-on replay (round-robin tenants): admissions and mean oracle
+    regret (GB/s) per tenant
 """
 
 from __future__ import annotations
 
+import dataclasses
 import os
 import time
 
 import numpy as np
 
 import repro.core as core
+from repro.core import forensics
 from repro.core import surrogate as surr
 from repro.core import telemetry
 from benchmarks.common import csv_row, get_context
 
 CLUSTERS = ("H100", "Het-4Mix")
 N_JOBS = int(os.environ.get("BENCH_TRACE_JOBS", "50"))
+REGRET_JOBS = int(os.environ.get("BENCH_REGRET_JOBS", "15"))
 LATENCY_MS = float(os.environ.get("BENCH_SEARCH_LATENCY_MS", "150"))
 OVERHEAD_PCT = float(os.environ.get("BENCH_TRACE_OVERHEAD_PCT", "5"))
+FORENSICS_PCT = float(os.environ.get("BENCH_FORENSICS_OVERHEAD_PCT", "5"))
 OVERHEAD_REPS = int(os.environ.get("BENCH_TRACE_OVERHEAD_REPS", "3"))
 TARGET_SPEEDUP = 5.0
 PINNED = ("H100", "fifo", "analytic", False)  # the headline config
@@ -192,6 +203,81 @@ def _trace_overhead_row():
     )
 
 
+def _forensics_overhead_row():
+    """Dossier-capture overhead guard, same protocol as the tracer's:
+    interleaved best-of-N replays of the pinned config with a
+    DossierRecorder installed vs disabled, byte-identical placements
+    asserted (capture only records — it never steers the search)."""
+    name, policy, mode, defrag = PINNED
+    ctx = get_context(name)
+    trace = _trace(ctx.cluster)
+    _replay(ctx, trace, policy, 0.0, mode, defrag, "scanon")  # JIT warm-up
+    best = {"off": float("inf"), "on": float("inf")}
+    subs = {}
+    n_dossiers = 0
+    for _ in range(max(OVERHEAD_REPS, 1)):
+        dt, sub, _, _ = _replay(ctx, trace, policy, 0.0, mode, defrag,
+                                "scanon")
+        best["off"] = min(best["off"], dt)
+        subs["off"] = sub
+        rec = forensics.DossierRecorder()
+        with forensics.capture(rec):
+            dt, sub, _, _ = _replay(ctx, trace, policy, 0.0, mode, defrag,
+                                    "scanon")
+        best["on"] = min(best["on"], dt)
+        subs["on"] = sub
+        n_dossiers = len(rec)
+    assert subs["on"] == subs["off"], "dossier capture changed placements"
+    pct = 100.0 * (best["on"] - best["off"]) / best["off"]
+    return csv_row(
+        "dispatch_forensics_overhead",
+        1e6 * max(best["on"] - best["off"], 0.0) / len(trace),
+        f"captured={best['on'] * 1e3:.1f}ms;plain={best['off'] * 1e3:.1f}ms;"
+        f"overhead_pct={pct:.2f};threshold_pct={FORENSICS_PCT:.1f};"
+        f"dossiers_per_replay={n_dossiers};identical=True;"
+        f"ok={pct <= FORENSICS_PCT}",
+    )
+
+
+def _regret_summary_row():
+    """Per-tenant regret from a graded capture-on replay of the pinned
+    config: a short trace (grading runs the exact Oracle per admission)
+    with round-robin tenants, the scheduler's note_grade feeding the
+    recorder's RegretLedger."""
+    name, policy, mode, defrag = PINNED
+    ctx = get_context(name)
+    tenants = ("tenant-a", "tenant-b")
+    trace = [
+        dataclasses.replace(j, tenant=tenants[i % len(tenants)])
+        for i, j in enumerate(_trace(ctx.cluster)[:REGRET_JOBS])
+    ]
+    disp = _dispatcher(ctx, mode, "scanon")
+    sched = core.AdmissionScheduler(
+        ctx.cluster, ctx.sim, ctx.tables, disp,
+        core.SchedulerConfig(policy=policy, defrag=defrag),
+    )
+    rec = forensics.DossierRecorder()
+    t0 = time.time()
+    with forensics.capture(rec):
+        sched.run(trace)
+    dt = time.time() - t0
+    summ = rec.regret.summary()
+    parts = []
+    for tenant in tenants:
+        row = summ.get(tenant)
+        if row is None:
+            continue
+        parts.append(
+            f"{tenant}.n={int(row['n'])};"
+            f"{tenant}.mean_realized={row['mean_realized']:.1f};"
+            f"{tenant}.mean_oracle_regret={row['mean_oracle_regret']:.2f}"
+        )
+    return csv_row(
+        "dispatch_regret_summary", 1e6 * dt / max(len(trace), 1),
+        ";".join(parts) + f";dossiers={len(rec)}",
+    )
+
+
 def run() -> list:
     rows = []
     pinned = None
@@ -278,4 +364,6 @@ def run() -> list:
         f"ok={1e3 * worst_latency < LATENCY_MS}",
     ))
     rows.append(_trace_overhead_row())
+    rows.append(_forensics_overhead_row())
+    rows.append(_regret_summary_row())
     return rows

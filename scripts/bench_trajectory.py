@@ -1,0 +1,202 @@
+"""Bench trajectory tracking: append runs to history, flag regressions.
+
+Every completed ``benchmarks.run`` writes a machine-readable
+``BENCH_RESULTS.json``; this script turns those one-shot snapshots into a
+trajectory:
+
+  # compare the fresh results against the last history entry (exit 1 on
+  # regression beyond the threshold), then record the fresh run
+  PYTHONPATH=src python scripts/bench_trajectory.py compare
+  PYTHONPATH=src python scripts/bench_trajectory.py append
+
+``BENCH_HISTORY.jsonl`` holds one run per line (the full results document,
+compact-encoded).  ``compare`` inspects the key rows — admission
+throughput (``dispatch_tput_*`` us/adm), trace + forensics capture
+overhead (``*_overhead`` pct), and any GBE percentages — against the most
+recent history entry:
+
+* value metrics (us_per_call): regression when the new value exceeds the
+  old by more than ``--threshold-pct`` (relative);
+* ``gbe`` fields: regression when the new percentage drops by more than
+  ``--threshold-pct`` *relative*;
+* ``overhead_pct`` fields: regression when the new overhead exceeds the
+  old by more than ``--threshold-pct`` *percentage points* (overheads sit
+  near zero, where relative comparison is meaningless noise).
+
+The threshold defaults to ``BENCH_REGRESSION_PCT`` (else 50 — CI runners
+are noisy; tighten locally).  With no history yet, ``compare`` reports a
+baseline-free pass so the first CI run after this lands cleanly.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+DEFAULT_RESULTS = "BENCH_RESULTS.json"
+DEFAULT_HISTORY = "BENCH_HISTORY.jsonl"
+DEFAULT_THRESHOLD = float(os.environ.get("BENCH_REGRESSION_PCT", "50"))
+
+# key-row selection: (row-name substring, what to read, direction)
+#   value        -> entry["value"] (us_per_call), lower is better
+#   gbe          -> every numeric-looking derived field named *gbe*, higher
+#                   is better
+#   overhead_pct -> derived_fields["overhead_pct"], lower is better, in
+#                   percentage points
+KEY_ROWS = (
+    ("dispatch_tput_", "value"),
+    ("dispatch_trace_overhead", "overhead_pct"),
+    ("dispatch_forensics_overhead", "overhead_pct"),
+    ("gbe", "gbe"),
+    ("contention_gbe", "gbe"),
+)
+
+
+def load_results(path: str) -> dict:
+    with open(path, encoding="utf-8") as fh:
+        return json.load(fh)
+
+
+def load_history(path: str):
+    """-> list of result documents, oldest first (torn/corrupt lines are
+    skipped: the history survives a killed CI job)."""
+    runs = []
+    if not os.path.exists(path):
+        return runs
+    with open(path, encoding="utf-8") as fh:
+        for line in fh:
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                runs.append(json.loads(line))
+            except json.JSONDecodeError:
+                continue
+    return runs
+
+
+def _numeric(v):
+    """Coerce derived-field values like '92.15%' / '3.1x' -> float."""
+    if isinstance(v, (int, float)):
+        return float(v)
+    if isinstance(v, str):
+        try:
+            return float(v.rstrip("%x"))
+        except ValueError:
+            return None
+    return None
+
+
+def key_metrics(doc: dict) -> dict:
+    """-> {(row, field): value} for the rows the trajectory guards."""
+    out = {}
+    for entry in doc.get("results", []):
+        row = entry.get("row", "")
+        fields = entry.get("derived_fields", {}) or {}
+        for pattern, kind in KEY_ROWS:
+            if pattern not in row:
+                continue
+            if kind == "value":
+                v = _numeric(entry.get("value"))
+                if v is not None:
+                    out[(row, "us_per_call")] = v
+            elif kind == "overhead_pct":
+                v = _numeric(fields.get("overhead_pct"))
+                if v is not None:
+                    out[(row, "overhead_pct")] = v
+            elif kind == "gbe":
+                for k, raw in fields.items():
+                    if "gbe" not in k:
+                        continue
+                    v = _numeric(raw)
+                    if v is not None:
+                        out[(row, k)] = v
+    return out
+
+
+def compare(prev: dict, cur: dict, threshold_pct: float):
+    """-> (regressions, lines): each comparison rendered, regressions
+    collected per the direction rules in the module docstring."""
+    pm, cm = key_metrics(prev), key_metrics(cur)
+    regressions = []
+    lines = []
+    for key in sorted(cm):
+        row, field = key
+        new = cm[key]
+        old = pm.get(key)
+        if old is None:
+            lines.append(f"  NEW      {row}.{field} = {new:.2f}")
+            continue
+        if field == "overhead_pct":
+            bad = new > old + threshold_pct
+            delta = f"{new - old:+.2f}pts"
+        elif "gbe" in field:
+            bad = old > 0 and new < old * (1 - threshold_pct / 100.0)
+            delta = f"{100.0 * (new - old) / old:+.1f}%" if old else "n/a"
+        else:  # us_per_call: lower is better
+            bad = old > 0 and new > old * (1 + threshold_pct / 100.0)
+            delta = f"{100.0 * (new - old) / old:+.1f}%" if old else "n/a"
+        tag = "REGRESS" if bad else "ok"
+        lines.append(
+            f"  {tag:8s} {row}.{field}: {old:.2f} -> {new:.2f} ({delta})"
+        )
+        if bad:
+            regressions.append((row, field, old, new))
+    return regressions, lines
+
+
+def cmd_append(args) -> int:
+    doc = load_results(args.results)
+    with open(args.history, "a", encoding="utf-8") as fh:
+        fh.write(json.dumps(doc, sort_keys=True) + "\n")
+    print(
+        f"appended run {doc.get('commit', 'unknown')[:12]} "
+        f"({len(doc.get('results', []))} rows) -> {args.history}"
+    )
+    return 0
+
+
+def cmd_compare(args) -> int:
+    cur = load_results(args.results)
+    runs = load_history(args.history)
+    if not runs:
+        print(
+            f"no history at {args.history}: baseline-free pass "
+            f"({len(key_metrics(cur))} key metrics in current run)"
+        )
+        return 0
+    prev = runs[-1]
+    print(
+        f"comparing {cur.get('commit', 'unknown')[:12]} against "
+        f"{prev.get('commit', 'unknown')[:12]} "
+        f"(threshold {args.threshold_pct:.0f}%)"
+    )
+    regressions, lines = compare(prev, cur, args.threshold_pct)
+    for line in lines:
+        print(line)
+    if regressions:
+        print(f"FAIL: {len(regressions)} key row(s) regressed")
+        return 1
+    print("ok: no key-row regressions")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    sub = ap.add_subparsers(dest="cmd", required=True)
+    for name, fn in (("append", cmd_append), ("compare", cmd_compare)):
+        p = sub.add_parser(name)
+        p.add_argument("--results", default=DEFAULT_RESULTS)
+        p.add_argument("--history", default=DEFAULT_HISTORY)
+        p.set_defaults(fn=fn)
+    sub.choices["compare"].add_argument(
+        "--threshold-pct", type=float, default=DEFAULT_THRESHOLD,
+    )
+    args = ap.parse_args(argv)
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

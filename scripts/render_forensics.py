@@ -1,0 +1,142 @@
+"""Render a dispatch-forensics report from a dossier dump.
+
+  PYTHONPATH=src python scripts/render_forensics.py dossiers.jsonl [--seq N]
+
+Input: one DecisionDossier JSON object per line
+(``DossierRecorder.write_jsonl``).  Output (markdown): the per-decision
+attribution table, a per-tenant regret rollup, and — with ``--seq`` — the
+full drill-down for one decision (EHA-vs-PTS scores, PTS elimination
+rounds, intra/inter bandwidth decomposition, contention-cap delta).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import sys
+
+
+def load(path):
+    out = []
+    for line in open(path, encoding="utf-8"):
+        line = line.strip()
+        if line:
+            out.append(json.loads(line))
+    return out
+
+
+def _fmt(v, nd=1):
+    if v is None:
+        return "-"
+    if isinstance(v, float) and math.isnan(v):
+        return "-"
+    if isinstance(v, float) and math.isinf(v):
+        return "inf"
+    return f"{v:.{nd}f}" if isinstance(v, float) else str(v)
+
+
+def decisions_table(ds):
+    print("| seq | trace | job | tenant | k | path | winner | margin "
+          "| B-hat | realized | regret |")
+    print("|---|---|---|---|---|---|---|---|---|---|---|")
+    for d in ds:
+        print(
+            f"| {d['journal_seq']} | {d['trace_id']} | {d['job_id']} "
+            f"| {d.get('tenant') or '-'} | {d['k']} | {d['path']} "
+            f"| {d.get('winner') or '-'} | {_fmt(d.get('winner_margin'), 2)} "
+            f"| {_fmt(d.get('predicted_bw'))} | {_fmt(d.get('realized_bw'))} "
+            f"| {_fmt(d.get('regret'), 2)} |"
+        )
+
+
+def regret_rollup(ds):
+    by_tenant = {}
+    for d in ds:
+        e = by_tenant.setdefault(d.get("tenant") or "-",
+                                 {"n": 0, "realized": 0.0, "regret": 0.0,
+                                  "n_regret": 0})
+        e["n"] += 1
+        r = d.get("realized_bw")
+        if isinstance(r, (int, float)) and math.isfinite(r):
+            e["realized"] += r
+        rg = d.get("regret")
+        if isinstance(rg, (int, float)) and math.isfinite(rg):
+            e["n_regret"] += 1
+            e["regret"] += rg
+    print("\n## Per-tenant regret\n")
+    print("| tenant | admissions | mean realized (GB/s) "
+          "| mean oracle regret (GB/s) |")
+    print("|---|---|---|---|")
+    for tenant, e in sorted(by_tenant.items()):
+        mr = e["realized"] / e["n"] if e["n"] else float("nan")
+        mg = e["regret"] / e["n_regret"] if e["n_regret"] else float("nan")
+        print(f"| {tenant} | {e['n']} | {_fmt(mr)} | {_fmt(mg, 2)} |")
+
+
+def drill_down(d):
+    print(f"\n## Decision seq={d['journal_seq']} ({d['job_id']})\n")
+    print(f"- subset: {d['subset']} (k={d['k']}, {d['n_avail']} free, "
+          f"path={d['path']}, {d['n_searches']} search(es))")
+    print(f"- winner: {d.get('winner') or '-'} "
+          f"(EHA {_fmt(d.get('eha_score'))} vs "
+          f"PTS {_fmt(d.get('pts_score'))}, "
+          f"margin {_fmt(d.get('winner_margin'), 2)}; "
+          f"frag tie-break {'on' if d.get('frag_active') else 'off'})")
+    for side in ("eha", "pts"):
+        s = d.get(side)
+        if s:
+            print(f"- {side.upper()}: B-hat={_fmt(s['predicted_bw'])} over "
+                  f"{s['n_candidates']} candidates in "
+                  f"{1e3 * s['seconds']:.1f}ms"
+                  + (" (single-host shortcut)"
+                     if s.get("single_host_shortcut") else ""))
+    if d.get("pts_prune"):
+        p = d["pts_prune"]
+        print(f"- PTS prune: {p['kind']} host {p['host_id']} "
+              f"(-{p['pruned']} GPUs)")
+    if d.get("pts_fused_steps"):
+        print(f"- PTS fused descent: {d['pts_fused_steps']} on-device steps")
+    rounds = d.get("pts_rounds") or []
+    if rounds:
+        print(f"- PTS eliminations ({len(rounds)} host rounds): "
+              + ", ".join(f"gpu{r['eliminated']}@{_fmt(r['score'])}"
+                          for r in rounds))
+    dec = d.get("decomposition")
+    if dec:
+        intra = dec.get("intra_bw") or {}
+        share = ", ".join(
+            f"host{h}={_fmt(bw)}" for h, bw in sorted(intra.items())
+        )
+        print(f"- decomposition: {dec['n_hosts']} host(s) [{share}]; "
+              f"inter cap {_fmt(dec.get('inter_cap'))}; "
+              f"isolated {_fmt(dec.get('isolated_bw'))} -> "
+              f"final {_fmt(dec.get('predicted_bw'))} "
+              f"(cap delta {_fmt(dec.get('cap_delta'), 2)}, "
+              f"mode {dec.get('contention_mode')})")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("dossiers")
+    ap.add_argument("--seq", type=int, default=None,
+                    help="drill into the decision at this journal seq")
+    args = ap.parse_args(argv)
+    ds = load(args.dossiers)
+    if not ds:
+        print("no dossiers")
+        return 1
+    print(f"# Dispatch forensics ({len(ds)} decisions)\n")
+    decisions_table(ds)
+    regret_rollup(ds)
+    if args.seq is not None:
+        match = [d for d in ds if d["journal_seq"] == args.seq]
+        if not match:
+            print(f"\nno dossier with journal seq {args.seq}")
+            return 1
+        drill_down(match[-1])
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

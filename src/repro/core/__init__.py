@@ -44,6 +44,10 @@ Public surface:
     collect_scheduler_metrics / read_metrics_jsonl, DriftMonitor /
     DriftAlert / DecisionRecord / finetune_on_drift,
     TelemetryHarvester(drift=...) (see docs/observability.md)
+  Dispatch forensics (attribution, time-travel, counterfactual replay):
+    forensics.DossierRecorder / capture / DecisionDossier,
+    reconstruct / replay_decision / whatif, RegretLedger / absorb_regret,
+    bandwidth_decomposition (see docs/observability.md §Forensics)
 """
 
 from repro.core.bandwidth_sim import BW_SCALE, BandwidthSimulator
@@ -111,6 +115,18 @@ from repro.core.controlplane import (
     TenantPolicy,
     read_journal,
     replay_journal,
+)
+from repro.core.forensics import (
+    DecisionDossier,
+    DossierRecorder,
+    RegretLedger,
+    ReplayResult,
+    WhatIfReport,
+    absorb_regret,
+    bandwidth_decomposition,
+    reconstruct,
+    replay_decision,
+    whatif,
 )
 from repro.core.intra_host import IntraHostTables
 from repro.core.predict_cache import (
@@ -258,6 +274,16 @@ __all__ = [
     "finetune_on_drift",
     "read_metrics_jsonl",
     "snapshot_digest",
+    "DecisionDossier",
+    "DossierRecorder",
+    "RegretLedger",
+    "ReplayResult",
+    "WhatIfReport",
+    "absorb_regret",
+    "bandwidth_decomposition",
+    "reconstruct",
+    "replay_decision",
+    "whatif",
     "ContendedSample",
     "TelemetryHarvester",
     "build_contended_dataset",

@@ -108,14 +108,20 @@ class JournalEvent:
     op: str                                 # "admit" | "release" | "migrate"
     job_id: str
     gpus: Optional[Tuple[int, ...]] = None  # admit/migrate targets
+    tenant: str = ""                        # "" = no tenant (key omitted)
 
 
-def _encode_event(seq: int, op: str, job_id: str, gpus=None) -> bytes:
+def _encode_event(seq: int, op: str, job_id: str, gpus=None,
+                  tenant: str = "") -> bytes:
     """``<canonical json>#<crc32 hex>\\n`` — compact, key-sorted json so a
-    record's bytes are a pure function of the event."""
+    record's bytes are a pure function of the event.  The ``tenant`` key
+    is emitted only when non-empty, so tenant-less streams are
+    byte-identical to the PR 7 grammar."""
     payload: Dict = {"seq": seq, "op": op, "job": job_id}
     if gpus is not None:
         payload["gpus"] = [int(g) for g in gpus]
+    if tenant:
+        payload["tenant"] = tenant
     line = json.dumps(payload, separators=(",", ":"), sort_keys=True)
     crc = zlib.crc32(line.encode("utf-8")) & 0xFFFFFFFF
     return f"{line}#{crc:08x}\n".encode("utf-8")
@@ -155,6 +161,7 @@ def _scan(raw: bytes) -> Tuple[List[JournalEvent], int]:
             events.append(JournalEvent(
                 ev["seq"], ev["op"], ev["job"],
                 tuple(int(g) for g in gpus) if gpus is not None else None,
+                str(ev.get("tenant", "")),
             ))
         except (ValueError, KeyError, TypeError, UnicodeDecodeError):
             break
@@ -202,18 +209,24 @@ class LedgerJournal:
                     fh.truncate(valid_end)
         self._fh = open(self.path, "ab")
 
-    def record(self, op: str, job_id: str, gpus=None) -> None:
-        """Append one event durably (called by the ledger, write-ahead)."""
+    def record(self, op: str, job_id: str, gpus=None,
+               tenant: str = "") -> int:
+        """Append one event durably (called by the ledger, write-ahead).
+        Returns the event's sequence number, so the caller can correlate
+        the in-memory commit with its journal line (admission spans and
+        forensics dossiers carry it as ``journal_seq``)."""
         if op not in JOURNAL_OPS:
             raise ValueError(f"unknown journal op {op!r}")
         with self._lock:
-            data = _encode_event(self._seq, op, job_id, gpus)
+            seq = self._seq
+            data = _encode_event(seq, op, job_id, gpus, tenant=tenant)
             self._fh.write(data)
             self._fh.flush()
             if self.sync:
                 os.fsync(self._fh.fileno())
             self._seq += 1
             self.n_records += 1
+            return seq
 
     def close(self) -> None:
         self._fh.close()
@@ -225,18 +238,25 @@ class LedgerJournal:
         self.close()
 
 
-def replay_journal(path, cluster) -> JobLedger:
+def replay_journal(path, cluster, upto_seq: Optional[int] = None) -> JobLedger:
     """Rebuild a ledger from a journal: apply the durable event prefix in
     order onto a fresh (journal-less) ledger.  Bit-identical recovery —
     identical allocations, identical ``version`` (admit/release bump 1,
     migrate bumps 2, exactly like the live mutations the journal shadows),
     hence identical fragmentation metrics.  Attach a fresh
     :class:`LedgerJournal` on the same path afterwards (``attach_journal(
-    journal, recovered=True)``) to keep appending to the same file."""
+    journal, recovered=True)``) to keep appending to the same file.
+
+    ``upto_seq`` stops the replay *before* applying the event with that
+    sequence number — the time-travel primitive behind
+    :func:`repro.core.forensics.reconstruct`, which rebuilds the exact
+    ledger view the admission at ``seq`` was decided against."""
     ledger = JobLedger(cluster)
     for ev in read_journal(path):
+        if upto_seq is not None and ev.seq >= upto_seq:
+            break
         if ev.op == "admit":
-            ledger.admit(ev.job_id, ev.gpus)
+            ledger.admit(ev.job_id, ev.gpus, tenant=ev.tenant)
         elif ev.op == "release":
             ledger.release(ev.job_id)
         else:  # migrate
@@ -294,6 +314,8 @@ class AdmissionOutcome:
     parked: bool = False           # waited on the capacity/QoS queue
     reason: str = ""               # rejection cause
     seconds: float = 0.0           # submit-to-resolution wall time
+    journal_seq: int = -1          # seq of the commit's journal line (-1:
+                                   # no journal attached)
 
     @property
     def admitted(self) -> bool:
@@ -547,7 +569,30 @@ class AdmissionControlPlane:
             )
 
     def _admit_one(self, req: _Request) -> Optional[AdmissionOutcome]:
-        """Stage/commit cycle for one request; None means parked."""
+        """Stage/commit cycle for one request; None means parked.  Runs
+        entirely on one pool worker thread, so the (thread-local) forensics
+        decision draft opened here collects the staged search's provenance
+        and seals into a dossier iff the request commits."""
+        from repro.core import forensics
+
+        with forensics.decision(
+            req.job_id, tenant=req.tenant, k=req.k, path="cplane",
+        ) as draft:
+            outcome = self._admit_one_inner(req)
+            if draft is not None and outcome is not None and outcome.admitted:
+                draft.commit(
+                    subset=outcome.alloc.gpus,
+                    predicted_bw=outcome.predicted_bw,
+                    journal_seq=outcome.journal_seq,
+                    staged_version=outcome.staged_version,
+                    committed_version=outcome.committed_version,
+                    validated=outcome.validated,
+                    serialized=outcome.serialized,
+                    retries=outcome.retries,
+                )
+            return outcome
+
+    def _admit_one_inner(self, req: _Request) -> Optional[AdmissionOutcome]:
         pol = self.policies.get(req.tenant)
         if pol is not None and pol.max_concurrent is not None:
             with self._state_lock:
@@ -582,6 +627,8 @@ class AdmissionControlPlane:
                         "conflict" if outcome is None
                         else "validated" if outcome.validated else "cas"
                     )
+                    if outcome is not None:
+                        sp["journal_seq"] = outcome.journal_seq
             with self._stats_lock:
                 self.stats.commit_seconds += time.time() - t1
             if outcome is not None:
@@ -603,23 +650,27 @@ class AdmissionControlPlane:
         staged = snapshot.version
         with ledger.lock:
             if ledger.version == staged:
-                alloc = ledger.admit_if(req.job_id, subset, staged)
+                alloc = ledger.admit_if(
+                    req.job_id, subset, staged, tenant=req.tenant
+                )
                 validated = False
             elif not self.strict and self._placement_unaffected(
                 subset, snapshot
             ):
-                alloc = ledger.admit(req.job_id, subset)
+                alloc = ledger.admit(req.job_id, subset, tenant=req.tenant)
                 validated = True
             else:
                 return None
             committed = ledger.version
+            # under the lock, so this is *our* commit's journal line
+            seq = ledger.last_journal_seq if ledger.journal is not None else -1
             self._note_admitted(req, validated)
         return AdmissionOutcome(
             req.job_id, req.tenant, "admitted", alloc=alloc,
             predicted_bw=predicted, staged_version=staged,
             committed_version=committed, retries=req.retries,
             validated=validated, parked=req.parked,
-            seconds=time.time() - req.t_submit,
+            seconds=time.time() - req.t_submit, journal_seq=seq,
         )
 
     def _admit_serialized(self, req: _Request) -> Optional[AdmissionOutcome]:
@@ -630,7 +681,7 @@ class AdmissionControlPlane:
         with self._serial_lock, ledger.lock, telemetry.span(
             "cplane.serialized", job_id=req.job_id, k=req.k,
             retries=req.retries,
-        ):
+        ) as sp:
             if req.k > ledger.n_free():
                 parked = True
             else:
@@ -638,7 +689,13 @@ class AdmissionControlPlane:
                 v = ledger.version
                 subset, predicted = self._search(ledger, req.k)
                 self._check_placement(subset, ledger, req)
-                alloc = ledger.admit_if(req.job_id, subset, v)
+                alloc = ledger.admit_if(
+                    req.job_id, subset, v, tenant=req.tenant
+                )
+                seq = (ledger.last_journal_seq
+                       if ledger.journal is not None else -1)
+                if sp:
+                    sp["journal_seq"] = seq
                 self._note_admitted(req, validated=False, serialized=True)
         if parked:
             self._park(req)
@@ -647,7 +704,7 @@ class AdmissionControlPlane:
             req.job_id, req.tenant, "admitted", alloc=alloc,
             predicted_bw=predicted, staged_version=v, committed_version=v + 1,
             retries=req.retries, serialized=True, parked=req.parked,
-            seconds=time.time() - req.t_submit,
+            seconds=time.time() - req.t_submit, journal_seq=seq,
         )
 
     def _note_admitted(
@@ -698,10 +755,21 @@ class AdmissionControlPlane:
                 penalty = make_frag_penalty(self.cluster, view, d.frag_weight)
 
             def run():
+                from repro.core import forensics
+
                 res = search_mod.hybrid_search(
                     self.cluster, d.tables, pred, avail, k,
                     frag_penalty=penalty,
                 )
+                df = forensics.draft()
+                if df is not None:  # post-selection: cannot alter the choice
+                    df.note_decomposition(forensics.bandwidth_decomposition(
+                        self.cluster, d.tables, view, res.subset,
+                        d.base_predictor,
+                        predicted_bw=float(res.predicted_bw),
+                        contention_mode=(d.contention_mode
+                                         if d.contention_aware else "off"),
+                    ))
                 return list(res.subset), float(res.predicted_bw)
 
         else:

@@ -29,7 +29,7 @@ from typing import Callable, Dict, List, Optional, Sequence
 
 import numpy as np
 
-from repro.core import baselines, search, telemetry
+from repro.core import baselines, forensics, search, telemetry
 from repro.core.bandwidth_sim import BandwidthSimulator
 from repro.core.cluster import Cluster, availability_scenario
 from repro.core.contention import ContentionAwarePredictor
@@ -147,8 +147,13 @@ class DispatcherService:
                 )
         return alloc
 
-    def admit(self, job_id: str, k: int, rng=None) -> Allocation:
+    def admit(self, job_id: str, k: int, rng=None,
+              tenant: str = "") -> Allocation:
         """Place a k-GPU job on currently-free GPUs and record it live.
+
+        ``tenant`` tags the allocation (and its journal line) for
+        per-tenant accounting — forensics regret, QoS — without affecting
+        placement.
 
         Raises :class:`CapacityError` (queueable: retry at the next
         release) when too few GPUs are free, and
@@ -167,7 +172,7 @@ class DispatcherService:
                 f"{self.name} returned an invalid allocation for k={k}: "
                 f"{subset}"
             )
-        return self.ledger.admit(job_id, subset)
+        return self.ledger.admit(job_id, subset, tenant=tenant)
 
     def release(self, job_id: str) -> Allocation:
         """Free a live job's GPUs."""
@@ -294,6 +299,17 @@ class BandPilotDispatcher(DispatcherService):
                 frag_penalty=penalty,
             )
             self.last_result = res
+            df = forensics.draft()
+            if df is not None:  # post-selection: cannot alter the choice
+                df.note_decomposition(forensics.bandwidth_decomposition(
+                    self.cluster, self.tables, self.ledger, res.subset,
+                    self.base_predictor,
+                    predicted_bw=float(res.predicted_bw),
+                    contention_mode=(
+                        self.contention_mode if self.contention_aware
+                        else "off"
+                    ),
+                ))
             if sp:
                 after = self.predictor_stats()
                 sp["winner"] = res.winner

@@ -52,7 +52,13 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core import baselines, defrag as defrag_mod, search, telemetry
+from repro.core import (
+    baselines,
+    defrag as defrag_mod,
+    forensics,
+    search,
+    telemetry,
+)
 from repro.core.bandwidth_sim import BandwidthSimulator
 from repro.core.cluster import Cluster
 from repro.core.controlplane import TenantPolicy  # per-tenant QoS rows
@@ -533,7 +539,9 @@ class AdmissionScheduler:
             with telemetry.span(
                 "sched.admit", job_id=job.job_id, k=job.k,
                 policy=self.config.policy, path="concurrent",
-            ):
+            ) as sp:
+                if sp:  # the worker's cplane.commit span carries it too
+                    sp["journal_seq"] = out.journal_seq
                 if self.grade:
                     with telemetry.span("sched.oracle", k=job.k):
                         _, opt_bw = baselines.oracle_dispatch(
@@ -739,7 +747,10 @@ class AdmissionScheduler:
         with telemetry.span(
             "sched.admit", job_id=job.job_id, k=job.k,
             policy=self.config.policy, path="serial",
-        ):
+        ) as sp, forensics.decision(
+            job.job_id, tenant=job.tenant, k=job.k,
+            policy=self.config.policy, path="serial",
+        ) as df:
             if self.config.defrag:
                 self._maybe_make_room(job.k, t)
             ledger = self.dispatcher.ledger
@@ -752,9 +763,20 @@ class AdmissionScheduler:
             else:
                 opt_bw = float("nan")
             n_live = len(ledger)
-            alloc = self.dispatcher.admit(job.job_id, job.k, rng=self.rng)
+            alloc = self.dispatcher.admit(
+                job.job_id, job.k, rng=self.rng, tenant=job.tenant
+            )
+            # serial path: the admit above was the last journal write
+            seq = (
+                ledger.last_journal_seq if ledger.journal is not None else -1
+            )
+            if sp:
+                sp["journal_seq"] = seq
             last = getattr(self.dispatcher, "last_result", None)
             predicted = last.predicted_bw if last is not None else float("nan")
+            if df is not None:
+                df.commit(alloc.gpus, predicted, journal_seq=seq,
+                          committed_version=ledger.version)
             self._grade(
                 job, t, alloc, opt_bw, n_live, overtakes, batch_size,
                 predicted=predicted,
@@ -769,7 +791,10 @@ class AdmissionScheduler:
         with telemetry.span(
             "sched.admit", job_id=job.job_id, k=job.k,
             policy=self.config.policy, path="planned",
-        ):
+        ) as sp, forensics.decision(
+            job.job_id, tenant=job.tenant, k=job.k,
+            policy=self.config.policy, path="planned",
+        ) as df:
             ledger = self.dispatcher.ledger
             avail = ledger.available()
             if len(subset) != job.k or not set(subset) <= set(avail):
@@ -786,7 +811,15 @@ class AdmissionScheduler:
             else:
                 opt_bw = float("nan")
             n_live = len(ledger)
-            alloc = ledger.admit(job.job_id, subset)
+            alloc = ledger.admit(job.job_id, subset, tenant=job.tenant)
+            seq = (
+                ledger.last_journal_seq if ledger.journal is not None else -1
+            )
+            if sp:
+                sp["journal_seq"] = seq
+            if df is not None:
+                df.commit(alloc.gpus, predicted, journal_seq=seq,
+                          committed_version=ledger.version)
             self._grade(
                 job, t, alloc, opt_bw, n_live, overtakes, batch_size,
                 predicted=predicted,
@@ -806,6 +839,10 @@ class AdmissionScheduler:
         # self-excludes the job's own (GPU-overlapping) ledger entry
         bw = self.grading_cache.true_bandwidth(alloc.gpus, ledger=ledger)
         iso = self.grading_cache.true_bandwidth(alloc.gpus)
+        # back-fill realized/oracle bandwidth into the admission's dossier
+        # and the per-tenant regret ledger (no-op when capture is off)
+        forensics.note_grade(job.job_id, bw, oracle_bw=opt_bw,
+                             tenant=job.tenant)
         if self.harvester is not None:
             drift = getattr(self.harvester, "drift", None)
             if drift is not None and not math.isnan(predicted):

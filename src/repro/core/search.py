@@ -26,7 +26,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core import telemetry
+from repro.core import forensics, telemetry
 from repro.core.cluster import Cluster
 from repro.core.intra_host import IntraHostTables
 from repro.core.tenancy import JobLedger
@@ -293,6 +293,7 @@ def _pts_search(
     by_host = _available_by_host(cluster, avail)
     s_curr: Subset = sorted(avail)
     n_cands = 0
+    df = forensics.draft()  # one global read when capture is off
 
     # Search pruning: node-insertion heuristic for small requests.  With a
     # frag_penalty the *host choice* is penalty-aware, but the prune itself
@@ -303,7 +304,10 @@ def _pts_search(
         single = best_single_host(cluster, tables, by_host, k, frag_penalty)
         if single is not None:
             _, hid, _ = single
+            pruned = len(s_curr)
             s_curr = sorted(by_host[hid])
+            if df is not None:
+                df.note_pts_prune(hid, pruned - len(s_curr))
 
     # Fused on-device descent: the whole elimination |S| -> k as ONE device
     # call (``SurrogatePredictor.eliminate_to``; the contention wrapper
@@ -324,6 +328,8 @@ def _pts_search(
             # the descent scored every remove-one child of every round
             n_cands += (n0 * (n0 + 1) - k * (k + 1)) // 2
             telemetry.event("search.pts.fused_scan", steps=n0 - len(s_curr))
+            if df is not None:
+                df.note_pts_fused(n0 - len(s_curr))
 
     # Iterative elimination |S| -> k, one GPU at a time.  Each round is ONE
     # fused featurize+predict call when the predictor has an incremental
@@ -340,7 +346,12 @@ def _pts_search(
             preds = predictor.predict(children)
         n_cands += len(children)
         rounds += 1
-        s_curr = children[int(np.argmax(_penalized(preds, children, frag_penalty)))]
+        best_i = int(np.argmax(_penalized(preds, children, frag_penalty)))
+        if df is not None:  # child i omits s_curr[i]: that GPU bottlenecked
+            df.note_pts_round(
+                s_curr[best_i], float(preds[best_i]), len(children)
+            )
+        s_curr = children[best_i]
     if rounds:
         telemetry.event(
             "search.pts.host_rounds", rounds=rounds, fused_children=fused
@@ -375,6 +386,13 @@ def hybrid_search(
     k: int,
     frag_penalty: FragPenalty = None,
 ) -> HybridResult:
+    df = forensics.draft()
+    if df is not None:
+        # resets per-search provenance: a make-room defrag pass (or a
+        # control-plane conflict re-search) runs extra hybrid searches
+        # inside one admission, and the committed subset comes from the
+        # LAST one — which is the provenance the dossier should describe.
+        df.note_search_begin(k, len(avail), frag_penalty is not None)
     eha = eha_search(cluster, tables, predictor, avail, k,
                      frag_penalty=frag_penalty)
     pts = pts_search(cluster, tables, predictor, avail, k,
@@ -383,7 +401,10 @@ def hybrid_search(
     if frag_penalty is not None:
         eha_score *= 1.0 - frag_penalty(eha.subset)
         pts_score *= 1.0 - frag_penalty(pts.subset)
-    if eha_score >= pts_score:
+    winner = "EHA" if eha_score >= pts_score else "PTS"
+    if df is not None:
+        df.note_hybrid(eha, pts, eha_score, pts_score, winner)
+    if winner == "EHA":
         return HybridResult(eha.subset, eha.predicted_bw, eha, pts, "EHA")
     return HybridResult(pts.subset, pts.predicted_bw, eha, pts, "PTS")
 

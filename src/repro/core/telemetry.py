@@ -83,6 +83,7 @@ __all__ = [
     "active_tracer",
     "span",
     "event",
+    "current_trace_id",
     "MetricsRegistry",
     "read_metrics_jsonl",
     "absorb_predictor_stats",
@@ -376,6 +377,18 @@ def event(name: str, **attrs) -> None:
         tr.event(name, **attrs)
 
 
+def current_trace_id() -> int:
+    """Trace id of the innermost open span on the calling thread, or -1
+    when no span is open (or no tracer installed).  The trace <-> journal
+    linkage primitive: forensics dossiers stamp it next to the commit's
+    ``journal_seq`` so one admission can be followed across the span ring,
+    the journal, and the dossier store."""
+    if _ACTIVE is None:
+        return -1
+    st = getattr(_TLS, "stack", None)
+    return st[-1].trace_id if st else -1
+
+
 # ---------------------------------------------------------------------------
 # Unified metrics registry
 # ---------------------------------------------------------------------------
@@ -623,6 +636,16 @@ class MetricsRegistry:
                 f"metric {full!r} already registered as {m.kind} with "
                 f"labels {m.label_names}"
             )
+        want = kw.get("buckets")
+        if want is not None and isinstance(m, Histogram):
+            norm = tuple(sorted(float(b) for b in want))
+            if norm != m.buckets:
+                # one name, one schema: silently keeping the first buckets
+                # would make the second caller's distribution unreadable
+                raise ValueError(
+                    f"metric {full!r} already registered with buckets "
+                    f"{m.buckets}; re-registration asked for {norm}"
+                )
         return m
 
     def counter(self, name, help="", labels=()) -> Counter:

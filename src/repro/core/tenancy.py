@@ -59,11 +59,19 @@ class VersionConflict(RuntimeError):
 
 @dataclasses.dataclass(frozen=True)
 class Allocation:
-    """One live job's placement: the unit the ledger admits and releases."""
+    """One live job's placement: the unit the ledger admits and releases.
+
+    ``tenant`` is carried through the ledger (and the journal, when one is
+    attached) so journal-reconstructed views can answer tenant-scoped
+    questions — the forensics ``whatif(drop_tenant=...)`` counterfactual
+    in particular.  Empty string means "no tenant" and is omitted from the
+    journal encoding, keeping tenant-less streams byte-identical to PR 7.
+    """
 
     job_id: str
     gpus: Tuple[int, ...]
     host_ids: Tuple[int, ...]
+    tenant: str = ""
 
     @property
     def k(self) -> int:
@@ -148,6 +156,10 @@ class JobLedger:
         # and compound read-harvest sequences (report_bandwidth) nest too.
         self.lock = threading.RLock()
         self.journal = None  # controlplane.LedgerJournal (write-ahead sink)
+        # seq of the last journal event this ledger wrote (-1 = none yet).
+        # Read under ``lock`` right after a mutation to correlate the commit
+        # with its journal line (admission spans / forensics dossiers).
+        self.last_journal_seq = -1
         with _UID_LOCK:
             self.uid = JobLedger._next_uid
             JobLedger._next_uid += 1
@@ -172,7 +184,9 @@ class JobLedger:
             )
         self.journal = journal
 
-    def admit(self, job_id: str, gpus: Sequence[int]) -> Allocation:
+    def admit(
+        self, job_id: str, gpus: Sequence[int], tenant: str = ""
+    ) -> Allocation:
         """Record ``job_id`` as live on ``gpus``.  Returns the allocation."""
         with self.lock:
             if job_id in self._jobs:
@@ -192,9 +206,11 @@ class JobLedger:
                         f"GPU {g} is busy (held by job {self._owner[g]!r})"
                     )
             if self.journal is not None:  # write-ahead: validated, not applied
-                self.journal.record("admit", job_id=job_id, gpus=list(subset))
+                self.last_journal_seq = self.journal.record(
+                    "admit", job_id=job_id, gpus=list(subset), tenant=tenant
+                )
             host_ids = tuple(sorted(self.cluster.partition_by_host(subset)))
-            alloc = Allocation(job_id, subset, host_ids)
+            alloc = Allocation(job_id, subset, host_ids, tenant=tenant)
             self._jobs[job_id] = alloc
             for g in subset:
                 self._owner[g] = job_id
@@ -204,7 +220,7 @@ class JobLedger:
             return alloc
 
     def admit_if(
-        self, job_id: str, gpus: Sequence[int], version: int
+        self, job_id: str, gpus: Sequence[int], version: int, tenant: str = ""
     ) -> Allocation:
         """Compare-and-swap admission: admit ``job_id`` on ``gpus`` only if
         the ledger version still equals ``version`` (the version the
@@ -215,7 +231,7 @@ class JobLedger:
         with self.lock:
             if self._version != version:
                 raise VersionConflict(version, self._version)
-            return self.admit(job_id, gpus)
+            return self.admit(job_id, gpus, tenant=tenant)
 
     def release(self, job_id: str) -> Allocation:
         """Remove a live job, returning its (now freed) allocation."""
@@ -224,7 +240,9 @@ class JobLedger:
             if alloc is None:
                 raise KeyError(f"job {job_id!r} is not live")
             if self.journal is not None:
-                self.journal.record("release", job_id=job_id)
+                self.last_journal_seq = self.journal.record(
+                    "release", job_id=job_id
+                )
             del self._jobs[job_id]
             for g in alloc.gpus:
                 del self._owner[g]
@@ -259,13 +277,14 @@ class JobLedger:
                         f"GPU {g} is busy (held by job {owner!r})"
                     )
             if self.journal is not None:
-                self.journal.record(
-                    "migrate", job_id=job_id, gpus=list(subset)
+                self.last_journal_seq = self.journal.record(
+                    "migrate", job_id=job_id, gpus=list(subset),
+                    tenant=old.tenant,
                 )
             journal, self.journal = self.journal, None
             try:  # inner ops validated above: cannot fail, never journaled
                 self.release(job_id)
-                return self.admit(job_id, subset)
+                return self.admit(job_id, subset, tenant=old.tenant)
             finally:
                 self.journal = journal
 

@@ -255,6 +255,33 @@ def test_metrics_jsonl_roundtrip(tmp_path):
     assert telemetry.read_metrics_jsonl(path) == reg.snapshot()
 
 
+def test_histogram_custom_buckets_roundtrip(tmp_path):
+    """ISSUE 9 satellite: per-metric bucket boundaries (regret and
+    whatif-delta distributions span negative GB/s where the default
+    latency buckets are useless) survive the JSONL round-trip, and the
+    boundaries are part of the metric's registered schema."""
+    reg = MetricsRegistry()
+    h = reg.histogram("regret_gbs", "regret", labels=("tenant",),
+                      buckets=(-10.0, 0.0, 10.0, 50.0))
+    h.observe(-5.0, tenant="a")
+    h.observe(25.0, tenant="a")
+    # re-registration with the SAME boundaries (any order) is get-or-create
+    assert reg.histogram("regret_gbs", "regret", labels=("tenant",),
+                         buckets=(50.0, 10.0, 0.0, -10.0)) is h
+    # ... but different boundaries under one name are a schema conflict
+    with pytest.raises(ValueError, match="buckets"):
+        reg.histogram("regret_gbs", "regret", labels=("tenant",),
+                      buckets=(0.0, 1.0))
+    path = tmp_path / "metrics.jsonl"
+    reg.write_jsonl(path)
+    back = telemetry.read_metrics_jsonl(path)
+    assert back == reg.snapshot()
+    (snap,) = back.values()
+    assert snap["buckets"] == [-10.0, 0.0, 10.0, 50.0]
+    text = reg.to_prometheus()
+    assert 'le="-10.0"' in text and 'le="+Inf"' in text
+
+
 def test_absorb_is_idempotent_set_semantics():
     reg = MetricsRegistry()
     st = core.PredictorStats(n_model_calls=5, cache_hits=3, cache_misses=1)
