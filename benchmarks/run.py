@@ -37,6 +37,7 @@ from benchmarks import (
     bench_defrag,
     bench_dispatch_throughput,
     bench_controlplane,
+    bench_failure_recovery,
 )
 
 BENCHES = [
@@ -54,6 +55,7 @@ BENCHES = [
     ("issue4_defrag", bench_defrag.run),
     ("issue6_dispatch_throughput", bench_dispatch_throughput.run),
     ("issue7_controlplane", bench_controlplane.run),
+    ("issue10_failure_recovery", bench_failure_recovery.run),
 ]
 
 RESULTS_SCHEMA = 1

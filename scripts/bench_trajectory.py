@@ -26,6 +26,12 @@ recent history entry:
 The threshold defaults to ``BENCH_REGRESSION_PCT`` (else 50 — CI runners
 are noisy; tighten locally).  With no history yet, ``compare`` reports a
 baseline-free pass so the first CI run after this lands cleanly.
+
+Failure-recovery retention (``recovery_storm_*`` rows, higher is better)
+is tracked relatively like GBE *and* guarded by an absolute floor:
+``BENCH_RECOVERY_RETENTION_PCT`` (default 75, 0 disables) fails the run
+whenever the H100 storm's post-recovery retention drops below it — even
+on the first, history-free run.
 """
 
 from __future__ import annotations
@@ -51,6 +57,14 @@ KEY_ROWS = (
     ("dispatch_forensics_overhead", "overhead_pct"),
     ("gbe", "gbe"),
     ("contention_gbe", "gbe"),
+    ("recovery_storm_", "retention"),
+)
+
+# absolute floor on post-storm bandwidth retention (recovery_storm_H100's
+# ``retention`` field, percent): independent of history, so a regression
+# cannot ratchet the baseline down run over run.  0 disables the guard.
+RECOVERY_RETENTION_FLOOR = float(
+    os.environ.get("BENCH_RECOVERY_RETENTION_PCT", "75")
 )
 
 
@@ -113,6 +127,10 @@ def key_metrics(doc: dict) -> dict:
                     v = _numeric(raw)
                     if v is not None:
                         out[(row, k)] = v
+            elif kind == "retention":
+                v = _numeric(fields.get("retention"))
+                if v is not None:
+                    out[(row, "retention")] = v
     return out
 
 
@@ -132,7 +150,7 @@ def compare(prev: dict, cur: dict, threshold_pct: float):
         if field == "overhead_pct":
             bad = new > old + threshold_pct
             delta = f"{new - old:+.2f}pts"
-        elif "gbe" in field:
+        elif field == "retention" or "gbe" in field:
             bad = old > 0 and new < old * (1 - threshold_pct / 100.0)
             delta = f"{100.0 * (new - old) / old:+.1f}%" if old else "n/a"
         else:  # us_per_call: lower is better
@@ -158,10 +176,32 @@ def cmd_append(args) -> int:
     return 0
 
 
+def retention_floor_violations(doc: dict):
+    """Absolute guard: the H100 storm's recovery retention must stay at or
+    above ``RECOVERY_RETENTION_FLOOR`` percent whenever the row is present
+    (history-independent, so it also binds on the first run)."""
+    if RECOVERY_RETENTION_FLOOR <= 0:
+        return []
+    return [
+        (row, v) for (row, field), v in key_metrics(doc).items()
+        if field == "retention" and "recovery_storm_H100" in row
+        and v < RECOVERY_RETENTION_FLOOR
+    ]
+
+
 def cmd_compare(args) -> int:
     cur = load_results(args.results)
+    floor_fails = retention_floor_violations(cur)
+    for row, v in floor_fails:
+        print(
+            f"  FLOOR    {row}.retention = {v:.1f}% "
+            f"(< {RECOVERY_RETENTION_FLOOR:.0f}% floor)"
+        )
     runs = load_history(args.history)
     if not runs:
+        if floor_fails:
+            print(f"FAIL: {len(floor_fails)} retention floor violation(s)")
+            return 1
         print(
             f"no history at {args.history}: baseline-free pass "
             f"({len(key_metrics(cur))} key metrics in current run)"
@@ -176,8 +216,11 @@ def cmd_compare(args) -> int:
     regressions, lines = compare(prev, cur, args.threshold_pct)
     for line in lines:
         print(line)
-    if regressions:
-        print(f"FAIL: {len(regressions)} key row(s) regressed")
+    if regressions or floor_fails:
+        print(
+            f"FAIL: {len(regressions)} key row(s) regressed, "
+            f"{len(floor_fails)} retention floor violation(s)"
+        )
         return 1
     print("ok: no key-row regressions")
     return 0

@@ -177,7 +177,7 @@ def saturating_rail_share(
 
 def contended_inter_term(
     cluster, by_host: Dict[int, List[int]], rail_contenders,
-    eta: float = INTER_EFF, rail_share=None,
+    eta: float = INTER_EFF, rail_share=None, rail_factor=None,
 ) -> float:
     """THE jittered, fair-shared inter-host term — the single definition the
     contended ground truth and the virtual-merge estimator both evaluate, so
@@ -187,17 +187,24 @@ def contended_inter_term(
     (candidate included) competing for that host's NIC rails.  When
     ``rail_share(host_id) -> fraction`` is given (the saturating model) it
     replaces the even ``1 / c_h`` split; the default path is bit-identical
-    to the historical fair split.
+    to the historical fair split.  ``rail_factor(host_id) -> f`` is the
+    health-degrade multiplier on the host's NIC rail (nic_flap /
+    link_degrade faults, see :mod:`repro.core.faults`); applied to the
+    rail capacity *before* contention sharing, and absent (None) on
+    healthy fabric so the no-fault path is byte-identical.
     """
     counts: List[int] = []
     rail = float("inf")
     for hid, gpus in by_host.items():
         counts.append(len(gpus))
         host = cluster.hosts[hid]
+        nic = host.host_type.nic_rail_bw
+        if rail_factor is not None:
+            nic = nic * rail_factor(hid)
         if rail_share is None:
-            rail = min(rail, host.host_type.nic_rail_bw / rail_contenders(hid))
+            rail = min(rail, nic / rail_contenders(hid))
         else:
-            rail = min(rail, host.host_type.nic_rail_bw * rail_share(hid))
+            rail = min(rail, nic * rail_share(hid))
     k = sum(counts)
     inter = inter_constraint_bw(counts, rail, k, eta=eta)
     return inter * _jitter(
@@ -231,8 +238,14 @@ class BandwidthSimulator:
 
     # -- intra-host ---------------------------------------------------------
 
-    def intra_bandwidth(self, host_id: int, local_subset: Sequence[int]) -> float:
-        """Jittered intra-host aggregate bandwidth (per host *instance*)."""
+    def intra_bandwidth(
+        self, host_id: int, local_subset: Sequence[int], ledger=None
+    ) -> float:
+        """Jittered intra-host aggregate bandwidth (per host *instance*).
+
+        With a health-carrying ``ledger``, a degraded host scales its intra
+        term by the degrade factor — applied *outside* the cache, which
+        stores only the permanent (host, subset) jittered base."""
         key = (host_id, tuple(sorted(local_subset)))
         if key not in self._intra_cache:
             host = self.cluster.hosts[host_id]
@@ -240,7 +253,12 @@ class BandwidthSimulator:
             self._intra_cache[key] = base * _jitter(
                 self.cluster.name, host_id, key[1]
             )
-        return self._intra_cache[key]
+        bw = self._intra_cache[key]
+        if ledger is not None and getattr(ledger, "health_active", False):
+            f = ledger.host_degrade(host_id)
+            if f != 1.0:
+                bw = bw * f
+        return bw
 
     # -- end-to-end ---------------------------------------------------------
 
@@ -257,15 +275,31 @@ class BandwidthSimulator:
             raise ValueError("empty allocation")
         if len(set(subset)) != len(subset):
             raise ValueError(f"duplicate GPU ids in allocation: {subset}")
+        # Health view (see repro.core.faults): dead GPUs produce no
+        # bandwidth, degraded hosts scale both their intra term and their
+        # NIC rail.  Gated on health_active so a never-faulted ledger takes
+        # the exact historical float program.
+        health = ledger is not None and getattr(ledger, "health_active", False)
+        if health:
+            gpu_health = getattr(ledger, "gpu_health", None)
+            if gpu_health is not None and any(
+                gpu_health(g) == "dead" for g in subset
+            ):
+                return 0.0
+        hl = ledger if health else None
         by_host = self.cluster.partition_by_host(subset)
         k = len(subset)
         if len(by_host) == 1:
             (hid, gpus), = by_host.items()
-            return self.intra_bandwidth(hid, self.cluster.local_tuple(hid, gpus))
+            return self.intra_bandwidth(
+                hid, self.cluster.local_tuple(hid, gpus), ledger=hl
+            )
         constraints: List[float] = []
         for hid, gpus in by_host.items():
             n_h = len(gpus)
-            intra = self.intra_bandwidth(hid, self.cluster.local_tuple(hid, gpus))
+            intra = self.intra_bandwidth(
+                hid, self.cluster.local_tuple(hid, gpus), ledger=hl
+            )
             constraints.append(k * intra / n_h)
 
         def contenders(hid: int) -> int:
@@ -282,8 +316,10 @@ class BandwidthSimulator:
                     saturation_alpha(self.cluster.hosts[hid].host_type),
                 )
 
+        rail_factor = ledger.host_degrade if health else None
         inter = contended_inter_term(
-            self.cluster, by_host, contenders, rail_share=rail_share
+            self.cluster, by_host, contenders, rail_share=rail_share,
+            rail_factor=rail_factor,
         )
         return min(min(constraints), inter)
 

@@ -87,7 +87,7 @@ CrossJobsByHost = Dict[int, List[Allocation]]
 
 def _cap_from_snapshot(
     cluster: Cluster, cross_by_host: CrossJobsByHost, subset: Subset,
-    eta: float = INTER_EFF,
+    eta: float = INTER_EFF, degrade=None,
 ) -> float:
     by_host = cluster.partition_by_host(subset)
     if len(by_host) <= 1:
@@ -100,14 +100,21 @@ def _cap_from_snapshot(
         )
         for hid in by_host
     }
-    if all(c == 1 for c in shares.values()):
+    # A degraded rail caps the inter term even with zero contenders — the
+    # analytic branch's view of nic_flap / link_degrade faults (see
+    # repro.core.faults); ``degrade=None`` is the healthy fast path.
+    degraded = degrade is not None and any(
+        degrade(hid) != 1.0 for hid in by_host
+    )
+    if all(c == 1 for c in shares.values()) and not degraded:
         return float("inf")
     # Same shared term (and deterministic fabric jitter) the contended
     # ground truth evaluates: the fabric's per-(hosts,counts) variation is
     # measurable offline and independent of tenancy, so folding it in keeps
     # near-symmetric candidates ranked consistently with the truth.
     return contended_inter_term(
-        cluster, by_host, lambda hid: shares[hid], eta=eta
+        cluster, by_host, lambda hid: shares[hid], eta=eta,
+        rail_factor=degrade if degraded else None,
     )
 
 
@@ -119,7 +126,13 @@ def contended_inter_cap(
     ``inf`` when no NIC is involved (single-host) or nothing contends — the
     wrapped predictor is then left untouched.
     """
-    return _cap_from_snapshot(cluster, ledger.cross_jobs_by_host(), subset, eta)
+    degrade = (
+        ledger.host_degrade
+        if getattr(ledger, "health_active", False) else None
+    )
+    return _cap_from_snapshot(
+        cluster, ledger.cross_jobs_by_host(), subset, eta, degrade=degrade
+    )
 
 
 class _SnapshotArrays:
@@ -129,11 +142,24 @@ class _SnapshotArrays:
     an admission — the hybrid search degrades ~20 candidate batches against
     one unchanged ledger state."""
 
-    def __init__(self, cluster: Cluster, cross_by_host: CrossJobsByHost):
+    def __init__(
+        self, cluster: Cluster, cross_by_host: CrossJobsByHost, degrade=None
+    ):
         self.gpu_host = np.asarray(cluster.gpu_host, np.int64)
         self.rail_bw = np.asarray(
             [h.host_type.nic_rail_bw for h in cluster.hosts], np.float64
         )
+        # Health degrade folded into the rail vector (nic * f, the same
+        # float order as the scalar path) + the activation mask that makes
+        # a degraded-but-uncontended host still cap the inter term.
+        if degrade is None:
+            self.degraded = np.zeros(cluster.n_hosts, bool)
+        else:
+            f = np.asarray(
+                [degrade(h.host_id) for h in cluster.hosts], np.float64
+            )
+            self.degraded = f != 1.0
+            self.rail_bw = self.rail_bw * f
         allocs = sorted(
             {a.job_id: a
              for jobs in cross_by_host.values() for a in jobs}.values(),
@@ -201,7 +227,9 @@ def _caps_from_snapshot_batched(
     per_host = np.where(part, snap.rail_bw[None, :] / c, np.inf)
     rail = per_host.min(axis=1)
     min_counts = np.where(part, counts, np.iinfo(np.int64).max).min(axis=1)
-    active = (n_part > 1) & ((c > 1) & part).any(axis=1)
+    active = (n_part > 1) & (((c > 1) | snap.degraded[None, :]) & part).any(
+        axis=1
+    )
     idx = np.nonzero(active)[0]
     if not len(idx):
         return caps
@@ -272,6 +300,12 @@ class ContentionAwarePredictor:
         self.mode = mode
         self.contended = contended
         self.vectorized = vectorized
+        # Degraded-mode fallback switch: when True (set by faults.
+        # install_degraded_fallback on a DriftMonitor alert), the learned
+        # branch is bypassed and every candidate is scored by the analytic
+        # cap — the surrogate never trained on degraded fabric, so its
+        # errors there are structural.
+        self.force_analytic = False
         self.stats = PredictorStats()
         self._jitter_cache: Dict = {}
         self._snap_version: Optional[int] = None
@@ -324,8 +358,13 @@ class ContentionAwarePredictor:
         membership arrays once per version, not once per batch."""
         v = (self.ledger.uid, self.ledger.version)
         if self._snap_version != v:
+            degrade = (
+                self.ledger.host_degrade
+                if getattr(self.ledger, "health_active", False) else None
+            )
             self._snap = _SnapshotArrays(
-                self.cluster, self.ledger.cross_jobs_by_host()
+                self.cluster, self.ledger.cross_jobs_by_host(),
+                degrade=degrade,
             )
             self._snap_version = v
         return self._snap
@@ -347,15 +386,17 @@ class ContentionAwarePredictor:
         base_elim = getattr(self.base, "eliminate_to", None)
         if base_elim is None:
             return None
-        if len(self.ledger) == 0:
+        health = getattr(self.ledger, "health_active", False)
+        if len(self.ledger) == 0 and not health:
             return base_elim(parent, k)  # exact pass-through, like _degrade
         if not self.ledger.busy().isdisjoint(parent):
             return None  # cap depends on disjointness: not table-gatherable
         snap = self._snapshot()
-        if snap.touch.shape[0] == 0:
+        if snap.touch.shape[0] == 0 and not health:
             # no cross-host tenants: both modes leave candidates untouched
             return base_elim(parent, k)
-        if self.mode != "analytic" or not self.vectorized:
+        mode = "analytic" if self.force_analytic else self.mode
+        if mode != "analytic" or not self.vectorized:
             return None
         tables = getattr(self.base, "tables", None)
         if tables is None:
@@ -386,9 +427,9 @@ class ContentionAwarePredictor:
             min_counts = np.where(
                 lat.part, lat.counts, np.iinfo(np.int64).max
             ).min(axis=1)
-            active = (lat.n_part > 1) & ((c[None, :] > 1) & lat.part).any(
-                axis=1
-            )
+            active = (lat.n_part > 1) & (
+                ((c[None, :] > 1) | snap.degraded[None, :]) & lat.part
+            ).any(axis=1)
             caps = np.full((lat.counts.shape[0],), np.inf, np.float64)
             idx = np.nonzero(active)[0]
             if len(idx):
@@ -405,12 +446,14 @@ class ContentionAwarePredictor:
     def _degrade(
         self, subsets: Sequence[Subset], iso: np.ndarray
     ) -> np.ndarray:
-        if len(self.ledger) == 0:
+        health = getattr(self.ledger, "health_active", False)
+        if len(self.ledger) == 0 and not health:
             return iso
         t0 = time.time()
         out = iso.copy()
         inner = 0.0  # time spent inside the contended model, not the wrapper
-        if self.mode == "learned" and self.vectorized:
+        mode = "analytic" if self.force_analytic else self.mode
+        if mode == "learned" and self.vectorized:
             snap = self._snapshot()
             _, counts, disjoint = _subset_grid(
                 snap, subsets, self.cluster.n_hosts, self.cluster.n_gpus
@@ -419,7 +462,24 @@ class ContentionAwarePredictor:
             contended = (part.sum(axis=1) > 1) & (
                 ((disjoint @ snap.touch) * part) > 0
             ).any(axis=1)
-            idx = np.nonzero(contended)[0].tolist()
+            learned_mask = contended
+            if health:
+                # Degraded fabric: every candidate takes the analytic cap
+                # (the snapshot's rail vector carries the degrade factors),
+                # and the learned head is consulted only for contended
+                # candidates that touch no health-perturbed host — the
+                # surrogate never saw degraded rails in training.
+                caps = _caps_from_snapshot_batched(
+                    self.cluster, {}, subsets,
+                    jitter_cache=self._jitter_cache, snap=snap,
+                )
+                capped = caps < out
+                out[capped] = caps[capped]
+                self.stats.n_capped += int(capped.sum())
+                learned_mask = contended & ~(
+                    part & snap.degraded[None, :]
+                ).any(axis=1)
+            idx = np.nonzero(learned_mask)[0].tolist()
             if idx:
                 before = self.contended.predict_seconds
                 learned = self.contended.predict(
@@ -445,7 +505,10 @@ class ContentionAwarePredictor:
         # Legacy scalar paths (the throughput bench's before-side): snapshot
         # the cross-host jobs per host once per call, not per candidate.
         cross_by_host = self.ledger.cross_jobs_by_host()
-        if self.mode == "learned":
+        degrade = self.ledger.host_degrade if health else None
+        if mode == "learned" and health:
+            mode = "analytic"  # scalar learned path has no degraded view
+        if mode == "learned":
             idx = [
                 i for i, s in enumerate(subsets)
                 if self._contended_by(cross_by_host, s)
@@ -464,7 +527,9 @@ class ContentionAwarePredictor:
                         self.stats.n_capped += 1
         else:
             for i, s in enumerate(subsets):
-                cap = _cap_from_snapshot(self.cluster, cross_by_host, s)
+                cap = _cap_from_snapshot(
+                    self.cluster, cross_by_host, s, degrade=degrade
+                )
                 if cap < out[i]:
                     out[i] = cap
                     self.stats.n_capped += 1

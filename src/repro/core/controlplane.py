@@ -97,7 +97,7 @@ __all__ = [
 # Crash-safe append-only journal
 # ---------------------------------------------------------------------------
 
-JOURNAL_OPS = ("admit", "release", "migrate")
+JOURNAL_OPS = ("admit", "release", "migrate", "fault", "recover")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -105,23 +105,34 @@ class JournalEvent:
     """One durable ledger mutation, in commit order."""
 
     seq: int
-    op: str                                 # "admit" | "release" | "migrate"
+    op: str        # "admit" | "release" | "migrate" | "fault" | "recover"
     job_id: str
-    gpus: Optional[Tuple[int, ...]] = None  # admit/migrate targets
+    gpus: Optional[Tuple[int, ...]] = None  # admit/migrate/fault targets
     tenant: str = ""                        # "" = no tenant (key omitted)
+    kind: Optional[str] = None              # fault/recover: fault kind
+    host: Optional[int] = None              # fault/recover: host id
+    factor: Optional[float] = None          # fault: rail degrade factor
 
 
 def _encode_event(seq: int, op: str, job_id: str, gpus=None,
-                  tenant: str = "") -> bytes:
+                  tenant: str = "", kind=None, host=None,
+                  factor=None) -> bytes:
     """``<canonical json>#<crc32 hex>\\n`` — compact, key-sorted json so a
     record's bytes are a pure function of the event.  The ``tenant`` key
-    is emitted only when non-empty, so tenant-less streams are
+    is emitted only when non-empty, and the fault keys (``kind``/``host``/
+    ``factor``) only when set, so admit/release/migrate streams are
     byte-identical to the PR 7 grammar."""
     payload: Dict = {"seq": seq, "op": op, "job": job_id}
     if gpus is not None:
         payload["gpus"] = [int(g) for g in gpus]
     if tenant:
         payload["tenant"] = tenant
+    if kind is not None:
+        payload["kind"] = kind
+    if host is not None:
+        payload["host"] = int(host)
+    if factor is not None:
+        payload["factor"] = float(factor)
     line = json.dumps(payload, separators=(",", ":"), sort_keys=True)
     crc = zlib.crc32(line.encode("utf-8")) & 0xFFFFFFFF
     return f"{line}#{crc:08x}\n".encode("utf-8")
@@ -158,10 +169,14 @@ def _scan(raw: bytes) -> Tuple[List[JournalEvent], int]:
             if ev.get("op") not in JOURNAL_OPS or ev.get("seq") != expected:
                 break
             gpus = ev.get("gpus")
+            factor = ev.get("factor")
             events.append(JournalEvent(
                 ev["seq"], ev["op"], ev["job"],
                 tuple(int(g) for g in gpus) if gpus is not None else None,
                 str(ev.get("tenant", "")),
+                kind=ev.get("kind"),
+                host=ev.get("host"),
+                factor=float(factor) if factor is not None else None,
             ))
         except (ValueError, KeyError, TypeError, UnicodeDecodeError):
             break
@@ -210,7 +225,8 @@ class LedgerJournal:
         self._fh = open(self.path, "ab")
 
     def record(self, op: str, job_id: str, gpus=None,
-               tenant: str = "") -> int:
+               tenant: str = "", kind=None, host=None,
+               factor=None) -> int:
         """Append one event durably (called by the ledger, write-ahead).
         Returns the event's sequence number, so the caller can correlate
         the in-memory commit with its journal line (admission spans and
@@ -219,7 +235,8 @@ class LedgerJournal:
             raise ValueError(f"unknown journal op {op!r}")
         with self._lock:
             seq = self._seq
-            data = _encode_event(seq, op, job_id, gpus, tenant=tenant)
+            data = _encode_event(seq, op, job_id, gpus, tenant=tenant,
+                                 kind=kind, host=host, factor=factor)
             self._fh.write(data)
             self._fh.flush()
             if self.sync:
@@ -259,6 +276,15 @@ def replay_journal(path, cluster, upto_seq: Optional[int] = None) -> JobLedger:
             ledger.admit(ev.job_id, ev.gpus, tenant=ev.tenant)
         elif ev.op == "release":
             ledger.release(ev.job_id)
+        elif ev.op == "fault":
+            ledger.apply_fault(
+                ev.kind, gpus=ev.gpus or (), host_id=ev.host,
+                factor=ev.factor if ev.factor is not None else 1.0,
+            )
+        elif ev.op == "recover":
+            ledger.apply_recover(
+                ev.kind, gpus=ev.gpus or (), host_id=ev.host
+            )
         else:  # migrate
             ledger.migrate(ev.job_id, ev.gpus)
     return ledger
@@ -806,6 +832,13 @@ class AdmissionControlPlane:
         invalidates it outright."""
         ledger = self.ledger
         if not set(subset).isdisjoint(ledger.busy()):
+            return False
+        # Any active health perturbation invalidates the staged score
+        # outright: the fault that bumped the version may have killed one
+        # of these GPUs (free != placeable) or degraded a rail the score
+        # depends on.  Faults are rare; re-searching is the cheap safe
+        # answer, and admit() refuses unplaceable GPUs regardless.
+        if ledger.health_active:
             return False
         if getattr(self.dispatcher, "frag_weight", 0.0) > 0:
             return False

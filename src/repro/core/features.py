@@ -69,8 +69,12 @@ N_FEATURES = 5
 _LOG_SCALE = 5.0  # keep in sync with surrogate.LOG_SCALE
 
 # Ledger-context channels appended by the contended featurizer:
-#   [segment flag, c_h / C_NORM, contender demand / 8, disjoint occupancy]
-N_LEDGER_FEATURES = 4
+#   [segment flag, c_h / C_NORM, contender demand / 8, disjoint occupancy,
+#    health degradation (1 - rail degrade factor; 0.0 on healthy fabric)]
+# The health channel (ISSUE 10) is exactly 0.0 for every healthy host, and
+# the surrogate's ledger-context embedding is zero-initialized, so widening
+# it leaves untrained and healthy-fabric predictions bit-identical.
+N_LEDGER_FEATURES = 5
 N_CONTENDED_FEATURES = N_FEATURES + N_LEDGER_FEATURES
 _C_NORM = 4.0  # rail-contender count normalizer
 
@@ -410,6 +414,11 @@ def featurize_contended_one(
         )
         for hid, _ in hosts
     }
+    hd = (
+        ledger.host_degrade
+        if ledger is not None and getattr(ledger, "health_active", False)
+        else None
+    )
     ctx_by_host = {}
     for hid, _ in hosts:
         jobs = jobs_by_host[hid]
@@ -422,7 +431,8 @@ def featurize_contended_one(
             1 for g in host.gpu_ids if g in busy and g not in sset
         ) / host.n_gpus if ledger is not None else 0.0
         demand = sum(len(g) for g in on_host.values())
-        ctx_by_host[hid] = (len(jobs) / _C_NORM, demand / 8.0, occ)
+        health = 1.0 - hd(hid) if hd is not None else 0.0
+        ctx_by_host[hid] = (len(jobs) / _C_NORM, demand / 8.0, occ, health)
         jobs_by_host[hid] = [(a, on_host[a.job_id]) for a in jobs]
     for i, (hid, gpus) in enumerate(hosts):
         feats[i, :N_FEATURES] = _host_token(
@@ -557,6 +567,15 @@ def _featurize_contended_group(
         ctx[..., 1] = c / _C_NORM
         ctx[..., 2] = demand / 8.0
         ctx[..., 3] = occ
+    # Health channel — filled in BOTH branches (a degraded-but-empty ledger
+    # must still expose its perturbed fabric, or the loop and vectorized
+    # paths would diverge).
+    if ledger is not None and getattr(ledger, "health_active", False):
+        degv = np.asarray(
+            [ledger.host_degrade(h.host_id) for h in cluster.hosts],
+            np.float64,
+        )
+        ctx[..., 4] = (1.0 - degv)[None, :]
     feats, mask = _pack_tokens(
         tokens, counts, max_tokens, N_CONTENDED_FEATURES, extra=ctx
     )

@@ -55,6 +55,7 @@ import numpy as np
 from repro.core import (
     baselines,
     defrag as defrag_mod,
+    faults as faults_mod,
     forensics,
     search,
     telemetry,
@@ -241,6 +242,21 @@ class SchedulerConfig:
     # replay is byte-identical at 0)
     journal_path: Optional[str] = None  # write-ahead ledger journal file;
     # journaling never changes placements (regression-pinned)
+    # -- ISSUE 10: failure domain (fault-free runs are byte-identical) ------
+    fault_schedule: Optional[object] = None  # faults.FaultSchedule (or any
+    # iterable of FaultEvent); None disables injection entirely — the event
+    # loop then never consults the fault heap and replays exactly as before
+    recovery: bool = True            # checkpoint-and-requeue affected jobs
+    # (False = measure the no-recovery counterfactual: victims stay placed
+    # on dead GPUs and their contended bandwidth grades as 0.0)
+    requeue_backoff: float = 0.5     # base re-admission retry delay; doubles
+    # per attempt (0.5, 1, 2, ...) up to max_requeue_retries, after which
+    # the job is abandoned (RecoveryOutcome.gave_up) instead of wedging the
+    # drain assertion forever on a permanently shrunk cluster
+    max_requeue_retries: int = 5
+    flap_migrate: bool = True        # nic_flap: price waiting out the flap
+    # against migrating off the host (expected-downtime x bandwidth gain
+    # vs the shared migration_cost charge)
 
     def __post_init__(self):
         if self.policy not in POLICIES:
@@ -258,6 +274,10 @@ class SchedulerConfig:
                 "concurrent admission is only defined for the fifo policy "
                 "(backfill/batched drain logic is inherently sequential)"
             )
+        if self.requeue_backoff <= 0:
+            raise ValueError("requeue_backoff must be > 0")
+        if self.max_requeue_retries < 0:
+            raise ValueError("max_requeue_retries must be >= 0")
         if self.defrag:
             # within one scheduler there is ONE migration price: redispatch
             # and defrag moves must never charge different costs per GPU
@@ -335,6 +355,28 @@ class AdmissionScheduler:
         # Tenant QoS accounting (live-job counts per tenant, job -> tenant)
         self._tenant_live: Dict[str, int] = {}
         self._job_tenant: Dict[str, str] = {}
+        # Failure domain (ISSUE 10): the fault heap merges with the
+        # departure heap in _release_until; with no schedule it stays empty
+        # and the loop degenerates to the pre-fault event loop exactly.
+        self.recoveries: List[faults_mod.RecoveryOutcome] = []
+        self.fault_log: List[Dict] = []  # one row per fault/recover event:
+        # aggregate live contended bw just before vs after the post-event
+        # drain (the bench's bandwidth-retention measurement)
+        self._injector: Optional[faults_mod.FaultInjector] = None
+        self._faults: List[Tuple[float, int, int, str, object]] = []
+        self._fault_seq = 0
+        # live departure bookkeeping: job -> (heap seq, end time); a fault
+        # requeue drops the entry so the stale heap tuple is skipped lazily
+        self._dep_live: Dict[str, Tuple[int, float]] = {}
+        # job -> (t_fault, kind, re-admission attempts) while in the
+        # recovery pipeline; popped by _grade when the job re-admits (MTTR)
+        self._disrupted: Dict[str, Tuple[float, str, int]] = {}
+        if self.config.fault_schedule is not None:
+            self._injector = faults_mod.FaultInjector(dispatcher.ledger)
+            for ev in self.config.fault_schedule:
+                self._push_fault_event(ev.t, "fault", ev)
+                if ev.t_recover is not None:
+                    self._push_fault_event(ev.t_recover, "recover", ev)
         # Opt-in concurrent fifo admission: eligible queue prefixes are
         # admitted as a group through the control plane (staged searches
         # overlap, commits CAS on the ledger version).  journal_path alone
@@ -398,23 +440,250 @@ class AdmissionScheduler:
             )
         return self.records
 
+    def aggregate_live_bandwidth(self) -> float:
+        """Sum of every live job's contention-degraded bandwidth under the
+        current ledger (health included) — the quantity the failure bench
+        tracks across a storm."""
+        ledger = self.dispatcher.ledger
+        return float(sum(
+            self.grading_cache.true_bandwidth(a.gpus, ledger=ledger)
+            for a in ledger.jobs()
+        ))
+
     # -- event handling -----------------------------------------------------
 
     def _release_until(self, horizon: float) -> None:
-        while self._departures and self._departures[0][0] <= horizon:
-            t_end, _, job_id = heapq.heappop(self._departures)
-            if self._cplane is not None:
-                self._cplane.release(job_id)  # keeps its tenant counts live
+        """Advance the clock to ``horizon``: departures and fault events
+        interleave in time order (a departure wins a tie — the job finished
+        at the instant the fault landed).  With no fault schedule the fault
+        heap is empty and this is exactly the pre-fault departure loop."""
+        while True:
+            if not self._departures and not self._faults:
+                return
+            t_dep = self._departures[0][0] if self._departures else math.inf
+            t_flt = self._faults[0][0] if self._faults else math.inf
+            if min(t_dep, t_flt) > horizon:
+                return
+            if t_dep <= t_flt:
+                self._pop_departure()
             else:
-                self.dispatcher.release(job_id)
-            tenant = self._job_tenant.pop(job_id, None)
-            if tenant is not None:
-                self._tenant_live[tenant] -= 1
-            self._drain(t_end)
-            if self.config.redispatch:
-                self._maybe_redispatch(t_end)
-            if self.config.defrag:
-                self._maybe_background_defrag(t_end)
+                self._pop_fault_event()
+
+    def _pop_departure(self) -> None:
+        t_end, seq, job_id = heapq.heappop(self._departures)
+        live = self._dep_live.get(job_id)
+        if live is None or live[0] != seq:
+            return  # stale: a fault requeued this job before it finished
+        del self._dep_live[job_id]
+        if self._cplane is not None:
+            self._cplane.release(job_id)  # keeps its tenant counts live
+        else:
+            self.dispatcher.release(job_id)
+        tenant = self._job_tenant.pop(job_id, None)
+        if tenant is not None:
+            self._tenant_live[tenant] -= 1
+        self._drain(t_end)
+        if self.config.redispatch:
+            self._maybe_redispatch(t_end)
+        if self.config.defrag:
+            self._maybe_background_defrag(t_end)
+
+    # -- failure domain: injection + recovery pipeline ------------------------
+
+    def _push_fault_event(self, t: float, op: str, payload) -> None:
+        # rank: recoveries before faults before retries at the same instant
+        # (capacity comes back before a co-timed fault takes more away)
+        rank = {"recover": 0, "fault": 1, "retry": 2}[op]
+        heapq.heappush(
+            self._faults, (t, rank, self._fault_seq, op, payload)
+        )
+        self._fault_seq += 1
+
+    def _pop_fault_event(self) -> None:
+        t, _, _, op, payload = heapq.heappop(self._faults)
+        if op == "fault":
+            self._on_fault(t, payload)
+        elif op == "recover":
+            self._on_recover(t, payload)
+        else:
+            self._on_retry(t, payload)
+
+    def _on_fault(self, t: float, ev) -> None:
+        """Apply one fault (journaled, version-bumping) and run the
+        recovery pipeline: victims are checkpoint-released and requeued at
+        the head of the queue; nic_flaps trigger the wait-vs-migrate
+        pricing; the post-event drain re-admits whatever fits (make-room
+        defrag fires per admission through the existing hook)."""
+        agg_before = self.aggregate_live_bandwidth()
+        affected = self._injector.affected_jobs(ev)
+        requeued: List[TraceJob] = []
+        with telemetry.span(
+            "sched.fault", kind=ev.kind, host=ev.host_id,
+            affected=len(affected),
+        ):
+            self._injector.apply(ev)
+            if self.config.recovery and affected:
+                for job_id in sorted(affected):
+                    job = self._release_disrupted(job_id, t, ev.kind)
+                    if job is not None:
+                        requeued.append(job)
+                # priority re-admission: victims go to the FRONT of the
+                # queue, preserving their relative (sorted) order
+                for job in reversed(requeued):
+                    self._enqueue_front(job)
+            if ev.kind == "nic_flap" and self.config.flap_migrate:
+                self._consider_flap_migration(t, ev)
+        self._drain(t)
+        for job in requeued:
+            self._schedule_retry(job.job_id, t)
+        self.fault_log.append({
+            "t": t, "op": "fault", "kind": ev.kind, "host": ev.host_id,
+            "affected": len(affected), "requeued": len(requeued),
+            "agg_bw_before": agg_before,
+            "agg_bw_after": self.aggregate_live_bandwidth(),
+        })
+
+    def _on_recover(self, t: float, ev) -> None:
+        agg_before = self.aggregate_live_bandwidth()
+        with telemetry.span("sched.recover", kind=ev.kind, host=ev.host_id):
+            self._injector.recover(ev)
+        self._drain(t)  # restored capacity may admit waiting victims
+        if self.config.redispatch:
+            self._maybe_redispatch(t)  # e.g. move back onto healed rails
+        self.fault_log.append({
+            "t": t, "op": "recover", "kind": ev.kind, "host": ev.host_id,
+            "affected": 0, "requeued": 0,
+            "agg_bw_before": agg_before,
+            "agg_bw_after": self.aggregate_live_bandwidth(),
+        })
+
+    def _release_disrupted(
+        self, job_id: str, t: float, kind: str
+    ) -> Optional[TraceJob]:
+        """Checkpoint-release one fault victim; returns the requeue stub
+        (remaining duration, original tenant) or None when the job is not
+        live anymore (already claimed by an overlapping fault)."""
+        live = self._dep_live.pop(job_id, None)
+        if live is None:
+            return None
+        _, t_end = live
+        remaining = max(t_end - t, 1e-3)
+        alloc = self.dispatcher.ledger.allocation(job_id)
+        k = alloc.k
+        if self._cplane is not None:
+            self._cplane.release(job_id)
+        else:
+            self.dispatcher.release(job_id)
+        tenant = self._job_tenant.pop(job_id, "")
+        if tenant in self._tenant_live:
+            self._tenant_live[tenant] -= 1
+        self._disrupted[job_id] = (t, kind, 0)
+        telemetry.event(
+            "sched.requeue", job_id=job_id, kind=kind, k=k,
+            remaining=remaining,
+        )
+        return TraceJob(job_id, t, remaining, k, tenant)
+
+    def _enqueue_front(self, job: TraceJob) -> None:
+        batch = 0
+        if self.config.policy == "batched":
+            # a singleton batch of its own at the head: the victim drains
+            # first and a non-fitting victim blocks later batches (priority)
+            self._batch_id += 1
+            batch = self._batch_id
+        self._waiting.appendleft(_QueueEntry(job, batch=batch))
+
+    def _schedule_retry(self, job_id: str, t: float) -> None:
+        info = self._disrupted.get(job_id)
+        if info is None:
+            return  # re-admitted during the fault drain: no retry needed
+        attempts = info[2]
+        if attempts >= self.config.max_requeue_retries:
+            self._give_up(job_id, t)
+            return
+        delay = self.config.requeue_backoff * (2.0 ** attempts)
+        self._push_fault_event(t + delay, "retry", job_id)
+
+    def _on_retry(self, t: float, job_id: str) -> None:
+        info = self._disrupted.get(job_id)
+        if info is None:
+            return  # re-admitted before this backoff fired
+        t_fault, kind, attempts = info
+        self._disrupted[job_id] = (t_fault, kind, attempts + 1)
+        with telemetry.span(
+            "sched.requeue_retry", job_id=job_id, attempt=attempts + 1,
+        ):
+            self._drain(t)
+        self._schedule_retry(job_id, t)
+
+    def _give_up(self, job_id: str, t: float) -> None:
+        """Bounded backoff exhausted: abandon the requeue (the victim's
+        checkpoint outlives this trace) instead of wedging the drain."""
+        t_fault, kind, attempts = self._disrupted.pop(job_id)
+        for entry in self._waiting:
+            if entry.job.job_id == job_id:
+                self._waiting.remove(entry)
+                break
+        self.recoveries.append(faults_mod.RecoveryOutcome(
+            job_id, t_fault, t, attempts, kind, gave_up=True,
+        ))
+        telemetry.event("sched.requeue_gave_up", job_id=job_id, kind=kind)
+
+    def _consider_flap_migration(self, t: float, ev) -> None:
+        """nic_flap wait-out-vs-migrate: a live cross-host job riding the
+        flapped host's rails migrates only when the bandwidth recovered
+        over the flap's expected remaining downtime exceeds the shared
+        migration-cost charge — otherwise waiting out the flap is cheaper.
+        At most one move per flap (the first mover invalidates the shared
+        pre-move baseline)."""
+        ledger = self.dispatcher.ledger
+        downtime = faults_mod.expected_downtime(ev, t)
+        movers = sorted(
+            (a for a in ledger.jobs()
+             if a.cross_host and ev.host_id in a.host_ids),
+            key=lambda a: a.job_id,
+        )
+        if not movers or downtime <= 0.0:
+            return
+        before = {
+            a.job_id: self.grading_cache.true_bandwidth(a.gpus, ledger=ledger)
+            for a in ledger.jobs()
+        }
+        frag_before = defrag_mod.fragmentation_metrics(self.cluster, ledger)
+        for alloc in movers:
+            tenant = self._job_tenant.get(alloc.job_id, "")
+            with forensics.decision(
+                alloc.job_id, tenant=tenant, k=alloc.k,
+                policy=self.config.policy, path="recovery",
+            ) as df:
+                # no min_self_gain: under downtime pricing a move can pay
+                # even when the instantaneous gain is below the cost
+                mv = defrag_mod.evaluate_move(
+                    self.grading_cache, ledger, alloc,
+                    lambda led, avail, k: self.dispatcher.dispatch(
+                        avail, k, rng=self.rng
+                    ),
+                    self.config.migration_cost_per_gpu,
+                    before=before, frag_before=frag_before,
+                )
+                if mv is None or (mv.new_bw - mv.old_bw) * downtime <= mv.cost:
+                    continue
+                ledger.migrate(alloc.job_id, mv.new_gpus)
+                if df is not None:
+                    df.commit(mv.new_gpus, mv.new_bw,
+                              committed_version=ledger.version)
+            telemetry.event(
+                "sched.flap_migrate", job_id=alloc.job_id,
+                gain=mv.new_bw - mv.old_bw, cost=mv.cost, downtime=downtime,
+            )
+            self.migrations.append(MigrationEvent(
+                t, alloc.job_id, mv.old_gpus, mv.new_gpus,
+                mv.old_bw, mv.new_bw, mv.cost, kind="flap-migrate",
+            ))
+            rec = self._rec_by_job.get(alloc.job_id)
+            if rec is not None:
+                rec.migrations += 1
+            return
 
     def _on_arrival(self, job: TraceJob) -> None:
         ledger = self.dispatcher.ledger
@@ -569,7 +838,10 @@ class AdmissionScheduler:
         free = ledger.n_free()
         if head_k <= free:
             return t, free - head_k
-        for t_end, _, job_id in sorted(self._departures):
+        for t_end, seq, job_id in sorted(self._departures):
+            live = self._dep_live.get(job_id)
+            if live is None or live[0] != seq:
+                continue  # stale heap entry: the job was fault-requeued
             free += ledger.allocation(job_id).k
             if free >= head_k:
                 return t_end, free - head_k
@@ -882,7 +1154,19 @@ class AdmissionScheduler:
         heapq.heappush(
             self._departures, (t + job.duration, self._seq, job.job_id)
         )
+        self._dep_live[job.job_id] = (self._seq, t + job.duration)
         self._seq += 1
+        # this admission closes a recovery: seal MTTR for the pipeline
+        info = self._disrupted.pop(job.job_id, None)
+        if info is not None:
+            t_fault, kind, attempts = info
+            self.recoveries.append(faults_mod.RecoveryOutcome(
+                job.job_id, t_fault, t, attempts + 1, kind,
+            ))
+            telemetry.event(
+                "sched.recovered", job_id=job.job_id, kind=kind,
+                mttr=t - t_fault, attempts=attempts + 1,
+            )
 
     # -- elastic re-dispatch on release --------------------------------------
 

@@ -859,6 +859,53 @@ def absorb_drift(reg: MetricsRegistry, monitor: "DriftMonitor", **labels):
         per_tenant.set(monitor.mape(tenant=tenant), tenant=tenant, **labels)
 
 
+def absorb_recovery(reg: MetricsRegistry, scheduler, **labels) -> None:
+    """Absorb the failure-domain outcome of a scheduler run: injected
+    fault counts per kind, MTTR over completed recoveries, abandoned
+    requeues, and the bandwidth retained across the storm (aggregate live
+    contended bw after the last fault's drain / before the first fault).
+    No-op when the run carried no fault schedule."""
+    fault_log = getattr(scheduler, "fault_log", None) or []
+    recoveries = list(getattr(scheduler, "recoveries", ()) or [])
+    if not fault_log and not recoveries:
+        return
+    names = tuple(sorted(labels))
+    faults_rows = [r for r in fault_log if r["op"] == "fault"]
+    cnt = reg.counter(
+        "faults_injected_total", "fault events applied", names + ("kind",)
+    )
+    for kind in sorted({r["kind"] for r in faults_rows}):
+        cnt.set(sum(1 for r in faults_rows if r["kind"] == kind),
+                kind=kind, **labels)
+    done = [r for r in recoveries if not r.gave_up]
+    reg.counter("recoveries_total", "victims re-admitted", names).set(
+        len(done), **labels
+    )
+    reg.counter(
+        "recoveries_gave_up_total", "requeues abandoned after max retries",
+        names,
+    ).set(len(recoveries) - len(done), **labels)
+    if done:
+        reg.gauge(
+            "recovery_mttr_mean", "mean fault-to-readmission time", names
+        ).set(sum(r.mttr for r in done) / len(done), **labels)
+        reg.gauge(
+            "recovery_mttr_max", "worst fault-to-readmission time", names
+        ).set(float(max(r.mttr for r in done)), **labels)
+        reg.gauge(
+            "recovery_attempts_mean", "mean re-admission attempts", names
+        ).set(sum(r.attempts for r in done) / len(done), **labels)
+    if faults_rows:
+        pre = faults_rows[0]["agg_bw_before"]
+        post = faults_rows[-1]["agg_bw_after"]
+        if pre > 0:
+            reg.gauge(
+                "recovered_bandwidth_frac",
+                "aggregate live contended bw retained across the storm",
+                names,
+            ).set(post / pre, **labels)
+
+
 def collect_scheduler_metrics(
     scheduler, registry: Optional[MetricsRegistry] = None
 ) -> MetricsRegistry:
@@ -884,11 +931,12 @@ def collect_scheduler_metrics(
     reg.counter(
         "migrations_total", "committed live-job moves", ("dispatcher", "kind")
     )
-    for kind in ("redispatch", "defrag", "make-room"):
+    for kind in ("redispatch", "defrag", "make-room", "flap-migrate"):
         reg.get("migrations_total").set(
             sum(1 for m in scheduler.migrations if m.kind == kind),
             dispatcher=name, kind=kind,
         )
+    absorb_recovery(reg, scheduler, dispatcher=name)
     cplane = getattr(scheduler, "_cplane", None)
     if cplane is not None:
         absorb_controlplane_stats(reg, cplane.stats, dispatcher=name)

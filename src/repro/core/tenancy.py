@@ -28,6 +28,18 @@ from repro.core.cluster import Cluster
 
 _UID_LOCK = threading.Lock()  # guards the class-level uid counter
 
+# Health lattice (see repro.core.faults): GPUs in either of these states
+# are unplaceable — excluded from ``available()`` and refused by
+# ``admit``/``migrate`` by construction.
+_UNPLACEABLE = frozenset(("quarantined", "dead"))
+
+# Fault kinds the ledger itself understands.  The first four mirror
+# faults.FAULT_KINDS; ``quarantine`` is the operator/fencing action that
+# removes a GPU from placement without declaring it dead.
+_LEDGER_FAULT_KINDS = (
+    "gpu_down", "host_down", "nic_flap", "link_degrade", "quarantine",
+)
+
 
 class CapacityError(ValueError):
     """An admission cannot be satisfied right now: not enough free GPUs.
@@ -102,6 +114,10 @@ class ContentionSnapshot:
     counts: Dict[int, int]
     demands: Dict[int, Tuple[int, ...]] = dataclasses.field(default_factory=dict)
     frag: Optional[object] = None  # defrag.FragmentationMetrics (lazy import)
+    # host id -> rail degrade factor (absent == 1.0, healthy); mirrors the
+    # source ledger's health view so grading against the frozen snapshot
+    # sees the same degraded fabric the live ledger does.
+    degrade: Dict[int, float] = dataclasses.field(default_factory=dict)
 
     def rail_contenders(self, host_id: int, against: Sequence[int] = ()) -> int:
         return self.counts.get(host_id, 0)
@@ -110,6 +126,18 @@ class ContentionSnapshot:
         self, host_id: int, against: Sequence[int] = ()
     ) -> Tuple[int, ...]:
         return self.demands.get(host_id, ())
+
+    @property
+    def health_active(self) -> bool:
+        return bool(self.degrade)
+
+    def host_degrade(self, host_id: int) -> float:
+        return self.degrade.get(host_id, 1.0)
+
+    def gpu_health(self, gpu_id: int) -> str:
+        # Snapshots only ever see candidates drawn from ``available()``,
+        # which already excludes quarantined/dead GPUs.
+        return "healthy"
 
 
 class JobLedger:
@@ -152,6 +180,12 @@ class JobLedger:
             h.host_id: set() for h in cluster.hosts
         }
         self._version = 0
+        # Sparse health state (absent == healthy / 1.0).  Mutated only by
+        # apply_fault/apply_recover, under the same version counter and
+        # write-ahead journal as occupancy — a fault IS an occupancy-
+        # relevant event (caches keyed on version must go stale).
+        self._gpu_health: Dict[int, str] = {}
+        self._host_degrade: Dict[int, float] = {}
         # Reentrant: admit_if/migrate call admit/release while holding it,
         # and compound read-harvest sequences (report_bandwidth) nest too.
         self.lock = threading.RLock()
@@ -205,6 +239,9 @@ class JobLedger:
                     raise ValueError(
                         f"GPU {g} is busy (held by job {self._owner[g]!r})"
                     )
+                state = self._gpu_health.get(g)
+                if state in _UNPLACEABLE:
+                    raise ValueError(f"GPU {g} is {state} (unplaceable)")
             if self.journal is not None:  # write-ahead: validated, not applied
                 self.last_journal_seq = self.journal.record(
                     "admit", job_id=job_id, gpus=list(subset), tenant=tenant
@@ -276,6 +313,9 @@ class JobLedger:
                     raise ValueError(
                         f"GPU {g} is busy (held by job {owner!r})"
                     )
+                state = self._gpu_health.get(g)
+                if state in _UNPLACEABLE:
+                    raise ValueError(f"GPU {g} is {state} (unplaceable)")
             if self.journal is not None:
                 self.last_journal_seq = self.journal.record(
                     "migrate", job_id=job_id, gpus=list(subset),
@@ -301,7 +341,129 @@ class JobLedger:
                 hid: set(ids) for hid, ids in self._host_jobs.items()
             }
             other._version = self._version
+            other._gpu_health = dict(self._gpu_health)
+            other._host_degrade = dict(self._host_degrade)
             return other
+
+    # -- health / faults -----------------------------------------------------
+
+    @property
+    def health_active(self) -> bool:
+        """True iff any GPU or host is currently non-healthy.  Every
+        consumer gates its health-conditioned path on this, so a ledger
+        that has never seen a fault stays byte-identical to pre-fault
+        behavior."""
+        return bool(self._gpu_health) or bool(self._host_degrade)
+
+    def gpu_health(self, gpu_id: int) -> str:
+        """Health-lattice state of one GPU (absent from the sparse map ==
+        ``healthy``)."""
+        return self._gpu_health.get(gpu_id, "healthy")
+
+    def host_degrade(self, host_id: int) -> float:
+        """Multiplicative rail/NIC degrade factor on one host (1.0 ==
+        healthy fabric)."""
+        return self._host_degrade.get(host_id, 1.0)
+
+    def placeable(self, gpu_id: int) -> bool:
+        """False for quarantined/dead GPUs — the admission refusal
+        predicate."""
+        return self._gpu_health.get(gpu_id) not in _UNPLACEABLE
+
+    def health_state(self) -> Tuple[Tuple[Tuple[int, str], ...],
+                                    Tuple[Tuple[int, float], ...]]:
+        """Canonical, comparable snapshot of the full health view —
+        ``(sorted gpu states, sorted host degrade factors)``.  Two ledgers
+        with equal ``health_state()`` + equal allocations + equal version
+        are bit-identical for every consumer in the stack (the journal-
+        replay acceptance check)."""
+        return (
+            tuple(sorted(self._gpu_health.items())),
+            tuple(sorted(self._host_degrade.items())),
+        )
+
+    def _mark_degraded(self, host_id: int) -> None:
+        for g in self.cluster.hosts[host_id].gpu_ids:
+            if g not in self._gpu_health:  # only lift healthy -> degraded
+                self._gpu_health[g] = "degraded"
+
+    def apply_fault(
+        self,
+        kind: str,
+        gpus: Sequence[int] = (),
+        host_id: Optional[int] = None,
+        factor: float = 1.0,
+    ) -> None:
+        """Apply one typed fault (see :mod:`repro.core.faults`): journaled
+        write-ahead as a ``fault`` event, version bumped by 1 — caches,
+        snapshots and in-flight CAS commits staged against the pre-fault
+        version all go stale, exactly as an admission would make them."""
+        with self.lock:
+            if kind not in _LEDGER_FAULT_KINDS:
+                raise ValueError(f"unknown fault kind {kind!r}")
+            subset = tuple(sorted(int(g) for g in gpus))
+            for g in subset:
+                if g < 0 or g >= self.cluster.n_gpus:
+                    raise InvalidPlacementError(f"GPU id {g} outside cluster")
+            if kind in ("nic_flap", "link_degrade", "host_down") and (
+                host_id is None
+            ):
+                raise ValueError(f"{kind} requires host_id")
+            if self.journal is not None:
+                self.last_journal_seq = self.journal.record(
+                    "fault", job_id="", kind=kind,
+                    gpus=list(subset) if subset else None,
+                    host=host_id, factor=factor if factor != 1.0 else None,
+                )
+            if kind in ("gpu_down", "host_down"):
+                targets = subset or (
+                    tuple(self.cluster.hosts[host_id].gpu_ids)
+                    if kind == "host_down" else ()
+                )
+                for g in targets:
+                    self._gpu_health[g] = "dead"
+            elif kind == "quarantine":
+                for g in subset:
+                    if self._gpu_health.get(g) != "dead":
+                        self._gpu_health[g] = "quarantined"
+            else:  # nic_flap / link_degrade
+                self._host_degrade[host_id] = float(factor)
+                self._mark_degraded(host_id)
+            self._version += 1
+
+    def apply_recover(
+        self,
+        kind: str,
+        gpus: Sequence[int] = (),
+        host_id: Optional[int] = None,
+    ) -> None:
+        """Undo one fault (journaled ``recover`` event, version +1).
+
+        Recovery is state-popping, not state-restoring: a GPU whose host
+        is still degraded comes back ``degraded``, not ``healthy``, and a
+        host recovery leaves dead/quarantined GPUs alone.  Deterministic
+        given the event order, which is all journal replay needs."""
+        with self.lock:
+            if kind not in _LEDGER_FAULT_KINDS:
+                raise ValueError(f"unknown fault kind {kind!r}")
+            subset = tuple(sorted(int(g) for g in gpus))
+            if self.journal is not None:
+                self.last_journal_seq = self.journal.record(
+                    "recover", job_id="", kind=kind,
+                    gpus=list(subset) if subset else None, host=host_id,
+                )
+            if kind in ("gpu_down", "host_down", "quarantine"):
+                for g in subset:
+                    self._gpu_health.pop(g, None)
+                    hid = self.cluster.gpu_host[g]
+                    if self._host_degrade.get(hid, 1.0) != 1.0:
+                        self._gpu_health[g] = "degraded"
+            else:  # nic_flap / link_degrade
+                self._host_degrade.pop(host_id, None)
+                for g in self.cluster.hosts[host_id].gpu_ids:
+                    if self._gpu_health.get(g) == "degraded":
+                        del self._gpu_health[g]
+            self._version += 1
 
     # -- queries ------------------------------------------------------------
 
@@ -328,12 +490,28 @@ class JobLedger:
         return set(self._owner)
 
     def available(self) -> List[int]:
-        """Sorted global ids of all GPUs not held by any live job."""
-        return [g for g in range(self.cluster.n_gpus) if g not in self._owner]
+        """Sorted global ids of all *placeable* GPUs not held by any live
+        job.  Quarantined/dead GPUs are excluded — unplaceable by
+        construction; the sparse-health fast path keeps the no-fault case
+        byte-identical and allocation-free of extra checks."""
+        if not self._gpu_health:
+            return [
+                g for g in range(self.cluster.n_gpus) if g not in self._owner
+            ]
+        return [
+            g for g in range(self.cluster.n_gpus)
+            if g not in self._owner
+            and self._gpu_health.get(g) not in _UNPLACEABLE
+        ]
 
     def n_free(self) -> int:
-        """Number of free GPUs — O(1), for scheduler capacity checks."""
-        return self.cluster.n_gpus - len(self._owner)
+        """Number of free *placeable* GPUs — O(faulted GPUs), for scheduler
+        capacity checks."""
+        n = self.cluster.n_gpus - len(self._owner)
+        for g, state in self._gpu_health.items():
+            if state in _UNPLACEABLE and g not in self._owner:
+                n -= 1
+        return n
 
     def occupancy(self, host_id: int) -> int:
         """Number of busy GPUs on one host."""
@@ -421,6 +599,7 @@ class JobLedger:
                 for hid, jobs in cross.items()
             },
             frag=self.fragmentation(),
+            degrade=dict(self._host_degrade),
         )
 
     def describe(self) -> str:

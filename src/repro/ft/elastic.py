@@ -52,6 +52,12 @@ class StragglerMonitor:
 
     def observe(self, step_times: Dict[int, float]) -> List[int]:
         """step_times: rank -> seconds.  Returns ranks flagged this round."""
+        # prune strikes for ranks no longer reporting (failed, descheduled,
+        # or replaced): a stale strike count must not carry over to a rank
+        # id that later rejoins with a fresh device
+        for rank in list(self._strikes):
+            if rank not in step_times:
+                del self._strikes[rank]
         med = float(np.median(list(step_times.values())))
         flagged = []
         for rank, t in step_times.items():
@@ -109,7 +115,15 @@ class ElasticCoordinator:
         # elastic scale-down: keep request a multiple of the host size when
         # possible so mesh factorizations stay clean
         k = min(self.request_size, len(avail))
-        host_n = self.cluster.hosts[0].n_gpus
+        # round to the SURVIVING pool's dominant host size, not hosts[0]'s:
+        # on a heterogeneous cluster (or when host 0 itself died) the old
+        # ``hosts[0].n_gpus`` rounding produced request sizes no surviving
+        # host shape can factorize cleanly
+        by_size: Dict[int, int] = {}
+        for g in avail:
+            n = self.cluster.hosts[self.cluster.gpu_host[g]].n_gpus
+            by_size[n] = by_size.get(n, 0) + 1
+        host_n = max(by_size, key=lambda n: (by_size[n], n))
         if k > host_n:
             k -= k % host_n
         if k == 0:
@@ -131,9 +145,13 @@ class ElasticCoordinator:
         if not self.current:
             raise RuntimeError("no current allocation; dispatch first")
         avail = [g for g in self.cluster.all_gpus() if g not in self.unavailable]
-        cur_bw = float(
-            np.asarray(self.dispatcher.predictor.predict([self.current]))[0]
-        )
+        # grade the incumbent with the same lens the search scores the
+        # challenger: the dispatcher's ledger-aware contended predictor when
+        # one is attached (the old isolated-predictor baseline overstated
+        # cur_bw under co-tenancy, vetoing moves whose real gain paid)
+        wrapper = getattr(self.dispatcher, "contention_predictor", None)
+        scorer = wrapper if wrapper is not None else self.dispatcher.predictor
+        cur_bw = float(np.asarray(scorer.predict([self.current]))[0])
         sub = self.dispatcher.dispatch(avail, len(self.current))
         new_bw = self.dispatcher.last_result.predicted_bw
         gain = net_migration_gain(

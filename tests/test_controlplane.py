@@ -121,7 +121,7 @@ def test_journal_line_format_roundtrip():
         (2, "migrate", "b", (7,)),
     ]
     for op in JOURNAL_OPS:
-        assert op in ("admit", "release", "migrate")
+        assert op in ("admit", "release", "migrate", "fault", "recover")
 
 
 def test_scan_rejects_bad_crc_seq_gap_and_unknown_op():
